@@ -1,0 +1,243 @@
+"""One benchmark per paper table/figure (Figs. 3, 5, 6, 8, 9, 10, 11 +
+Table 1). Each ``figN()`` returns CSV rows (name, us_per_call, derived).
+
+Methodology (EXPERIMENTS.md §Benchmarks): no UPMEM hardware exists here, so
+each figure combines MEASURED algorithmic statistics (trace skew, realized
+per-bank load vectors from the real partitioners, mined cache hit rates) with
+the paper-calibrated analytic hardware model (core/hwmodel.py). Rows marked
+``measured-cpu`` are real wall-times of the jitted JAX lookup paths.
+
+Paper setup mirrored throughout: batch 64, 8 tables x 32-dim, 256 DPUs
+(=> 32 banks/table; §3.1 layout row_groups x col_groups with C=32).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BENCH_ITEMS, plan_shares, realized_shares,
+                               time_fn, workload_stats)
+from repro.core.hwmodel import (UPMEM, cpu_lookup_time,
+                                embedding_stage_latency, system_inference_time,
+                                updlrm_layout)
+from repro.data.synthetic import WORKLOADS, zipf_popularity
+
+Row = tuple[str, float, str]
+
+BATCH = 64
+N_TABLES = 8
+DIM = 32
+BANKS_PER_TABLE = 256 // N_TABLES
+
+_STATS_CACHE: dict[str, dict] = {}
+_SHARES_CACHE: dict[tuple, tuple] = {}
+
+
+def _stats(key: str) -> dict:
+    if key not in _STATS_CACHE:
+        _STATS_CACHE[key] = workload_stats(key)
+    return _STATS_CACHE[key]
+
+
+def _shares(key: str, partitioner: str, n_bins: int):
+    ck = (key, partitioner, n_bins)
+    if ck not in _SHARES_CACHE:
+        _SHARES_CACHE[ck] = plan_shares(_stats(key), partitioner, n_bins)
+    return _SHARES_CACHE[ck][0]
+
+
+def _stage(key: str, partitioner: str, n_c: int, with_cache: bool):
+    st = _stats(key)
+    p = st["profile"]
+    row_groups, _ = updlrm_layout(BANKS_PER_TABLE, DIM, n_c)
+    if with_cache:
+        shares = realized_shares(st, partitioner, row_groups, with_cache=True)
+    else:
+        shares = _shares(key, partitioner, row_groups)
+    return embedding_stage_latency(
+        batch_size=BATCH, avg_reduction=p.avg_reduction, n_c=n_c,
+        per_bank_lookup_share=shares,
+        cache_hit_rate=st["hit_rate"] if with_cache else 0.0)
+
+
+def _mlp_flops() -> float:
+    # paper-setup DLRM: bottom 13-512-256-32, top over 8 pooled tables
+    inter = (N_TABLES + 1) * N_TABLES // 2 + DIM
+    return 2.0 * (13 * 512 + 512 * 256 + 256 * 32
+                  + inter * 512 + 512 * 256 + 256 * 1)
+
+
+# ---------------------------------------------------------------------------
+
+def fig3_mram_latency() -> list[Row]:
+    """Fig. 3: MRAM read latency vs access size (8B..2048B)."""
+    rows = []
+    for nbytes in (8, 16, 32, 64, 128, 256, 512, 1024, 2048):
+        t = UPMEM.mram_read_latency(nbytes)
+        rows.append((f"fig3/mram_read_{nbytes}B", t * 1e6,
+                     f"plateau<=32B={nbytes <= 32}"))
+    return rows
+
+
+def fig5_access_skew() -> list[Row]:
+    """Fig. 5: accesses per row block (8 id-ordered blocks). Real catalogs
+    assign ids roughly chronologically => popularity correlates with id; the
+    paper reports up to 340x hottest/coldest block."""
+    rows = []
+    for key in ("read", "meta1", "clo"):
+        prof = WORKLOADS[key]
+        p = np.arange(1, BENCH_ITEMS + 1, dtype=np.float64) ** (-prof.zipf_a)
+        blocks = np.array_split(p / p.sum(), 8)
+        counts = np.array([b.sum() for b in blocks])
+        rows.append((f"fig5/{key}_block_skew", 0.0,
+                     f"hot/cold={counts.max() / counts.min():.0f}x"))
+    return rows
+
+
+def fig6_partition_balance() -> list[Row]:
+    """Fig. 6: per-partition REALIZED access balance (8 row bins): NU w/o
+    cache is balanced; caching re-skews NU; Algorithm 1 (CA) re-balances."""
+    st = _stats("read")
+    rows = []
+    for name, wc in (("U", False), ("NU", False), ("NUC", True),
+                     ("CA", True)):
+        sh = realized_shares(st, name, 8, with_cache=wc)
+        tag = f"{name}{'_cache' if wc else ''}"
+        rows.append((f"fig6/{tag}_imbalance", 0.0,
+                     f"max/mean={sh.max() * len(sh):.2f}"))
+    rows.append(("fig6/cache_hit_rate", 0.0, f"hit={st['hit_rate']:.2%}"))
+    return rows
+
+
+def fig8_inference_speedup() -> list[Row]:
+    """Fig. 8: inference speedup of Hybrid/FAE/UpDLRM over DLRM-CPU."""
+    rows = []
+    row_groups, _ = updlrm_layout(BANKS_PER_TABLE, DIM, 8)
+    for key in WORKLOADS:
+        st = _stats(key)
+        p = st["profile"]
+        kw = dict(batch_size=BATCH, avg_reduction=p.avg_reduction,
+                  n_tables=N_TABLES, dim=DIM, mlp_flops=_mlp_flops(),
+                  n_banks=256)
+        t_cpu = system_inference_time("cpu", **kw)
+        t_hyb = system_inference_time("hybrid", **kw)
+        t_fae = system_inference_time(
+            "fae", fae_hot_fraction=min(0.9, 0.5 + st["hit_rate"]), **kw)
+        t_up = system_inference_time(
+            "updlrm", per_bank_lookup_share=_shares(key, "CA", row_groups),
+            cache_hit_rate=st["hit_rate"], n_c=8, **kw)
+        rows.append((f"fig8/{key}_updlrm", t_up * 1e6,
+                     f"speedup_vs_cpu={t_cpu / t_up:.2f}x"
+                     f" vs_hybrid={t_hyb / t_up:.2f}x"
+                     f" vs_fae={t_fae / t_up:.2f}x"))
+    return rows
+
+
+def fig9_partition_speedup() -> list[Row]:
+    """Fig. 9: embedding-layer speedup of U/NU/CA over the CPU embedding
+    layer, N_c in {2,4,8}."""
+    rows = []
+    for key in ("clo", "meta1", "read"):
+        p = WORKLOADS[key]
+        t_cpu = cpu_lookup_time(BATCH * p.avg_reduction * N_TABLES, DIM * 4)
+        for name in ("U", "NU", "CA"):
+            for n_c in (2, 4, 8):
+                t = _stage(key, name, n_c, with_cache=(name == "CA")).total
+                rows.append((f"fig9/{key}_{name}_Nc{n_c}", t * 1e6,
+                             f"speedup={t_cpu / t:.2f}x"))
+    return rows
+
+
+def fig10_latency_breakdown() -> list[Row]:
+    """Fig. 10: stage 1/2/3 breakdown (GoodReads), per partitioner x N_c."""
+    rows = []
+    for name in ("U", "NU", "CA"):
+        for n_c in (2, 4, 8):
+            lat = _stage("read", name, n_c, with_cache=(name == "CA"))
+            tot = lat.total
+            rows.append((
+                f"fig10/{name}_Nc{n_c}", tot * 1e6,
+                f"c_comm={lat.c_comm / tot:.0%}"
+                f" lookup={lat.lookup / tot:.0%}"
+                f" d_comm={lat.d_comm / tot:.0%}"))
+    return rows
+
+
+def fig11_sensitivity() -> list[Row]:
+    """Fig. 11: DPU lookup time vs avg reduction x lookup width (balanced
+    synthetic datasets, as §4.4)."""
+    rows = []
+    for n_c in (2, 4, 8, 16, 32):
+        row_groups, _ = updlrm_layout(BANKS_PER_TABLE, DIM, n_c)
+        for red in (50, 100, 200, 300):
+            lat = embedding_stage_latency(
+                batch_size=BATCH, avg_reduction=red, n_c=n_c,
+                n_banks=row_groups)
+            rows.append((f"fig11/Nc{n_c}_red{red}", lat.lookup * 1e6,
+                         f"bytes={n_c * 4}"))
+    return rows
+
+
+def table1_workloads() -> list[Row]:
+    return [(f"table1/{k}", 0.0,
+             f"avg_red={w.avg_reduction} items={w.n_items} tier={w.tier}")
+            for k, w in WORKLOADS.items()]
+
+
+def tile_solver() -> list[Row]:
+    """§3.1 solver outputs for the paper's tables (2.36M x 32, 32 banks)."""
+    from repro.core.hwmodel import solve_uniform_tile
+    rows = []
+    for key in ("clo", "read"):
+        p = WORKLOADS[key]
+        n_r, n_c = solve_uniform_tile(
+            rows=p.n_items, cols=32, n_banks=BANKS_PER_TABLE,
+            batch_size=BATCH, avg_reduction=p.avg_reduction)
+        rows.append((f"tile_solver/{key}", 0.0, f"N_r={n_r} N_c={n_c}"))
+    return rows
+
+
+def measured_lookup_paths() -> list[Row]:
+    """Real wall-times on this host: plain vs banked vs cache-rewritten
+    lookup (jitted, CPU). Verifies the ALGORITHMIC claim that cache rewriting
+    cuts lookup work — hardware-independent."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.cache_runtime import build_cache_table, rewrite_bags
+    from repro.core.embedding import banked_embedding_bag, pack_table
+    from repro.sparse.ops import embedding_bag_fixed
+
+    st = _stats("read")
+    rng = np.random.default_rng(0)
+    V, D, B, L = BENCH_ITEMS, DIM, BATCH, 256
+    table = rng.standard_normal((V, D)).astype(np.float32)
+    bags = st["trace"][:B]
+    idx = np.full((B, L), -1, np.int32)
+    for i, bag in enumerate(bags):
+        b = bag[:L]
+        idx[i, :len(b)] = b
+    idx = jnp.asarray(idx)
+
+    plain = jax.jit(lambda t, i: embedding_bag_fixed(t, i))
+    t_plain = time_fn(plain, jnp.asarray(table), idx)
+
+    _, plan = plan_shares(st, "NU", 8)
+    bt = pack_table(table, plan)
+    banked = jax.jit(lambda t, i: banked_embedding_bag(t, i, None))
+    t_banked = time_fn(banked, bt, idx)
+
+    cp = st["cache_plan"]
+    ctab = jnp.asarray(build_cache_table(table, cp))
+    ci, ri = rewrite_bags(bags, cp, max_cache_per_bag=16,
+                          max_residual_per_bag=L)
+    cached = jax.jit(
+        lambda t, c, a, b: embedding_bag_fixed(c, a)
+        + embedding_bag_fixed(t, b))
+    t_cached = time_fn(cached, jnp.asarray(table), ctab, jnp.asarray(ci),
+                       jnp.asarray(ri))
+    return [
+        ("measured-cpu/plain_bag", t_plain, "baseline"),
+        ("measured-cpu/banked_bag", t_banked,
+         f"vs_plain={t_plain / t_banked:.2f}x"),
+        ("measured-cpu/cache_rewritten_bag", t_cached,
+         f"vs_plain={t_plain / t_cached:.2f}x"),
+    ]

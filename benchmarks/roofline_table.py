@@ -1,0 +1,73 @@
+"""Roofline table: read experiments/dryrun/*.json -> per-cell terms +
+dominant bottleneck + useful-FLOPs ratio (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun",
+                 mesh: str = "pod_16x16") -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, f"{mesh}__*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | step | compute_ms | memory_ms | collective_ms | "
+           "dominant | peak_GiB | useful_flops |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        t = r["roofline"]
+        uf = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['step_kind']} "
+            f"| {t['compute_s']*1e3:.3f} | {t['memory_s']*1e3:.3f} "
+            f"| {t['collective_s']*1e3:.3f} | {t['dominant'].replace('_s','')} "
+            f"| {r['memory']['peak_bytes']/2**30:.2f} "
+            f"| {uf:.2f} |" if uf is not None else
+            f"| {r['arch']} | {r['shape']} | {r['step_kind']} "
+            f"| {t['compute_s']*1e3:.3f} | {t['memory_s']*1e3:.3f} "
+            f"| {t['collective_s']*1e3:.3f} | {t['dominant'].replace('_s','')} "
+            f"| {r['memory']['peak_bytes']/2**30:.2f} | n/a |")
+    return "\n".join(rows)
+
+
+def interesting_cells(recs: list[dict]) -> dict[str, dict]:
+    """The three hillclimb picks: worst useful-flops fraction among
+    compute-relevant cells, most collective-bound, most paper-representative."""
+    by_coll = max(recs, key=lambda r: r["roofline"]["collective_s"]
+                  / max(r["roofline"]["bound_s"], 1e-12)
+                  * r["roofline"]["collective_s"])
+    train = [r for r in recs if r["step_kind"] == "train"
+             and r.get("useful_flops_ratio")]
+    worst = min(train, key=lambda r: r["useful_flops_ratio"])
+    paper = next(r for r in recs
+                 if r["arch"] == "dlrm-rm2" and r["shape"] == "train_batch")
+    return {"most_collective_bound": by_coll, "worst_useful_flops": worst,
+            "paper_representative": paper}
+
+
+def main() -> None:
+    for mesh in ("pod_16x16", "multipod_2x16x16"):
+        recs = load_records(mesh=mesh)
+        if not recs:
+            continue
+        print(f"\n## mesh {mesh} ({len(recs)} cells)\n")
+        print(fmt_table(recs))
+    recs = load_records()
+    if recs:
+        print("\n## hillclimb picks (single-pod)\n")
+        for k, r in interesting_cells(recs).items():
+            t = r["roofline"]
+            print(f"- {k}: {r['arch']} x {r['shape']} "
+                  f"(dom={t['dominant']}, bound={t['bound_s']*1e3:.2f}ms, "
+                  f"useful={r.get('useful_flops_ratio')})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Roofline terms (deliverable g) come
+from launch/dryrun.py artifacts — summarized by benchmarks/roofline_table.py.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-measured]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-measured", action="store_true",
+                    help="skip wall-clock rows (CI use)")
+    args = ap.parse_args()
+
+    from benchmarks import paper_figs as F
+    benches = [
+        F.table1_workloads,
+        F.fig3_mram_latency,
+        F.fig5_access_skew,
+        F.fig6_partition_balance,
+        F.fig8_inference_speedup,
+        F.fig9_partition_speedup,
+        F.fig10_latency_breakdown,
+        F.fig11_sensitivity,
+        F.tile_solver,
+    ]
+    if not args.skip_measured:
+        benches.append(F.measured_lookup_paths)
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for bench in benches:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.3f},{derived}")
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{bench.__name__},nan,FAILED", file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Partition explorer: sweep the §3.1 layout (N_c) and the three partitioners
+across all six Table-1 workloads under the analytic UPMEM model — prints the
+per-workload optimum the way UpDLRM's auto-tuner picks it.
+
+    PYTHONPATH=src:. python examples/partition_explorer.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from benchmarks.common import plan_shares, workload_stats
+from repro.core.hwmodel import embedding_stage_latency, updlrm_layout
+from repro.data.synthetic import WORKLOADS
+
+BANKS_PER_TABLE, C, BATCH = 32, 32, 64
+
+print(f"{'workload':8s} {'part':4s} " +
+      " ".join(f"Nc={n:<2d}" for n in (2, 4, 8)) + "   best")
+for key in WORKLOADS:
+    st = workload_stats(key)
+    p = st["profile"]
+    for name in ("U", "NU", "CA"):
+        best, best_t = None, np.inf
+        cells = []
+        for n_c in (2, 4, 8):
+            rg, _ = updlrm_layout(BANKS_PER_TABLE, C, n_c)
+            shares, _ = plan_shares(st, name, rg)
+            t = embedding_stage_latency(
+                batch_size=BATCH, avg_reduction=p.avg_reduction, n_c=n_c,
+                per_bank_lookup_share=shares,
+                cache_hit_rate=st["hit_rate"] if name == "CA" else 0.0,
+            ).total * 1e6
+            cells.append(t)
+            if t < best_t:
+                best, best_t = n_c, t
+        print(f"{key:8s} {name:4s} " +
+              " ".join(f"{c:6.0f}" for c in cells) +
+              f"   Nc={best} ({best_t:.0f}us)")

@@ -1,0 +1,82 @@
+"""Batched serving with cache-aware partitioning — the paper's Fig. 4 flow.
+
+Pre-process stage: profile trace -> mine cache lists -> cache-aware
+partition -> build partial-sum cache. Serving stage: requests are rewritten
+(cache ids + residual ids) on the host, scored by the jitted fused lookup +
+CTR MLPs; reports latency with and without the cache path.
+
+    PYTHONPATH=src python examples/serve_updlrm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache_runtime import (build_cache_table, measure_hit_rate,
+                                      rewrite_bags)
+from repro.core.embedding import banked_embedding_bag, pack_table
+from repro.core.grace import mine_cooccurrence
+from repro.core.partitioning import cache_aware_partition
+from repro.data.synthetic import WORKLOADS, multihot_trace, padded_bags
+from repro.models.dlrm import _mlp_params, mlp_apply
+
+N_ITEMS, DIM, BANKS, BATCH, PAD = 100_000, 32, 8, 64, 256
+
+print("== pre-process (Fig. 4 stage 0) ==")
+trace = multihot_trace(WORKLOADS["read"], 1200, n_items=N_ITEMS, seed=0)
+freq = np.zeros(N_ITEMS)
+for bag in trace:
+    np.add.at(freq, bag, 1.0)
+cp = mine_cooccurrence(trace[:400], top_items=2048, max_groups=256)
+plan = cache_aware_partition(freq, cp.groups, cp.benefits, BANKS)
+print(f"   groups={len(cp.groups)} hit_rate="
+      f"{measure_hit_rate(trace[:200], cp):.1%} "
+      f"imbalance={plan.imbalance():.2f}")
+
+rng = np.random.default_rng(0)
+table = rng.standard_normal((N_ITEMS, DIM)).astype(np.float32)
+bt = pack_table(table, plan)
+cache_tab = jnp.asarray(build_cache_table(table, cp))
+top = _mlp_params(jax.random.key(1), [DIM, 256, 64, 1], jnp.float32)
+
+
+@jax.jit
+def serve_plain(bags):
+    emb = banked_embedding_bag(bt, bags, None)
+    return jax.nn.sigmoid(mlp_apply(top, emb)[:, 0])
+
+
+@jax.jit
+def serve_cached(cache_idx, resid_idx):
+    emb = jnp.take(cache_tab, jnp.where(cache_idx >= 0, cache_idx, 0),
+                   axis=0) * (cache_idx >= 0)[..., None]
+    emb = emb.sum(1) + banked_embedding_bag(bt, resid_idx, None)
+    return jax.nn.sigmoid(mlp_apply(top, emb)[:, 0])
+
+
+def bench(fn, *args, iters=20):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+print("== serving ==")
+reqs = trace[400:400 + BATCH]
+bags = jnp.asarray(padded_bags(reqs, PAD))
+t_plain = bench(serve_plain, bags)
+ci, ri = rewrite_bags(reqs, cp, max_cache_per_bag=16,
+                      max_residual_per_bag=PAD)
+t_cached = bench(serve_cached, jnp.asarray(ci), jnp.asarray(ri))
+s_plain = serve_plain(bags)
+s_cached = serve_cached(jnp.asarray(ci), jnp.asarray(ri))
+# plain bags may repeat an item; rewritten path dedupes — compare on dedup
+uniq = jnp.asarray(padded_bags([np.unique(b) for b in reqs], PAD))
+s_plain_u = serve_plain(uniq)
+print(f"   plain lookup      : {t_plain:.2f} ms/batch")
+print(f"   cache-aware lookup: {t_cached:.2f} ms/batch "
+      f"({t_plain / t_cached:.2f}x)")
+print(f"   scores match: {np.allclose(s_plain_u, s_cached, atol=1e-3)}")

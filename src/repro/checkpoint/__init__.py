@@ -1,0 +1,11 @@
+"""Checkpointing: sharded save/restore, async writer, elastic re-partition."""
+from repro.checkpoint.ckpt import (
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+    AsyncCheckpointer,
+    reshard_banked_table,
+)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer", "reshard_banked_table"]

@@ -1,0 +1,143 @@
+"""Checkpointing: atomic step-numbered sharded saves, async writer thread,
+and ELASTIC restore — including re-partitioning banked embedding tables when
+the bank count (mesh) changes between save and restore.
+
+Layout:  <dir>/step_<n>.tmp/ -> fsync -> rename to <dir>/step_<n>/
+         one .npy per leaf + tree.json manifest (path, dtype, shape).
+Atomic rename means a crash mid-save never corrupts the latest checkpoint —
+restore always picks the highest COMPLETE step (fault tolerance).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    named = [(jax.tree_util.keystr(p), v) for p, v in leaves]
+    return named, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    named, _ = _flatten(tree)
+    manifest = []
+    for i, (path, leaf) in enumerate(named):
+        arr = np.asarray(leaf)
+        np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+        manifest.append({"path": path, "index": i,
+                         "dtype": str(arr.dtype), "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "tree.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "tree.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, target_tree, step: int | None = None):
+    """Restore into the STRUCTURE of target_tree (shapes may differ for banked
+    tables — use reshard_banked_table afterwards for elastic changes)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "tree.json")) as f:
+        manifest = json.load(f)
+    by_path = {m["path"]: m for m in manifest["leaves"]}
+    named, treedef = _flatten(target_tree)
+    out = []
+    for path, tgt in named:
+        m = by_path.get(path)
+        if m is None:
+            raise KeyError(f"checkpoint missing leaf {path}")
+        arr = np.load(os.path.join(d, f"leaf_{m['index']}.npy"))
+        out.append(arr)
+    leaves_sorted = jax.tree_util.tree_unflatten(
+        treedef, [v for v in out])
+    return leaves_sorted, step
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a writer thread; join() before exit.
+
+    Device->host transfer happens on the caller thread (cheap, and the arrays
+    are immutable afterwards); disk IO overlaps the next train steps.
+    """
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree) -> None:
+        host_tree = jax.tree.map(np.asarray, tree)
+        self.join()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree), daemon=True)
+        self._thread.start()
+
+    def _write(self, step: int, tree) -> None:
+        save_checkpoint(self.ckpt_dir, step, tree)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1)) for m in
+            (re.fullmatch(r"step_(\d+)", n) for n in os.listdir(self.ckpt_dir))
+            if m)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    def join(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def reshard_banked_table(packed: np.ndarray, old_plan, new_plan) -> np.ndarray:
+    """Elastic re-partition: packed rows under old_plan -> packed under
+    new_plan (bank count / balance changed — node failure or scale-out).
+
+    Rows are addressed logically (vocab ids), so the migration is two gathers;
+    padding rows are dropped/re-created as needed.
+    """
+    dim = packed.shape[1]
+    old_rows = int(old_plan.max_rows_per_bank)
+    new_rows = int(new_plan.max_rows_per_bank)
+    vocab = old_plan.vocab
+    assert new_plan.vocab == vocab
+    flat_old = old_plan.bank_of_row.astype(np.int64) * old_rows \
+        + old_plan.slot_of_row
+    logical = packed[flat_old]                      # (vocab, dim)
+    out = np.zeros((new_plan.n_banks * new_rows, dim), packed.dtype)
+    flat_new = new_plan.bank_of_row.astype(np.int64) * new_rows \
+        + new_plan.slot_of_row
+    out[flat_new] = logical
+    return out

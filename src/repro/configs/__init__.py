@@ -1,0 +1,6 @@
+"""Config registry: ``get_arch(arch_id)`` for every assigned architecture
+(+ the paper's own updlrm config). See configs/shapes.py for the per-family
+input-shape sets and ShapeDtypeStruct builders."""
+from repro.configs.registry import ARCHS, ArchSpec, get_arch, list_archs
+
+__all__ = ["ARCHS", "ArchSpec", "get_arch", "list_archs"]

@@ -1,0 +1,43 @@
+"""UpDLRM core: the paper's contribution as composable JAX modules.
+
+- partitioning: §3.1 uniform / §3.2 non-uniform / §3.3 cache-aware (Alg. 1)
+- grace:        co-occurrence mining -> cache lists (GRACE-lite)
+- embedding:    bank-partitioned lookup runtime (shard_map; stages 1-3)
+- cache_runtime: request rewriting + partial-sum cache tables
+- hwmodel:      UPMEM + TPUv5e profiles; Eq. 1-3 analytic stage model
+"""
+from repro.core.partitioning import (
+    PartitionPlan,
+    uniform_partition,
+    non_uniform_partition,
+    cache_aware_partition,
+    expert_placement,
+)
+from repro.core.embedding import (
+    BankedTable,
+    DistCtx,
+    pack_table,
+    init_banked,
+    banked_embedding_bag,
+    banked_gather,
+    csr_embedding_bag,
+    col_split_embedding_bag,
+    lookup_unsharded,
+)
+from repro.core.grace import CachePlan, mine_cooccurrence
+from repro.core.cache_runtime import (
+    build_cache_table,
+    rewrite_bag,
+    rewrite_bags,
+    measure_hit_rate,
+)
+from repro.core.hwmodel import (
+    UPMEM,
+    TPUV5E,
+    UPMEMProfile,
+    TPUv5eProfile,
+    embedding_stage_latency,
+    solve_uniform_tile,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

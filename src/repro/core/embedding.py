@@ -1,0 +1,249 @@
+"""PIMEmbeddingBag: bank-partitioned embedding lookup (the paper's runtime).
+
+The UPMEM dataflow (paper Fig. 4) maps 1:1 onto a ``shard_map`` over the mesh's
+``model`` axis (DESIGN.md §2):
+
+  stage 1  indices replicated across the bank axis        (CPU->DPU broadcast)
+  stage 2  masked local gather + segment-reduce per bank  (in-DPU lookup+reduce)
+  stage 3  psum of partial bag-sums over the bank axis    (DPU->CPU combine)
+
+A table is *packed* by a PartitionPlan (core/partitioning.py): rows are
+physically reordered so bank b's rows are contiguous, giving a global
+``(n_banks * rows_per_bank, dim)`` array sharded ``P('model', None)`` — each
+device holds exactly its bank.  The row->(bank, slot) remap is two replicated
+``int32[vocab]`` vectors (8 B/row).
+
+Column-split mode (the paper's N_c knob) shards the embedding dim instead:
+every bank gathers full bags for its dim-slice (no mask, no psum) and stage 3
+becomes an all-gather of dim slices — the same Eq. 1 tradeoff with TPU
+constants (§Perf explores it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partitioning import PartitionPlan
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BankedTable:
+    """Pytree: packed rows + remap. ``packed`` shards P(bank_axis, None)."""
+
+    packed: Array       # (n_banks * rows_per_bank, dim)
+    remap_bank: Array   # (vocab,) int32, replicated
+    remap_slot: Array   # (vocab,) int32, replicated
+    n_banks: int = dataclasses.field(metadata=dict(static=True))
+    rows_per_bank: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def vocab(self) -> int:
+        return self.remap_bank.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.packed.shape[-1]
+
+
+def pack_table(table: np.ndarray, plan: PartitionPlan,
+               dtype=None) -> BankedTable:
+    """Physically reorder rows by the plan; pad banks to a common row count."""
+    vocab, dim = table.shape
+    rows_per_bank = int(plan.max_rows_per_bank)
+    packed = np.zeros((plan.n_banks * rows_per_bank, dim), dtype=table.dtype)
+    flat_pos = plan.bank_of_row.astype(np.int64) * rows_per_bank + plan.slot_of_row
+    packed[flat_pos] = table
+    if dtype is not None:
+        packed = packed.astype(dtype)
+    return BankedTable(
+        packed=jnp.asarray(packed),
+        remap_bank=jnp.asarray(plan.bank_of_row, dtype=jnp.int32),
+        remap_slot=jnp.asarray(plan.slot_of_row, dtype=jnp.int32),
+        n_banks=plan.n_banks,
+        rows_per_bank=rows_per_bank,
+    )
+
+
+def init_banked(key, plan: PartitionPlan, dim: int, *, scale: float = 0.01,
+                dtype=jnp.float32) -> BankedTable:
+    """Random-init a banked table without materializing the unpacked layout."""
+    rows_per_bank = int(plan.max_rows_per_bank)
+    packed = jax.random.normal(
+        key, (plan.n_banks * rows_per_bank, dim), dtype) * scale
+    return BankedTable(
+        packed=packed,
+        remap_bank=jnp.asarray(plan.bank_of_row, dtype=jnp.int32),
+        remap_slot=jnp.asarray(plan.slot_of_row, dtype=jnp.int32),
+        n_banks=plan.n_banks,
+        rows_per_bank=rows_per_bank,
+    )
+
+
+# ---------------------------------------------------------------------------
+# local (single-shard) reference semantics — also the inside of the shard_map
+# ---------------------------------------------------------------------------
+
+def _local_bag_partial(table_local: Array, bank: Array, slot: Array,
+                       idx: Array, my_bank: Array) -> Array:
+    """Stage 2 on one bank: masked gather of owned rows, zeros elsewhere.
+
+    idx: (..., L) padded with -1.  Returns (..., dim) partial bag sums.
+    """
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+    owner = bank[safe]
+    s = slot[safe]
+    mine = valid & (owner == my_bank)
+    rows = jnp.take(table_local, jnp.where(mine, s, 0), axis=0)
+    rows = jnp.where(mine[..., None], rows, 0)
+    return rows.sum(axis=-2)
+
+
+def _local_gather_partial(table_local: Array, bank: Array, slot: Array,
+                          idx: Array, my_bank: Array) -> Array:
+    """Dense (non-reducing) lookup partial: (...,) idx -> (..., dim)."""
+    safe = jnp.where(idx >= 0, idx, 0)
+    owner = bank[safe]
+    s = slot[safe]
+    mine = (idx >= 0) & (owner == my_bank)
+    rows = jnp.take(table_local, jnp.where(mine, s, 0), axis=0)
+    return jnp.where(mine[..., None], rows, 0)
+
+
+def lookup_unsharded(t: BankedTable, idx: Array, *, reduce_bag: bool) -> Array:
+    """Single-device semantics (CPU path + oracle): loop banks via reshape."""
+    table = t.packed.reshape(t.n_banks, t.rows_per_bank, t.dim)
+    flat = t.remap_bank * t.rows_per_bank + t.remap_slot
+    safe = jnp.where(idx >= 0, idx, 0)
+    rows = jnp.take(table.reshape(-1, t.dim), flat[safe], axis=0)
+    rows = jnp.where((idx >= 0)[..., None], rows, 0)
+    return rows.sum(axis=-2) if reduce_bag else rows
+
+
+# ---------------------------------------------------------------------------
+# distributed lookup
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DistCtx:
+    """Mesh context threaded through model code. None => single-device."""
+
+    mesh: jax.sharding.Mesh
+    dp_axes: tuple[str, ...]     # batch-sharded axes, e.g. ('pod', 'data')
+    bank_axis: str = "model"
+
+    @property
+    def n_banks(self) -> int:
+        return self.mesh.shape[self.bank_axis]
+
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.dp_axes]))
+
+
+def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
+                         *, reduce_bag: bool = True) -> Array:
+    """The paper's stages 1-3. idx (B, L) -> (B, dim) [reduce] or (B, L, dim).
+
+    Under a mesh: shard_map over (dp_axes + bank_axis); indices are sharded on
+    batch, replicated across banks (stage 1); each bank computes its partial
+    (stage 2); psum over the bank axis (stage 3).
+    """
+    if dist is None:
+        return lookup_unsharded(t, idx, reduce_bag=reduce_bag)
+
+    P = jax.sharding.PartitionSpec
+    # batch shards over dp when divisible; tiny/odd batches (retrieval's B=1
+    # query) replicate across dp instead
+    dp_ok = idx.shape[0] % dist.dp_size() == 0
+    dp = (dist.dp_axes if len(dist.dp_axes) > 1 else dist.dp_axes[0]) \
+        if dp_ok else None
+    bank = dist.bank_axis
+    idx_spec = P(dp, *([None] * (idx.ndim - 1)))
+    out_spec = P(dp, *([None] * (idx.ndim - (1 if reduce_bag else 0))))
+
+    def fn(packed_local, bank_map, slot_map, idx_local):
+        my = jax.lax.axis_index(bank)
+        if reduce_bag:
+            part = _local_bag_partial(packed_local, bank_map, slot_map,
+                                      idx_local, my)
+        else:
+            part = _local_gather_partial(packed_local, bank_map, slot_map,
+                                         idx_local, my)
+        return jax.lax.psum(part, bank)
+
+    return jax.shard_map(
+        fn, mesh=dist.mesh,
+        in_specs=(P(bank, None), P(), P(), idx_spec),
+        out_specs=out_spec,
+    )(t.packed, t.remap_bank, t.remap_slot, idx)
+
+
+def banked_gather(t: BankedTable, idx: Array, dist: DistCtx | None) -> Array:
+    """Dense per-position lookup (LM token embedding / BERT4Rec item seq)."""
+    return banked_embedding_bag(t, idx, dist, reduce_bag=False)
+
+
+def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
+                      num_bags: int, dist: DistCtx | None) -> Array:
+    """CSR-ragged variant (indices flat + offsets), bag-summed.
+
+    Ragged bags cannot shard on batch without equal per-shard totals, so the
+    flat stream is replicated across dp as well — used for the paper-faithful
+    serving path at modest batch (the paper's batch is 64); the rectangular
+    ``banked_embedding_bag`` is the scale path.
+    """
+    from repro.sparse.ops import offsets_to_segment_ids
+    total = indices.shape[0]
+    seg = offsets_to_segment_ids(offsets, total)
+
+    if dist is None:
+        rows = lookup_unsharded(t, indices[:, None], reduce_bag=True)
+        return jax.ops.segment_sum(rows, seg, num_bags)
+
+    P = jax.sharding.PartitionSpec
+
+    def fn(packed_local, bank_map, slot_map, idx_local, seg_local):
+        my = jax.lax.axis_index(dist.bank_axis)
+        part = _local_gather_partial(packed_local, bank_map, slot_map,
+                                     idx_local, my)
+        part = jax.ops.segment_sum(part, seg_local, num_bags)
+        return jax.lax.psum(part, dist.bank_axis)
+
+    return jax.shard_map(
+        fn, mesh=dist.mesh,
+        in_specs=(P(dist.bank_axis, None), P(), P(), P(), P()),
+        out_specs=P(),
+    )(t.packed, t.remap_bank, t.remap_slot, indices, seg)
+
+
+# ---------------------------------------------------------------------------
+# column-split table (the paper's N_c axis, TPU rendition)
+# ---------------------------------------------------------------------------
+
+def col_split_embedding_bag(table: Array, idx: Array, dist: DistCtx | None,
+                            *, reduce_bag: bool = True) -> Array:
+    """Uniform column split: table (vocab, dim) sharded P(None, bank_axis).
+
+    Every bank gathers ALL bag indices for its dim slice; no mask, no psum —
+    stage 3 is an implicit all-gather when the consumer needs the full dim.
+    Expressed via GSPMD sharding constraint so XLA schedules the collective.
+    """
+    valid = idx >= 0
+    rows = jnp.take(table, jnp.where(valid, idx, 0), axis=0)
+    rows = jnp.where(valid[..., None], rows, 0)
+    out = rows.sum(axis=-2) if reduce_bag else rows
+    if dist is not None:
+        P = jax.sharding.PartitionSpec
+        dp = dist.dp_axes if len(dist.dp_axes) > 1 else dist.dp_axes[0]
+        spec = P(dp, *([None] * (out.ndim - 2)), dist.bank_axis)
+        out = jax.lax.with_sharding_constraint(
+            out, jax.sharding.NamedSharding(dist.mesh, spec))
+    return out

@@ -1,0 +1,2 @@
+"""Data substrate: synthetic workload generators (paper Table 1 profiles) and
+the deterministic host-sharded pipeline."""

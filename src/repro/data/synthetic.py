@@ -1,0 +1,179 @@
+"""Synthetic workload generators.
+
+``WORKLOADS`` mirrors the paper's Table 1: six datasets in three hotness tiers
+with the published average reduction (multi-hot bag size) and item counts.
+Popularity is Zipf-distributed with the tier controlling the exponent —
+calibrated so the hottest/coldest row-block ratio spans the paper's reported
+skew (up to 340x, Fig. 5).
+
+Every generator is deterministic in (seed, step) so a restarted job replays
+the exact same stream (fault-tolerance requirement, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    name: str
+    avg_reduction: float
+    n_items: int
+    zipf_a: float          # popularity exponent (higher => hotter)
+    tier: str
+
+
+# paper Table 1 (avg reduction + #items verbatim; zipf_a per tier)
+WORKLOADS = {
+    "clo":   WorkloadProfile("AmazonClothes", 52.91, 2_685_059, 0.60, "low"),
+    "home":  WorkloadProfile("AmazonHome", 67.56, 1_301_225, 0.65, "low"),
+    "meta1": WorkloadProfile("MetaFBGEMM1", 107.2, 5_783_210, 0.90, "medium"),
+    "meta2": WorkloadProfile("MetaFBGEMM2", 188.6, 5_999_981, 0.95, "medium"),
+    "read":  WorkloadProfile("GoodReads", 245.8, 2_360_650, 1.18, "high"),
+    "read2": WorkloadProfile("GoodReads2", 374.08, 2_360_650, 1.22, "high"),
+}
+
+
+def zipf_popularity(n_items: int, a: float, rng: np.random.Generator
+                    ) -> np.ndarray:
+    """Normalized Zipf pmf over a random permutation of item ids (hot items
+    are scattered across the id space, like real catalogs)."""
+    ranks = np.arange(1, n_items + 1, dtype=np.float64)
+    p = ranks ** (-a)
+    p /= p.sum()
+    perm = rng.permutation(n_items)
+    out = np.empty(n_items)
+    out[perm] = p
+    return out
+
+
+def multihot_trace(profile: WorkloadProfile, n_samples: int, *, seed: int = 0,
+                   n_items: int | None = None) -> list[np.ndarray]:
+    """Bags of item ids: |bag| ~ Poisson(avg_reduction), items ~ Zipf."""
+    rng = np.random.default_rng(seed)
+    n = n_items or profile.n_items
+    p = zipf_popularity(n, profile.zipf_a, rng)
+    sizes = np.maximum(1, rng.poisson(profile.avg_reduction, n_samples))
+    return [rng.choice(n, size=s, p=p) for s in sizes]
+
+
+def padded_bags(trace: list[np.ndarray], pad_to: int) -> np.ndarray:
+    out = np.full((len(trace), pad_to), -1, dtype=np.int32)
+    for i, bag in enumerate(trace):
+        b = bag[:pad_to]
+        out[i, :len(b)] = b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-family batch generators (all static-shape, -1 padded)
+# ---------------------------------------------------------------------------
+
+def lm_batch(batch: int, seq: int, vocab: int, *, seed: int, step: int) -> dict:
+    rng = np.random.default_rng((seed, step))
+    toks = rng.integers(0, vocab, (batch, seq), dtype=np.int32)
+    labels = np.roll(toks, -1, axis=1)
+    return {"tokens": toks, "labels": labels}
+
+
+def dlrm_batch(vocab_sizes, n_dense: int, batch: int, *, seed: int, step: int,
+               multi_hot: int = 1, zipf_a: float = 0.9) -> dict:
+    rng = np.random.default_rng((seed, step))
+    F = len(vocab_sizes)
+    if multi_hot == 1:
+        sparse = np.stack([rng.integers(0, v, batch) for v in vocab_sizes],
+                          axis=1).astype(np.int32)
+    else:
+        sparse = np.stack(
+            [rng.integers(0, v, (batch, multi_hot)) for v in vocab_sizes],
+            axis=1).astype(np.int32)
+    return {
+        "dense": rng.standard_normal((batch, n_dense)).astype(np.float32),
+        "sparse": sparse,
+        "label": rng.integers(0, 2, batch).astype(np.float32),
+    }
+
+
+def din_batch(n_items: int, n_cates: int, seq_len: int, batch: int, *,
+              seed: int, step: int) -> dict:
+    rng = np.random.default_rng((seed, step))
+    hist = rng.integers(0, n_items, (batch, seq_len)).astype(np.int32)
+    lens = rng.integers(seq_len // 4, seq_len + 1, batch)
+    mask = np.arange(seq_len)[None, :] < lens[:, None]
+    hist = np.where(mask, hist, -1).astype(np.int32)
+    cates = np.where(mask, rng.integers(0, n_cates, (batch, seq_len)), -1)
+    return {
+        "hist_items": hist,
+        "hist_cates": cates.astype(np.int32),
+        "target_item": rng.integers(0, n_items, batch).astype(np.int32),
+        "target_cate": rng.integers(0, n_cates, batch).astype(np.int32),
+        "label": rng.integers(0, 2, batch).astype(np.float32),
+    }
+
+
+def bert4rec_batch(n_items: int, seq_len: int, batch: int, *, seed: int,
+                   step: int, mask_rate: float = 0.15,
+                   n_negatives: int = 0) -> dict:
+    rng = np.random.default_rng((seed, step))
+    items = rng.integers(0, n_items, (batch, seq_len)).astype(np.int32)
+    sel = rng.random((batch, seq_len)) < mask_rate
+    sel[:, -1] = True  # always at least one target
+    labels = np.where(sel, items, -100).astype(np.int32)
+    masked = np.where(sel, n_items, items).astype(np.int32)  # mask token id
+    out = {"items": masked, "labels": labels}
+    if n_negatives:
+        out["negatives"] = rng.integers(0, n_items,
+                                        n_negatives).astype(np.int32)
+    return out
+
+
+def xdeepfm_batch(vocab_sizes, batch: int, *, seed: int, step: int) -> dict:
+    rng = np.random.default_rng((seed, step))
+    sparse = np.stack([rng.integers(0, v, batch) for v in vocab_sizes],
+                      axis=1).astype(np.int32)
+    return {"sparse": sparse,
+            "label": rng.integers(0, 2, batch).astype(np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# graphs
+# ---------------------------------------------------------------------------
+
+def random_graph(n_nodes: int, n_edges: int, d_feat: int, n_classes: int, *,
+                 seed: int = 0, power_law: bool = True) -> dict:
+    """Cora/products-like: power-law degree distribution + self loops."""
+    rng = np.random.default_rng(seed)
+    if power_law:
+        w = zipf_popularity(n_nodes, 0.9, rng)
+        src = rng.choice(n_nodes, n_edges, p=w)
+        dst = rng.choice(n_nodes, n_edges, p=w)
+    else:
+        src = rng.integers(0, n_nodes, n_edges)
+        dst = rng.integers(0, n_nodes, n_edges)
+    return {
+        "features": rng.standard_normal((n_nodes, d_feat)).astype(np.float32),
+        "edge_src": src.astype(np.int32),
+        "edge_dst": dst.astype(np.int32),
+        "labels": rng.integers(0, n_classes, n_nodes).astype(np.int32),
+        "label_mask": (rng.random(n_nodes) < 0.5),
+    }
+
+
+def molecule_batch(n_graphs: int, nodes_per: int, edges_per: int, d_feat: int,
+                   n_classes: int, *, seed: int = 0, step: int = 0) -> dict:
+    """Block-diagonal batched small graphs."""
+    rng = np.random.default_rng((seed, step))
+    N = n_graphs * nodes_per
+    src = (rng.integers(0, nodes_per, (n_graphs, edges_per))
+           + np.arange(n_graphs)[:, None] * nodes_per).reshape(-1)
+    dst = (rng.integers(0, nodes_per, (n_graphs, edges_per))
+           + np.arange(n_graphs)[:, None] * nodes_per).reshape(-1)
+    return {
+        "features": rng.standard_normal((N, d_feat)).astype(np.float32),
+        "edge_src": src.astype(np.int32),
+        "edge_dst": dst.astype(np.int32),
+        "graph_ids": np.repeat(np.arange(n_graphs), nodes_per).astype(np.int32),
+        "labels": rng.integers(0, n_classes, n_graphs).astype(np.int32),
+    }

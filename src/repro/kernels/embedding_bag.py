@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: embedding-bag gather+reduce "near memory".
+
+TPU adaptation of the paper's in-DPU lookup (DESIGN.md §5): the table stays in
+HBM (MemorySpace.ANY); bag indices are scalar-prefetched (SMEM) so the kernel
+can issue row-granular HBM->VMEM copies; each grid step accumulates ONE batch
+tile of bag sums in a VMEM accumulator and writes only the reduced (tile_b, D)
+block. The (B*L, D) gathered matrix — the thing a naive XLA gather would
+materialize in HBM — never exists.
+
+Alignment: D is padded to the 128-lane boundary by ops.py (the TPU analogue of
+the paper's 8-byte MRAM alignment rule); the row copy is one (1, D) DMA, i.e.
+the ``N_c``-wide access of §3.1 with TPU constants.
+
+Grid: (B / tile_b,).  One program owns tile_b bags; the inner fori_loop walks
+tile_b * L prefetched indices, accumulating valid rows. Bank masking (the PIM
+stage-2 ownership test) is precomputed by the wrapper: indices not owned are
+already -1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, table_ref, out_ref, *, tile_b: int, bag_len: int,
+                dim: int):
+    b0 = pl.program_id(0) * tile_b
+
+    def bag_body(i, acc):
+        def entry_body(j, acc_row):
+            row = idx_ref[(b0 + i) * bag_len + j]
+            valid = row >= 0
+            safe = jnp.maximum(row, 0)
+            vec = table_ref[pl.dslice(safe, 1), :]      # (1, D) HBM->VMEM
+            return acc_row + jnp.where(valid, vec[0], 0.0)
+
+        acc_row = jax.lax.fori_loop(0, bag_len, entry_body,
+                                    jnp.zeros((dim,), jnp.float32))
+        return acc.at[i].set(acc_row)
+
+    acc = jax.lax.fori_loop(0, tile_b, bag_body,
+                            jnp.zeros((tile_b, dim), jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def embedding_bag_pallas(table: jax.Array, idx: jax.Array, *,
+                         tile_b: int = 8, interpret: bool = False
+                         ) -> jax.Array:
+    """table (V, D) in HBM; idx (B, L) int32, -1 padded -> (B, D)."""
+    B, L = idx.shape
+    V, D = table.shape
+    assert B % tile_b == 0, (B, tile_b)
+    kernel = functools.partial(_bag_kernel, tile_b=tile_b, bag_len=L, dim=D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B // tile_b,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+        out_specs=pl.BlockSpec((tile_b, D), lambda b, idx_ref: (b, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(idx.reshape(-1), table)

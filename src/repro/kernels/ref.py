@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` layer).
+
+These define the exact semantics the kernels must match (allclose in tests):
+  * embedding_bag_ref    — padded-bag gather+sum:  (B, L) idx -> (B, D)
+  * banked_bag_ref       — the PIM stage-2 semantics: remapped, bank-masked
+  * cache_bag_ref        — fused cache + EMT bag sum (paper Fig. 7)
+  * dot_interaction_ref  — DLRM pairwise-dot upper triangle
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def embedding_bag_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """table (V, D); idx (B, L) with -1 padding -> (B, D) bag sums."""
+    valid = idx >= 0
+    rows = jnp.take(table, jnp.where(valid, idx, 0), axis=0)
+    return jnp.where(valid[..., None], rows, 0).sum(axis=1)
+
+
+def banked_bag_ref(table_local: jax.Array, bank: jax.Array, slot: jax.Array,
+                   idx: jax.Array, my_bank: int) -> jax.Array:
+    """One bank's partial bag sums (stage 2): only rows owned by my_bank."""
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+    mine = valid & (bank[safe] == my_bank)
+    rows = jnp.take(table_local, jnp.where(mine, slot[safe], 0), axis=0)
+    return jnp.where(mine[..., None], rows, 0).sum(axis=1)
+
+
+def cache_bag_ref(emt: jax.Array, cache: jax.Array, cache_idx: jax.Array,
+                  residual_idx: jax.Array) -> jax.Array:
+    """Fused Fig.-7 lookup: cached partial sums + residual EMT rows."""
+    return embedding_bag_ref(cache, cache_idx) \
+        + embedding_bag_ref(emt, residual_idx)
+
+
+def dot_interaction_ref(z: jax.Array) -> jax.Array:
+    """z (B, F, D) -> (B, F*(F-1)/2) upper-triangle pairwise dots."""
+    B, F, D = z.shape
+    zz = jnp.einsum("bfd,bgd->bfg", z, z, preferred_element_type=jnp.float32)
+    iu, ju = np.triu_indices(F, k=1)
+    return zz[:, iu, ju].astype(z.dtype)

@@ -1,0 +1,329 @@
+"""Dry-run cell builders: (arch x shape x mesh) -> (jittable fn, SDS args).
+
+Everything here is allocation-free: parameters/optimizer state/KV caches are
+ShapeDtypeStructs with NamedShardings attached; only tiny remap-metadata ints
+are computed concretely. ``lower() + compile()`` of the returned pair proves
+the cell's sharding config is coherent (the multi-pod dry-run deliverable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs import shapes as SH
+from repro.core.embedding import DistCtx
+from repro.dist import sharding as R
+from repro.launch.mesh import dp_axes_for
+from repro.train import optim as O
+from repro.train.train_step import TrainState, build_train_step, default_optimizer
+
+P = jax.sharding.PartitionSpec
+
+EDGE_PAD = 512  # edge lists pad to multiples of this (divides 256 and 512)
+
+# compile-pass-only mode: keep scans ROLLED (fast compiles; identical program
+# semantics) — used for the multi-pod verification where cost accounting
+# comes from the single-pod exact runs. Set by dryrun --rolled.
+ROLLED_ONLY = False
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_id: str
+    step_kind: str
+    fn: Callable
+    args: tuple          # SDS pytrees with shardings attached
+    meta: dict
+
+
+def _attach(struct, shardings):
+    """Zip SDS pytree with NamedSharding pytree."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        struct, shardings)
+
+
+def _sds_shard(dist: DistCtx | None, struct, spec_fn):
+    if dist is None:
+        return struct
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: jax.ShapeDtypeStruct(
+            l.shape, l.dtype,
+            sharding=jax.sharding.NamedSharding(
+                dist.mesh, spec_fn(jax.tree_util.keystr(p), l))),
+        struct)
+
+
+def make_dist(mesh) -> DistCtx:
+    return DistCtx(mesh=mesh, dp_axes=dp_axes_for(mesh), bank_axis="model")
+
+
+def pad_to(n: int, mult: int) -> int:
+    return int(math.ceil(n / mult) * mult)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch_id: str, shape_id: str, dist: DistCtx,
+             cfg_override=None) -> Cell:
+    from repro.models import transformer as T
+    spec = get_arch(arch_id)
+    cfg: T.LMConfig = cfg_override if cfg_override is not None else spec.config
+    cell = SH.get_cell(arch_id, shape_id)
+    B, S = cell.dims["batch"], cell.dims["seq"]
+    kind = cell.step_kind
+    if ROLLED_ONLY:
+        pass
+    elif cfg_override is None and kind in ("train", "prefill"):
+        # dry-run accounting config: unroll scans so cost_analysis counts all
+        # iterations; q unchunked + kv chunks <= 2048 keep the unrolled HLO
+        # tractable (see LMConfig.unroll)
+        cfg = dataclasses.replace(cfg, unroll=True, q_chunk=S,
+                                  kv_chunk=min(2048, S))
+    elif cfg_override is None and kind == "decode":
+        cfg = dataclasses.replace(cfg, unroll=True)
+
+    params_struct = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.key(0)))
+    p_sh = R.lm_param_shardings(dist, params_struct)
+    params_sds = _attach(params_struct, p_sh)
+    dpax = dist.dp_axes if len(dist.dp_axes) > 1 else dist.dp_axes[0]
+
+    if kind == "train":
+        loss = lambda p, b: T.lm_loss(cfg, p, b["tokens"], b["labels"], dist)
+        opt = default_optimizer()
+        step = build_train_step(loss, opt)
+        state_struct = jax.eval_shape(
+            lambda: TrainState.create(T.init_params(cfg, jax.random.key(0)),
+                                      opt))
+        st_sh = R.train_state_shardings(dist, state_struct, p_sh)
+        state_sds = _attach(state_struct, st_sh)
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        batch_sds = _attach(batch, R.lm_batch_shardings(dist, batch))
+        return Cell(arch_id, shape_id, kind, step, (state_sds, batch_sds),
+                    dict(tokens=B * S))
+
+    if kind == "prefill":
+        fn = lambda p, toks: T.prefill(cfg, p, toks, dist)
+        batch = jax.ShapeDtypeStruct(
+            (B, S), jnp.int32,
+            sharding=jax.sharding.NamedSharding(dist.mesh, P(dpax, None)))
+        return Cell(arch_id, shape_id, kind, fn, (params_sds, batch),
+                    dict(tokens=B * S))
+
+    # decode: seq-sharded KV. long_500k (B=1) spreads seq over ALL axes.
+    if B >= dist.dp_size():
+        seq_axes = ("model",)
+        batch_gt1 = True
+    else:
+        seq_axes = tuple(dist.mesh.axis_names)
+        batch_gt1 = False
+    fn = lambda p, c, t: T.decode_step(cfg, p, c, t, dist, seq_axes=seq_axes)
+    cache_struct = jax.eval_shape(lambda: T.KVCache.empty(cfg, B, S))
+    cache_sds = _attach(cache_struct,
+                        R.kv_cache_shardings(dist, cache_struct,
+                                             seq_axes=seq_axes,
+                                             batch_gt1=batch_gt1))
+    tok = jax.ShapeDtypeStruct(
+        (B,), jnp.int32,
+        sharding=jax.sharding.NamedSharding(
+            dist.mesh, P(dpax) if batch_gt1 else P()))
+    return Cell(arch_id, shape_id, "decode", fn,
+                (params_sds, cache_sds, tok),
+                dict(tokens=B, kv_len=S, seq_axes=seq_axes))
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_modules(family: str):
+    if family == "dlrm":
+        from repro.models import dlrm as M
+    elif family == "din":
+        from repro.models import din as M
+    elif family == "bert4rec":
+        from repro.models import bert4rec as M
+    elif family == "xdeepfm":
+        from repro.models import xdeepfm as M
+    else:
+        raise ValueError(family)
+    return M
+
+
+def _recsys_vocab(cfg, family: str) -> int:
+    if family in ("dlrm", "xdeepfm"):
+        return cfg.total_vocab
+    if family == "din":
+        return cfg.total_vocab
+    return cfg.vocab  # bert4rec
+
+
+def _recsys_statics_sds(family: str, cfg, vocab: int, dist: DistCtx,
+                        n_banks: int) -> tuple[dict, dict]:
+    """(statics SDS arrays replicated, meta ints)."""
+    rows = pad_to(vocab, n_banks) // n_banks
+    arr = {"remap_bank": jax.ShapeDtypeStruct((vocab,), jnp.int32),
+           "remap_slot": jax.ShapeDtypeStruct((vocab,), jnp.int32)}
+    if family in ("dlrm", "xdeepfm"):
+        arr["field_offsets"] = jax.ShapeDtypeStruct(
+            (len(cfg.vocab_sizes),), jnp.int32)
+    if family == "din":
+        arr["cate_offset"] = jax.ShapeDtypeStruct((), jnp.int32)
+    arr = _sds_shard(dist, arr, lambda p, l: P(*([None] * len(l.shape))))
+    meta = {"n_banks": n_banks, "rows_per_bank": rows}
+    return arr, meta
+
+
+def _recsys_params_struct(M, family: str, cfg, vocab: int, n_banks: int):
+    """eval_shape of init with a shape-only fake plan (no numpy alloc)."""
+    from repro.core.partitioning import PartitionPlan
+    rows = pad_to(vocab, n_banks) // n_banks
+    plan = PartitionPlan(
+        n_banks=n_banks,
+        bank_of_row=np.zeros(vocab, np.int32),
+        slot_of_row=np.zeros(vocab, np.int32),
+        rows_per_bank=np.full(n_banks, rows, np.int32),
+        load_per_bank=np.ones(n_banks),
+    )
+    params_struct, statics_struct = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.key(0), plan))
+    return params_struct
+
+
+def _recsys_cell(arch_id: str, shape_id: str, dist: DistCtx) -> Cell:
+    spec = get_arch(arch_id)
+    cfg = spec.config
+    fam = spec.family
+    M = _recsys_modules(fam)
+    kind, batch_struct = SH.batch_struct(arch_id, shape_id)
+    vocab = _recsys_vocab(cfg, fam)
+    n_banks = dist.mesh.shape["model"]
+
+    params_struct = _recsys_params_struct(M, fam, cfg, vocab, n_banks)
+    p_sh = R.recsys_param_shardings(dist, params_struct)
+    params_sds = _attach(params_struct, p_sh)
+    statics_sds, meta = _recsys_statics_sds(fam, cfg, vocab, dist, n_banks)
+
+    def with_meta(fn):
+        return lambda p, s, b: fn(cfg, p, {**s, **meta}, b, dist)
+
+    if kind == "retrieval":
+        # candidate sets spread over every mesh axis -> pad to divisibility
+        batch_struct = {
+            k: (jax.ShapeDtypeStruct((pad_to(v.shape[0], EDGE_PAD),)
+                                     + v.shape[1:], v.dtype)
+                if k.startswith("candidate") else v)
+            for k, v in batch_struct.items()}
+    spread = ("candidate",) if kind == "retrieval" else ()
+    batch_sds = _attach(batch_struct,
+                        R.recsys_batch_shardings(dist, batch_struct,
+                                                 spread_keys=spread))
+
+    if kind == "train":
+        loss2 = with_meta(M.loss_fn)
+        opt = default_optimizer()
+        step0 = build_train_step(lambda p, sb: loss2(p, sb[0], sb[1]), opt)
+        step = lambda st, s, b: step0(st, (s, b))
+        state_struct = jax.eval_shape(
+            lambda: TrainState.create(params_struct_to_zeros(params_struct),
+                                      opt))
+        st_sh = R.train_state_shardings(dist, state_struct, p_sh)
+        state_sds = _attach(state_struct, st_sh)
+        return Cell(arch_id, shape_id, kind, step,
+                    (state_sds, statics_sds, batch_sds),
+                    dict(batch=batch_struct_leading(batch_struct)))
+
+    if kind == "retrieval":
+        fn = with_meta(M.retrieval_scores)
+    elif fam == "bert4rec":
+        fn = with_meta(M.next_item_scores)
+    else:
+        fn = with_meta(M.forward)
+    return Cell(arch_id, shape_id, kind, fn,
+                (params_sds, statics_sds, batch_sds),
+                dict(batch=batch_struct_leading(batch_struct)))
+
+
+def params_struct_to_zeros(struct):
+    """SDS tree -> zeros tree for tracing optimizer.init inside eval_shape."""
+    return jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), struct)
+
+
+def batch_struct_leading(batch_struct) -> int:
+    return int(jax.tree.leaves(batch_struct)[0].shape[0])
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gat_cell(arch_id: str, shape_id: str, dist: DistCtx) -> Cell:
+    from repro.models import gat as G
+    spec = get_arch(arch_id)
+    cell = SH.get_cell(arch_id, shape_id)
+    cfg = SH.gat_config_for_shape(spec.config, cell.dims)
+    kind, batch_struct = SH.batch_struct(arch_id, shape_id)
+
+    # pad edge arrays to a mesh-divisible multiple (mask handles the tail)
+    def pad_edges(tree):
+        out = {}
+        for k, v in tree.items():
+            if (k.startswith("edge_")
+                    or (k.startswith("block")
+                        and k.endswith(("_src", "_dst", "_mask")))):
+                n = pad_to(v.shape[0], EDGE_PAD)
+                out[k] = jax.ShapeDtypeStruct((n,) + v.shape[1:], v.dtype)
+            else:
+                out[k] = v
+        if "edge_src" in out and "edge_mask" not in out:
+            out["edge_mask"] = jax.ShapeDtypeStruct(
+                out["edge_src"].shape, jnp.bool_)
+        return out
+
+    batch_struct = pad_edges(batch_struct)
+    batch_sds = _attach(batch_struct, R.gnn_batch_shardings(dist, batch_struct))
+
+    if shape_id == "minibatch_lg":
+        loss = lambda p, b: G.loss_blocks(cfg, p, b, dist)
+    elif shape_id == "molecule":
+        loss = lambda p, b: G.loss_molecule(cfg, p, b, dist)
+    else:
+        loss = lambda p, b: G.loss_full(cfg, p, b, dist)
+
+    opt = O.adam(1e-3)
+    step = build_train_step(loss, opt, clip_norm=None)
+    params_struct = jax.eval_shape(lambda: G.init_params(cfg, jax.random.key(0)))
+    state_struct = jax.eval_shape(
+        lambda: TrainState.create(params_struct_to_zeros(params_struct), opt))
+    p_sh = jax.tree.map(
+        lambda l: jax.sharding.NamedSharding(dist.mesh,
+                                             P(*([None] * len(l.shape)))),
+        params_struct)
+    st_sh = R.train_state_shardings(dist, state_struct, p_sh)
+    state_sds = _attach(state_struct, st_sh)
+    return Cell(arch_id, shape_id, "train", step, (state_sds, batch_sds),
+                dict())
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_id: str, mesh) -> Cell:
+    dist = make_dist(mesh)
+    fam = get_arch(arch_id).family
+    if fam == "lm":
+        return _lm_cell(arch_id, shape_id, dist)
+    if fam == "gat":
+        return _gat_cell(arch_id, shape_id, dist)
+    return _recsys_cell(arch_id, shape_id, dist)

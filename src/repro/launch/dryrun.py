@@ -1,0 +1,148 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+"""Multi-pod dry-run driver.
+
+For every (arch x input-shape) cell, ``jit(step).lower(...).compile()`` on the
+production mesh — (16,16)=256 chips single-pod and (2,16,16)=512 multi-pod —
+and record memory_analysis / cost_analysis / per-collective bytes to JSON.
+A cell FAILING to lower+compile (sharding mismatch, compile-time OOM,
+unsupported collective) is a bug in the framework, not in the cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dlrm-rm2 --shape train_batch
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_arch, list_archs
+from repro.launch import roofline as RL
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool, out_dir: str,
+             save_hlo: bool = False) -> dict:
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = build_cell(arch_id, shape_id, mesh)
+    lowered = jax.jit(cell.fn).lower(*cell.args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    ana = RL.analyze_hlo(hlo)
+    coll = ana["collectives"]
+    coll_total = sum(coll.values())
+    flops = float(cost.get("flops", 0.0))
+    bytes_raw = float(cost.get("bytes accessed", 0.0))
+    # touched-rows correction for gather/scatter (see analyze_hlo docstring)
+    bytes_acc = max(0.0, bytes_raw - ana["gather_scatter_correction"])
+    terms = RL.roofline_terms(flops, bytes_acc, coll_total)
+    mf = RL.model_flops(arch_id, shape_id)
+    n_dev = mesh.devices.size
+
+    rec = {
+        "arch": arch_id,
+        "shape": shape_id,
+        "mesh": mesh_name,
+        "n_devices": int(n_dev),
+        "step_kind": cell.step_kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "bytes_per_device_raw": bytes_raw,
+        "collective_bytes_per_device": coll_total,
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": mem.peak_memory_in_bytes,
+            "fits_16gb": bool(mem.peak_memory_in_bytes
+                              + mem.argument_size_in_bytes < 16 * 2**30),
+        },
+        "roofline": terms,
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (flops * n_dev)) if flops else None,
+        "meta": {k: (list(v) if isinstance(v, tuple) else v)
+                 for k, v in cell.meta.items()},
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{mesh_name}__{arch_id}__{shape_id}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if save_hlo:
+        with open(path.replace(".json", ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    del compiled, lowered, cell
+    gc.collect()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--rolled", action="store_true",
+                    help="compile-pass only: keep scans rolled (fast); "
+                         "accounting comes from the exact single-pod runs")
+    args = ap.parse_args()
+    if args.rolled:
+        from repro.launch import cells
+        cells.ROLLED_ONLY = True
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in list_archs():
+            for s in get_arch(a).shapes:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch_id, shape_id in cells:
+        for mp in meshes:
+            tag = f"{'multi' if mp else 'single'}:{arch_id}:{shape_id}"
+            try:
+                rec = run_cell(arch_id, shape_id, mp, args.out,
+                               save_hlo=args.save_hlo)
+                r = rec["roofline"]
+                print(f"OK   {tag:55s} compile={rec['compile_s']:7.1f}s "
+                      f"peak={rec['memory']['peak_bytes']/2**30:6.2f}GiB "
+                      f"dom={r['dominant']:12s} bound={r['bound_s']*1e3:9.3f}ms",
+                      flush=True)
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"FAIL {tag}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e[:200])
+        raise SystemExit(1)
+    print("\nall cells passed")
+
+
+if __name__ == "__main__":
+    main()

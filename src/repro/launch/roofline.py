@@ -1,0 +1,209 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute   = HLO_FLOPs_per_device / peak_FLOPs
+    memory    = HLO_bytes_per_device / HBM_bw
+    collective= collective_operand_bytes_per_device / ICI_bw
+
+cost_analysis() supplies FLOPs/bytes (per device — the SPMD-partitioned entry
+computation). Collective bytes are NOT in cost_analysis: we parse the
+post-optimization HLO, build a name->shape table from every defining line, and
+sum OPERAND sizes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute (async *-start counted once, *-done skipped).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Iterable
+
+from repro.core.hwmodel import TPUV5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|[^ ]+)\s+([\w\-]+)\((.*)",
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+
+def type_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    return analyze_hlo(hlo_text)["collectives"]
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    """One-pass HLO analysis: per-collective operand bytes + the
+    gather/scatter memory-accounting correction.
+
+    XLA's cost_analysis charges gather/scatter ops for their FULL table
+    operand (verified: a 64-row gather from a 1M x 8 table reports 32 MB
+    "bytes accessed"). Real hardware reads only the touched rows, so for
+    embedding-heavy models the memory term would be phantom-inflated by the
+    whole table per lookup op. Correction per op (touched-rows model):
+      gather : charged ~ operand+idx+out      -> realistic ~ 2*out+idx
+               correction -= (operand - out)          [when operand > out]
+      scatter: charged ~ 2*operand+updates+idx -> realistic ~ 3*updates+idx
+               correction -= 2*(operand - updates)    [when operand > upd]
+    """
+    shapes: dict[str, str] = {}
+    collectives: list[tuple[str, str]] = []  # (opcode, args_str)
+    gs: list[tuple[str, str, str]] = []      # (opcode, result_type, args)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        shapes[name] = type_str
+        base = opcode.removesuffix("-start")
+        if opcode.endswith("-done"):
+            continue
+        if base in COLLECTIVE_OPS:
+            # operands are up to the closing paren of the call
+            args = rest.split("), ")[0]
+            collectives.append((base, args))
+        elif base in ("gather", "scatter"):
+            gs.append((base, type_str, rest.split("), ")[0]))
+
+    out: dict[str, float] = {}
+    for base, args in collectives:
+        b = 0
+        for op_name in _OPERAND_RE.findall(args):
+            t = shapes.get(op_name)
+            if t:
+                b += type_bytes(t)
+        out[base] = out.get(base, 0.0) + float(b)
+
+    correction = 0.0
+    for base, res_type, args in gs:
+        ops = [type_bytes(shapes.get(n, "")) for n in
+               _OPERAND_RE.findall(args)]
+        if not ops:
+            continue
+        operand = max(ops)  # the table
+        if base == "gather":
+            res = type_bytes(res_type)
+            if operand > res:
+                correction += operand - res
+        else:  # scatter(operand, idx, updates)
+            updates = sorted(ops)[-2] if len(ops) >= 2 else 0
+            if operand > updates:
+                correction += 2.0 * (operand - updates)
+    return {"collectives": out, "gather_scatter_correction": correction}
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float, hw=TPUV5E) -> dict[str, float]:
+    compute = flops / hw.peak_flops
+    memory = bytes_accessed / hw.hbm_bw
+    collective = collective_bytes / hw.ici_bw
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    total = max(compute, memory, collective)
+    terms["bound_s"] = total
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (useful work) per cell — catches remat/redundancy waste
+# ---------------------------------------------------------------------------
+
+def model_flops(arch_id: str, shape_id: str) -> float:
+    """Global 'textbook' FLOPs for one step of the cell."""
+    from repro.configs import get_arch
+    from repro.configs import shapes as SH
+    spec = get_arch(arch_id)
+    cell = SH.get_cell(arch_id, shape_id)
+    d = cell.dims
+    fam = spec.family
+    cfg = spec.config
+
+    if fam == "lm":
+        B, S = d["batch"], d["seq"]
+        N = cfg.active_param_count()
+        if cell.step_kind == "train":
+            # 6·N·D + attention quadratic term (12·L·d_attn·S² per seq ×3)
+            attn = 3 * cfg.n_layers * 4 * B * S * S * cfg.qkv_dim
+            return 6.0 * N * (B * S) + attn
+        if cell.step_kind == "prefill":
+            attn = cfg.n_layers * 4 * B * S * S * cfg.qkv_dim * 0.5
+            return 2.0 * N * (B * S) + attn
+        # decode: one token per sequence + KV attention
+        attn = cfg.n_layers * 4 * B * S * cfg.qkv_dim
+        return 2.0 * N * B + attn
+
+    if fam in ("dlrm", "din", "bert4rec", "xdeepfm"):
+        B = d.get("n_candidates", d["batch"]) if cell.step_kind == "retrieval" \
+            else d["batch"]
+        dense = _recsys_dense_params(spec)
+        mult = 6.0 if cell.step_kind == "train" else 2.0
+        return mult * dense * B
+
+    if fam == "gat":
+        return _gat_flops(spec, cell)
+    raise ValueError(fam)
+
+
+def _recsys_dense_params(spec) -> float:
+    cfg = spec.config
+    total = cfg.param_count()
+    if spec.family in ("dlrm", "xdeepfm", "din"):
+        emb = cfg.total_vocab * cfg.embed_dim
+        if spec.family == "xdeepfm":
+            emb = cfg.total_vocab * (cfg.embed_dim + 1)
+        return max(total - emb, 1)
+    # bert4rec: per-sequence transformer cost + the MLM head. The head's
+    # useful work depends on the loss: full-catalog softmax scores S x V,
+    # sampled softmax scores max_masked x (1 + n_negatives).
+    emb = cfg.vocab * cfg.embed_dim
+    per_tok = max(cfg.param_count() - emb - cfg.seq_len * cfg.embed_dim, 1)
+    body = per_tok * cfg.seq_len
+    if getattr(cfg, "loss", "full") == "sampled":
+        head = cfg.max_masked * (1 + cfg.n_negatives) * cfg.embed_dim
+    else:
+        head = cfg.seq_len * cfg.vocab * cfg.embed_dim
+    return body + head
+
+
+def _gat_flops(spec, cell) -> float:
+    d = cell.dims
+    cfg = spec.config
+    H, O = cfg.n_heads, cfg.d_hidden
+    if cell.shape_id == "minibatch_lg":
+        from repro.configs.shapes import sampled_block_dims
+        bd = sampled_block_dims(d["batch_nodes"], d["fanout0"], d["fanout1"])
+        n, e = bd["n0"], bd["e0"] + bd["e1"]
+        feat = d["d_feat"]
+    elif cell.shape_id == "molecule":
+        n = d["n_graphs"] * d["nodes_per"]
+        e = d["n_graphs"] * d["edges_per"]
+        feat = d["d_feat"]
+    else:
+        n, e, feat = d["n_nodes"], d["n_edges"], d["d_feat"]
+    l1 = 2 * n * feat * H * O + 8 * e * H * O
+    l2 = 2 * n * H * O * d["n_classes"] + 8 * e * d["n_classes"]
+    return 3.0 * (l1 + l2)   # fwd+bwd

@@ -1,0 +1,120 @@
+"""Training CLI: ``python -m repro.launch.train --arch dlrm-rm2 [...]``.
+
+Runs REDUCED configs end-to-end on local devices (this container is CPU) or
+full configs on a real slice — same code path: config -> params -> partition
+-> jit(train_step) -> loop with checkpointing, straggler watchdog, restart.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.configs import get_arch
+from repro.data import synthetic as syn
+from repro.dist.fault import StragglerWatchdog
+from repro.train.train_step import TrainState, build_train_step, default_optimizer
+
+
+def make_batch_fn(spec, cfg):
+    fam = spec.family
+    if fam == "lm":
+        return lambda batch, seed, step: syn.lm_batch(
+            batch, 64, cfg.vocab, seed=seed, step=step)
+    if fam == "dlrm":
+        return lambda batch, seed, step: syn.dlrm_batch(
+            cfg.vocab_sizes, cfg.n_dense, batch, seed=seed, step=step,
+            multi_hot=cfg.multi_hot)
+    if fam == "din":
+        return lambda batch, seed, step: syn.din_batch(
+            cfg.n_items, cfg.n_cates, cfg.seq_len, batch, seed=seed,
+            step=step)
+    if fam == "bert4rec":
+        return lambda batch, seed, step: syn.bert4rec_batch(
+            cfg.n_items, cfg.seq_len, batch, seed=seed, step=step)
+    if fam == "xdeepfm":
+        return lambda batch, seed, step: syn.xdeepfm_batch(
+            cfg.vocab_sizes, batch, seed=seed, step=step)
+    raise ValueError(f"use examples/ for family {fam}")
+
+
+def build_loss(spec, cfg, statics):
+    fam = spec.family
+    if fam == "lm":
+        from repro.models import transformer as T
+        return lambda p, b: T.lm_loss(cfg, p, b["tokens"], b["labels"])
+    mod = __import__(f"repro.models.{fam}", fromlist=["loss_fn"])
+    return lambda p, b: mod.loss_fn(cfg, p, statics, b)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--emb-lr", type=float, default=1e-2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (needs a real accelerator slice)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.config if args.full else spec.reduced
+    key = jax.random.key(args.seed)
+
+    statics = None
+    if spec.family == "lm":
+        from repro.models import transformer as T
+        params = T.init_params(cfg, key)
+    else:
+        mod = __import__(f"repro.models.{spec.family}",
+                         fromlist=["init_params"])
+        params, statics = mod.init_params(cfg, key)
+
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={args.arch} family={spec.family} params={n_params:,}")
+
+    opt = default_optimizer(lr=args.lr, emb_lr=args.emb_lr)
+    loss_fn = build_loss(spec, cfg, statics)
+    step_fn = jax.jit(build_train_step(loss_fn, opt,
+                                       compress_grads=args.compress_grads))
+    state = TrainState.create(params, opt, compress=args.compress_grads)
+
+    start = 0
+    ck = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if ck and latest_step(args.ckpt_dir) is not None:
+        state, start = restore_checkpoint(args.ckpt_dir, state)
+        print(f"restored step {start}")
+
+    batch_fn = make_batch_fn(spec, cfg)
+    wd = StragglerWatchdog()
+    t_begin = time.time()
+    for step in range(start, args.steps):
+        b = batch_fn(args.batch, args.seed, step)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        t0 = time.time()
+        state, metrics = step_fn(state, b)
+        loss = float(metrics["loss"])
+        wd.observe(step, time.time() - t0)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"({(time.time() - t0) * 1e3:.0f} ms)")
+        if ck and (step + 1) % args.ckpt_every == 0:
+            ck.save(step + 1, state)
+    if ck:
+        ck.save(args.steps, state)
+        ck.join()
+    print(f"done in {time.time() - t_begin:.1f}s; stragglers={wd.events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: LM transformers (dense/GQA/MoE), recsys (DLRM/DIN/BERT4Rec/
+xDeepFM), and GNN (GAT) — pure-function init/apply pytrees, no framework."""

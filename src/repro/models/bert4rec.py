@@ -1,0 +1,216 @@
+"""BERT4Rec (Sun et al., arXiv:1904.06690): bidirectional transformer over the
+user's item sequence, trained with masked-item (cloze) prediction.
+
+Per DESIGN.md §4: the item embedding here is a dense per-position lookup (no
+multi-hot reduction), so UpDLRM's partial-sum caching is inapplicable; the
+non-uniform row placement still applies and the item table is banked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding import BankedTable, DistCtx, banked_gather
+from repro.models import layers as L
+from repro.models.common import dense_init, embed_init, shard, dp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str
+    n_items: int               # catalog size; +1 mask token appended
+    embed_dim: int             # 64
+    n_blocks: int              # 2
+    n_heads: int               # 2
+    seq_len: int               # 200
+    d_ff: int = 256            # 4x embed_dim (paper)
+    dtype: Any = jnp.float32
+    # "full": softmax over the whole catalog (paper-faithful; fine at the
+    # published 3k-50k catalogs). "sampled": shared-negative sampled softmax
+    # over masked positions only (§Perf iteration B) — at a 1M-item catalog
+    # the full (B, S, V) logits are ~1000x wasted compute/traffic.
+    loss: str = "sampled"
+    n_negatives: int = 2048
+    max_masked: int = 40       # static cap: ceil(0.15 * seq_len) + slack
+
+    @property
+    def vocab(self) -> int:
+        return self.n_items + 1   # last row = [mask]
+
+    @property
+    def mask_token(self) -> int:
+        return self.n_items
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        per_block = 4 * d * d + 2 * d * self.d_ff + self.d_ff + d + 4 * d
+        return self.vocab * d + self.seq_len * d + self.n_blocks * per_block
+
+
+def init_params(cfg: Bert4RecConfig, key, plan=None) -> tuple[dict, dict]:
+    from repro.core.partitioning import uniform_partition
+    ks = jax.random.split(key, 12)
+    if plan is None:
+        plan = uniform_partition(cfg.vocab, 1)
+    rows = int(plan.max_rows_per_bank)
+    d, ff, NB = cfg.embed_dim, cfg.d_ff, cfg.n_blocks
+
+    def stk(i, *shape):
+        return jax.vmap(lambda k: dense_init(k, shape, dtype=cfg.dtype))(
+            jax.random.split(ks[i], NB))
+
+    params = {
+        "emb_packed": embed_init(ks[0], (plan.n_banks * rows, d),
+                                 dtype=cfg.dtype),
+        "pos": embed_init(ks[1], (cfg.seq_len, d), dtype=cfg.dtype),
+        "blocks": {
+            "wq": stk(2, d, d), "wk": stk(3, d, d), "wv": stk(4, d, d),
+            "wo": stk(5, d, d),
+            "w_in": stk(6, d, ff), "b_in": jnp.zeros((NB, ff), cfg.dtype),
+            "w_out": stk(7, ff, d), "b_out": jnp.zeros((NB, d), cfg.dtype),
+            "ln1_s": jnp.ones((NB, d), cfg.dtype),
+            "ln1_b": jnp.zeros((NB, d), cfg.dtype),
+            "ln2_s": jnp.ones((NB, d), cfg.dtype),
+            "ln2_b": jnp.zeros((NB, d), cfg.dtype),
+        },
+        "out_bias": jnp.zeros((cfg.vocab,), cfg.dtype),
+    }
+    statics = {
+        "remap_bank": jnp.asarray(plan.bank_of_row, jnp.int32),
+        "remap_slot": jnp.asarray(plan.slot_of_row, jnp.int32),
+        "n_banks": plan.n_banks,
+        "rows_per_bank": rows,
+    }
+    return params, statics
+
+
+def _banked(params, statics) -> BankedTable:
+    return BankedTable(packed=params["emb_packed"],
+                       remap_bank=statics["remap_bank"],
+                       remap_slot=statics["remap_slot"],
+                       n_banks=statics["n_banks"],
+                       rows_per_bank=statics["rows_per_bank"])
+
+
+def encode(cfg: Bert4RecConfig, params: dict, statics: dict, items: Array,
+           dist: DistCtx | None = None) -> Array:
+    """items (B, S) int32 (-1 pad) -> hidden (B, S, d). Bidirectional."""
+    B, S = items.shape
+    t = _banked(params, statics)
+    h = banked_gather(t, items, dist) + params["pos"][None, :S]
+    h = shard(h, dist, dp(dist), None, None).astype(cfg.dtype)
+
+    def block(h, bw):
+        bw = {k_: v_.astype(cfg.dtype) for k_, v_ in bw.items()}
+        x = L.layer_norm(h, bw["ln1_s"], bw["ln1_b"])
+        q = (x @ bw["wq"]).reshape(B, S, cfg.n_heads, -1)
+        k = (x @ bw["wk"]).reshape(B, S, cfg.n_heads, -1)
+        v = (x @ bw["wv"]).reshape(B, S, cfg.n_heads, -1)
+        attn = L.blockwise_attention(q, k, v, causal=False,
+                                     q_chunk=min(1024, S), kv_chunk=min(1024, S))
+        h = h + attn.reshape(B, S, -1) @ bw["wo"]
+        x = L.layer_norm(h, bw["ln2_s"], bw["ln2_b"])
+        h = h + L.gelu_mlp(x, bw["w_in"], bw["b_in"], bw["w_out"], bw["b_out"])
+        return h, None
+
+    h, _ = jax.lax.scan(block, h, params["blocks"])
+    return h
+
+
+def mlm_loss(cfg: Bert4RecConfig, params: dict, statics: dict, batch: dict,
+             dist: DistCtx | None = None) -> Array:
+    """Cloze objective: ``items`` with mask tokens, ``labels`` original ids at
+    masked positions (-100 elsewhere). Output head ties the item embedding.
+
+    cfg.loss == "sampled": gather the <= max_masked masked positions per
+    sequence and score each against its label + n_negatives shared negatives
+    (batch["negatives"]) — the industry-standard approximation at 1M-item
+    catalogs; "full" is the paper-faithful softmax over the catalog.
+    """
+    items, labels = batch["items"], batch["labels"]
+    h = encode(cfg, params, statics, items, dist)
+    sel = labels >= 0
+    t = _banked(params, statics)
+
+    if cfg.loss == "sampled":
+        # static-shape masked-position gather: top_k over the mask
+        m = cfg.max_masked
+        score, pos = jax.lax.top_k(sel.astype(jnp.int32) * 2 - 1, m)
+        valid = score > 0                                        # (B, m)
+        h_m = jnp.take_along_axis(h, pos[..., None], axis=1)     # (B, m, d)
+        lab = jnp.take_along_axis(jnp.where(sel, labels, 0), pos, axis=1)
+        e_pos = banked_gather(t, jnp.where(valid, lab, -1), dist)
+        negs = batch["negatives"]                                # (N,)
+        e_neg = banked_gather(t, negs, dist)                     # (N, d)
+        if dist is not None:
+            from repro.dist.collectives import all_mesh_axes
+            e_neg = shard(e_neg, dist, all_mesh_axes(dist), None)
+        l_pos = jnp.einsum("bmd,bmd->bm", h_m, e_pos,
+                           preferred_element_type=jnp.float32)
+        l_pos = l_pos + params["out_bias"][jnp.where(valid, lab, 0)]
+        l_neg = jnp.einsum("bmd,nd->bmn", h_m, e_neg,
+                           preferred_element_type=jnp.float32)
+        l_neg = l_neg + params["out_bias"][negs][None, None, :]
+        # exclude accidental label==negative collisions
+        coll = lab[..., None] == negs[None, None, :]
+        l_neg = jnp.where(coll, -1e30, l_neg)
+        lse = jnp.logaddexp(
+            jax.nn.logsumexp(l_neg, axis=-1), l_pos)
+        per_tok = jnp.where(valid, lse - l_pos, 0.0)
+        return per_tok.sum() / jnp.maximum(valid.sum(), 1)
+
+    # full-catalog softmax (paper-faithful)
+    from repro.core.embedding import lookup_unsharded
+    table = lookup_unsharded(t, jnp.arange(cfg.vocab)[:, None],
+                             reduce_bag=True)                    # (V, d)
+    logits = jnp.einsum("bsd,vd->bsv", h, table,
+                        preferred_element_type=jnp.float32)
+    logits = logits + params["out_bias"]
+    logits = shard(logits, dist, dp(dist), None, "model")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    safe = jnp.where(sel, labels, 0)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    per_tok = jnp.where(sel, lse - ll, 0.0)
+    return per_tok.sum() / jnp.maximum(sel.sum(), 1)
+
+
+def loss_fn(cfg, params, statics, batch, dist=None):
+    return mlm_loss(cfg, params, statics, batch, dist)
+
+
+def next_item_scores(cfg: Bert4RecConfig, params: dict, statics: dict,
+                     batch: dict, dist: DistCtx | None = None) -> Array:
+    """Serving: append [mask] at the last position, score candidates.
+
+    If batch has ``candidates`` (N,), scores only those (retrieval_cand cell,
+    candidates sharded across the mesh); otherwise scores the full catalog.
+    """
+    items = batch["items"]                                       # (B, S)
+    h = encode(cfg, params, statics, items, dist)[:, -1]         # (B, d)
+    t = _banked(params, statics)
+    cand = batch.get("candidates")
+    if cand is not None and cand.ndim == 2:
+        # per-user candidate slate (two-stage ranking serve): (B, N)
+        emb = banked_gather(t, cand, dist)                       # (B, N, d)
+        return jnp.einsum("bd,bnd->bn", h, emb,
+                          preferred_element_type=jnp.float32)
+    if cand is not None:
+        emb = banked_gather(t, cand, dist)                       # (N, d)
+        if dist is not None:
+            from repro.dist.collectives import all_mesh_axes
+            emb = shard(emb, dist, all_mesh_axes(dist), None)
+        return jnp.einsum("bd,nd->bn", h, emb,
+                          preferred_element_type=jnp.float32)
+    from repro.core.embedding import lookup_unsharded
+    table = lookup_unsharded(t, jnp.arange(cfg.vocab)[:, None], reduce_bag=True)
+    return jnp.einsum("bd,vd->bv", h, table,
+                      preferred_element_type=jnp.float32) + params["out_bias"]
+
+
+# retrieval_cand cell entry point (same signature as the other families)
+retrieval_scores = next_item_scores

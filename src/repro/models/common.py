@@ -1,0 +1,60 @@
+"""Shared model plumbing: initializers, dtype policy, mesh-aware constraints."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import DistCtx
+
+Array = jax.Array
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun-ish) used across the zoo."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(shape[0])
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def shard(x: Array, dist: DistCtx | None, *axes) -> Array:
+    """with_sharding_constraint if a mesh is active, no-op otherwise.
+
+    axes entries: mesh axis name, tuple of names, or None per array dim.
+    """
+    if dist is None:
+        return x
+    spec = jax.sharding.PartitionSpec(*axes)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(dist.mesh, spec))
+
+
+def dp(dist: DistCtx | None):
+    """The batch-sharding axis spec entry for the active mesh."""
+    if dist is None:
+        return None
+    return dist.dp_axes if len(dist.dp_axes) > 1 else dist.dp_axes[0]
+
+
+def cast(x: Array, dtype) -> Array:
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+def split_statics(statics: dict) -> tuple[dict, dict]:
+    """Split a model ``statics`` dict into (array leaves, python-int meta).
+
+    The meta ints (n_banks, rows_per_bank, ...) are STATIC — they shape the
+    banked-table layout — so they must stay out of jit-traced arguments; the
+    launch code passes the arrays as args and re-injects the meta from
+    closure:  loss = lambda p, s, b: f(cfg, p, {**s, **meta}, b).
+    """
+    import numpy as _np
+    arrays = {k: v for k, v in statics.items()
+              if hasattr(v, "ndim") and not isinstance(v, (int, _np.integer))}
+    meta = {k: v for k, v in statics.items() if k not in arrays}
+    return arrays, meta

@@ -1,0 +1,146 @@
+"""DIN — Deep Interest Network (Zhou et al., arXiv:1706.06978).
+
+Target-attention over the user behaviour sequence: attention weights come from
+an MLP over [hist, target, hist−target, hist⊙target] (the paper's activation
+unit, attn_mlp=80-40), then the weighted history sum is concatenated with the
+target embedding and fed to the 200-80 MLP.
+
+Item/category embeddings live in one banked super-table so UpDLRM's
+partitioners apply directly (history lookups are multi-hot bags over items —
+exactly the paper's access pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import BankedTable, DistCtx, banked_gather
+from repro.models.common import dense_init, embed_init, shard, dp
+from repro.models.dlrm import _mlp_params, mlp_apply, bce_loss
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str
+    n_items: int
+    n_cates: int
+    embed_dim: int            # 18 per assignment
+    seq_len: int              # 100
+    attn_mlp: tuple[int, ...]  # (80, 40)
+    mlp: tuple[int, ...]       # (200, 80)
+    dtype: Any = jnp.float32
+
+    @property
+    def total_vocab(self) -> int:
+        return self.n_items + self.n_cates
+
+    def param_count(self) -> int:
+        d = self.embed_dim * 2  # item ++ cate
+        n = self.total_vocab * self.embed_dim
+        dims = [4 * d, *self.attn_mlp, 1]
+        n += sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        dims = [3 * d, *self.mlp, 1]
+        n += sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        return n
+
+
+def init_params(cfg: DINConfig, key, plan=None) -> tuple[dict, dict]:
+    from repro.core.partitioning import uniform_partition
+    k1, k2, k3 = jax.random.split(key, 3)
+    if plan is None:
+        plan = uniform_partition(cfg.total_vocab, 1)
+    rows = int(plan.max_rows_per_bank)
+    d = cfg.embed_dim * 2
+    params = {
+        "emb_packed": embed_init(k1, (plan.n_banks * rows, cfg.embed_dim),
+                                 dtype=cfg.dtype),
+        "attn": _mlp_params(k2, [4 * d, *cfg.attn_mlp, 1], cfg.dtype),
+        "mlp": _mlp_params(k3, [3 * d, *cfg.mlp, 1], cfg.dtype),
+    }
+    statics = {
+        "remap_bank": jnp.asarray(plan.bank_of_row, jnp.int32),
+        "remap_slot": jnp.asarray(plan.slot_of_row, jnp.int32),
+        "n_banks": plan.n_banks,
+        "rows_per_bank": rows,
+        "cate_offset": jnp.int32(cfg.n_items),
+    }
+    return params, statics
+
+
+def _banked(params, statics) -> BankedTable:
+    return BankedTable(packed=params["emb_packed"],
+                       remap_bank=statics["remap_bank"],
+                       remap_slot=statics["remap_slot"],
+                       n_banks=statics["n_banks"],
+                       rows_per_bank=statics["rows_per_bank"])
+
+
+def _pair_embed(t: BankedTable, statics, items: Array, cates: Array,
+                dist) -> Array:
+    """(item ++ category) embedding: (..., 2*D)."""
+    e_i = banked_gather(t, items, dist)
+    c_rows = jnp.where(cates >= 0, cates + statics["cate_offset"], -1)
+    e_c = banked_gather(t, c_rows, dist)
+    return jnp.concatenate([e_i, e_c], axis=-1)
+
+
+def target_attention(p_attn: dict, hist: Array, target: Array,
+                     mask: Array) -> Array:
+    """hist (B, L, d), target (B, d) -> weighted sum (B, d). DIN's activation
+    unit: w = MLP([h, t, h-t, h*t]); weights are NOT softmax-normalized in the
+    original paper — kept raw with mask, as published."""
+    B, Lh, d = hist.shape
+    t = jnp.broadcast_to(target[:, None], hist.shape)
+    feat = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)
+    w = mlp_apply(p_attn, feat, act=jax.nn.sigmoid)[..., 0]     # (B, L)
+    w = jnp.where(mask, w, 0.0)
+    return jnp.einsum("bl,bld->bd", w, hist)
+
+
+def forward(cfg: DINConfig, params: dict, statics: dict, batch: dict,
+            dist: DistCtx | None = None) -> Array:
+    """batch: hist_items/hist_cates (B, L) int32 (-1 pad), target_item/
+    target_cate (B,) int32. Returns logits (B,)."""
+    t = _banked(params, statics)
+    hist = _pair_embed(t, statics, batch["hist_items"], batch["hist_cates"],
+                       dist)                                     # (B, L, 2D)
+    hist = shard(hist, dist, dp(dist), None, None)
+    target = _pair_embed(t, statics, batch["target_item"][:, None],
+                         batch["target_cate"][:, None], dist)[:, 0]
+    mask = batch["hist_items"] >= 0
+    interest = target_attention(params["attn"], hist, target, mask)
+    feat = jnp.concatenate([interest, target, interest * target], axis=-1)
+    return mlp_apply(params["mlp"], feat)[:, 0]
+
+
+def loss_fn(cfg: DINConfig, params: dict, statics: dict, batch: dict,
+            dist: DistCtx | None = None) -> Array:
+    return bce_loss(forward(cfg, params, statics, batch, dist), batch["label"])
+
+
+def retrieval_scores(cfg: DINConfig, params: dict, statics: dict, batch: dict,
+                     dist: DistCtx | None = None) -> Array:
+    """One user history × N candidate items -> (N,) scores, candidates sharded
+    across the whole mesh (batched target-attention, no loop)."""
+    t = _banked(params, statics)
+    hist = _pair_embed(t, statics, batch["hist_items"], batch["hist_cates"],
+                       dist)                                     # (1, L, 2D)
+    mask = batch["hist_items"] >= 0                              # (1, L)
+    cand = batch["candidates"]                                   # (N,)
+    cand_c = batch["candidate_cates"]
+    targ = _pair_embed(t, statics, cand, cand_c, dist)           # (N, 2D)
+    if dist is not None:
+        from repro.dist.collectives import all_mesh_axes
+        targ = shard(targ, dist, all_mesh_axes(dist), None)
+    N = targ.shape[0]
+    histN = jnp.broadcast_to(hist, (N,) + hist.shape[1:])
+    maskN = jnp.broadcast_to(mask, (N,) + mask.shape[1:])
+    interest = target_attention(params["attn"], histN, targ, maskN)
+    feat = jnp.concatenate([interest, targ, interest * targ], axis=-1)
+    return mlp_apply(params["mlp"], feat)[:, 0]

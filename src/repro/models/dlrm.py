@@ -1,0 +1,220 @@
+"""DLRM (Naumov et al., arXiv:1906.00091) with UpDLRM banked embeddings.
+
+All sparse fields share ONE banked super-table (per-field row offsets), so the
+paper's partitioners operate on the union vocabulary exactly like the DPU
+deployment (each DPU group holds tiles of all tables; Fig. 4). Two lookup
+flavours:
+
+  * one-hot fields (Criteo-style ``dlrm-rm2``): dense gather (B, F) -> (B, F, D)
+  * multi-hot bags (the paper's Table-1 datasets): (B, T, L) -> bag sums
+    (B, T, D), optionally via the cache-aware rewritten form (cache ids +
+    residual ids) — Fig. 7's dataflow.
+
+The pairwise dot-product feature interaction is the Pallas ``dot_interaction``
+kernel's reference path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import (
+    BankedTable, DistCtx, banked_embedding_bag, banked_gather)
+from repro.models.common import dense_init, embed_init, shard, dp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    vocab_sizes: tuple[int, ...]       # per sparse field
+    embed_dim: int
+    n_dense: int
+    bot_mlp: tuple[int, ...]           # hidden dims incl. final (== embed_dim)
+    top_mlp: tuple[int, ...]           # hidden dims, final 1 appended
+    multi_hot: int = 1                 # bag length per field (1 => one-hot)
+    interaction: str = "dot"
+    dtype: Any = jnp.float32
+    # §Perf C2: table STORAGE dtype — bf16 halves every table-sized buffer
+    # (gathers, grad scatter, optimizer r/w, stage-3 psum) while the row-wise
+    # Adagrad accumulator stays fp32. Dense compute stays cfg.dtype.
+    emb_dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    def field_offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]]).astype(np.int64)
+
+    def param_count(self) -> int:
+        n = self.total_vocab * self.embed_dim
+        dims = [self.n_dense, *self.bot_mlp]
+        n += sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        n_inter = self.n_sparse + 1
+        top_in = n_inter * (n_inter - 1) // 2 + self.embed_dim
+        dims = [top_in, *self.top_mlp, 1]
+        n += sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        return n
+
+
+def _mlp_params(key, dims: Sequence[int], dtype) -> dict:
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        "w": [dense_init(k, (a, b), dtype=dtype)
+              for k, a, b in zip(ks, dims[:-1], dims[1:])],
+        "b": [jnp.zeros((b,), dtype) for b in dims[1:]],
+    }
+
+
+def mlp_apply(p: dict, x: Array, act=jax.nn.relu, final_act=None) -> Array:
+    n = len(p["w"])
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w + b
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def init_params(cfg: DLRMConfig, key, plan=None) -> tuple[dict, dict]:
+    """Returns (params, statics). ``plan`` is a PartitionPlan over the union
+    vocab; statics carries the row remap (untrained int arrays)."""
+    from repro.core.partitioning import uniform_partition
+    k1, k2, k3 = jax.random.split(key, 3)
+    if plan is None:
+        plan = uniform_partition(cfg.total_vocab, 1)
+    rows_per_bank = int(plan.max_rows_per_bank)
+    packed = embed_init(k1, (plan.n_banks * rows_per_bank, cfg.embed_dim),
+                        dtype=cfg.emb_dtype)
+    params = {
+        "emb_packed": packed,
+        "bot": _mlp_params(k2, [cfg.n_dense, *cfg.bot_mlp], cfg.dtype),
+        "top": _mlp_params(
+            k3,
+            [cfg.n_sparse * (cfg.n_sparse + 1) // 2 + cfg.embed_dim,
+             *cfg.top_mlp, 1],
+            cfg.dtype),
+    }
+    statics = {
+        "remap_bank": jnp.asarray(plan.bank_of_row, jnp.int32),
+        "remap_slot": jnp.asarray(plan.slot_of_row, jnp.int32),
+        "n_banks": plan.n_banks,
+        "rows_per_bank": rows_per_bank,
+        "field_offsets": jnp.asarray(cfg.field_offsets(), jnp.int32),
+    }
+    return params, statics
+
+
+def _banked(params: dict, statics: dict) -> BankedTable:
+    return BankedTable(
+        packed=params["emb_packed"],
+        remap_bank=statics["remap_bank"],
+        remap_slot=statics["remap_slot"],
+        n_banks=statics["n_banks"],
+        rows_per_bank=statics["rows_per_bank"],
+    )
+
+
+def dot_interaction(z: Array) -> Array:
+    """z: (B, F, D) -> (B, F*(F-1)/2) upper-triangular pairwise dots.
+
+    Reference path for kernels/dot_interaction.py.
+    """
+    B, F, D = z.shape
+    zz = jnp.einsum("bfd,bgd->bfg", z, z, preferred_element_type=jnp.float32)
+    iu, ju = np.triu_indices(F, k=1)
+    return zz[:, iu, ju].astype(z.dtype)
+
+
+def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
+            dist: DistCtx | None = None) -> Array:
+    """batch: dense (B, n_dense) fp; sparse (B, F) int32 (one-hot fields) or
+    (B, F, L) multi-hot. Returns logits (B,)."""
+    dense, sparse = batch["dense"], batch["sparse"]
+    B = dense.shape[0]
+    t = _banked(params, statics)
+    # per-field ids -> union-vocab rows
+    if sparse.ndim == 2:
+        rows = sparse + statics["field_offsets"][None, :]
+        rows = jnp.where(sparse >= 0, rows, -1)
+        emb = banked_gather(t, rows, dist)                       # (B, F, D)
+    else:
+        rows = sparse + statics["field_offsets"][None, :, None]
+        rows = jnp.where(sparse >= 0, rows, -1)
+        emb = banked_embedding_bag(t, rows, dist)                # (B, F, D)
+    emb = shard(emb, dist, dp(dist), None, None).astype(cfg.dtype)
+
+    x = mlp_apply(params["bot"], dense.astype(cfg.dtype))        # (B, D)
+    z = jnp.concatenate([x[:, None], emb], axis=1)               # (B, F+1, D)
+    inter = dot_interaction(z)                                   # (B, P)
+    feat = jnp.concatenate([inter, x], axis=-1)
+    logit = mlp_apply(params["top"], feat)[:, 0]
+    return logit
+
+
+def forward_cached(cfg: DLRMConfig, params: dict, statics: dict,
+                   cache_table: BankedTable, batch: dict,
+                   dist: DistCtx | None = None) -> Array:
+    """Cache-aware path (Fig. 7): batch carries rewritten multi-hot bags:
+    ``cache_idx`` (B, T, Lc) entries into the partial-sum cache table and
+    ``residual_idx`` (B, T, Lr) union-vocab rows. Bag sum = cache partials +
+    residual rows — both via the banked lookup, then identical CTR compute."""
+    dense = batch["dense"]
+    t = _banked(params, statics)
+    emb = banked_embedding_bag(t, batch["residual_idx"], dist)
+    emb = emb + banked_embedding_bag(cache_table, batch["cache_idx"], dist)
+    x = mlp_apply(params["bot"], dense.astype(cfg.dtype))
+    z = jnp.concatenate([x[:, None], emb], axis=1)
+    inter = dot_interaction(z)
+    feat = jnp.concatenate([inter, x], axis=-1)
+    return mlp_apply(params["top"], feat)[:, 0]
+
+
+def bce_loss(logits: Array, labels: Array) -> Array:
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def loss_fn(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
+            dist: DistCtx | None = None) -> Array:
+    return bce_loss(forward(cfg, params, statics, batch, dist), batch["label"])
+
+
+def retrieval_scores(cfg: DLRMConfig, params: dict, statics: dict,
+                     batch: dict, dist: DistCtx | None = None) -> Array:
+    """retrieval_cand: one query × N candidate ids for field 0 -> scores (N,).
+
+    Batched-dot formulation: the user side (dense + fields 1..F-1) is computed
+    once; candidate embeddings stream through the interaction in a vectorized
+    tile, sharded over every mesh axis — never a Python loop.
+    """
+    dense, sparse, cand = batch["dense"], batch["sparse"], batch["candidates"]
+    N = cand.shape[0]
+    t = _banked(params, statics)
+    x = mlp_apply(params["bot"], dense.astype(cfg.dtype))        # (1, D)
+    rows = sparse[:, 1:] + statics["field_offsets"][None, 1:]
+    emb_user = banked_gather(t, rows, dist)                      # (1, F-1, D)
+    cand_rows = cand + statics["field_offsets"][0]
+    emb_cand = banked_gather(t, cand_rows, dist)                 # (N, D)
+    if dist is not None:
+        from repro.dist.collectives import all_mesh_axes
+        emb_cand = shard(emb_cand, dist, all_mesh_axes(dist), None)
+    z_user = jnp.concatenate([x[:, None], emb_user], axis=1)     # (1, F, D)
+    zu = jnp.broadcast_to(z_user, (N,) + z_user.shape[1:])
+    z = jnp.concatenate([zu, emb_cand[:, None]], axis=1)         # (N, F+1, D)
+    inter = dot_interaction(z)
+    feat = jnp.concatenate([inter, jnp.broadcast_to(x, (N, x.shape[-1]))], -1)
+    return mlp_apply(params["top"], feat)[:, 0]

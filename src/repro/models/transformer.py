@@ -1,0 +1,369 @@
+"""LM transformer family (llama-style): dense GQA + MoE variants.
+
+Covers smollm-135m/360m, granite-20b (MQA), qwen3-moe-30b-a3b,
+granite-moe-1b-a400m. Pure init/apply; layer weights are stacked on a leading
+L axis and the forward is a ``lax.scan`` with full remat per layer (keeps HLO
+small and activation memory flat — required for the 20B train dry-run).
+
+GQA handling: KV projections are kept replicated (Hkv is small) and KV heads
+are expanded to Hq at the attention site; query heads shard over the ``model``
+axis. Decode uses a sequence-sharded KV cache with a flash-decode partial
+softmax combine (dist/collectives.py) — this is what makes `long_500k`
+(524k-token KV, batch 1) fit: decode attention is O(S), i.e. sub-quadratic,
+see DESIGN.md §4.
+
+The unembed is vocab-sharded and the CE loss is computed in sequence chunks so
+(B, S, V) logits never materialize.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import DistCtx
+from repro.models import layers as L
+from repro.models.common import dense_init, embed_init, shard, dp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int                      # dense ff, or per-expert ff when moe set
+    vocab: int
+    moe: MoESpec | None = None
+    mlp_type: str = "swiglu"       # "swiglu" (llama) | "gelu" (gpt-bigcode)
+    tied_embeddings: bool = False  # unembed = embed.T (smollm/granite)
+    rope_theta: float = 10000.0
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    loss_chunk: int = 512
+    dtype: Any = jnp.bfloat16      # compute dtype
+    param_dtype: Any = jnp.float32
+    # Dry-run accounting mode: unroll every scan (layers, KV chunks, loss
+    # chunks) so compiled cost_analysis counts ALL iterations — XLA reports
+    # while-loop bodies once, which under-counts a 52-layer scan by 52x.
+    # Functionally identical; only the HLO shape changes.
+    unroll: bool = False
+    # "gspmd": inferred sharding of the sort-based dispatch (paper-faithful
+    # naive distribution baseline); "shardmap": explicit expert-parallel
+    # dispatch + psum combine (§Perf iteration A — ~300x less ICI traffic).
+    moe_impl: str = "shardmap"
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    @property
+    def n_mlp_mats(self) -> int:
+        return 3 if self.mlp_type == "swiglu" else 2
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to 256 so embed/unembed shard on any model axis;
+        pad logits are masked to -inf in the loss and serving heads."""
+        return -(-self.vocab // 256) * 256
+
+    def param_count(self) -> int:
+        d, ff, V = self.d_model, self.d_ff, self.vocab
+        attn = d * self.qkv_dim + 2 * d * self.kv_dim + self.qkv_dim * d
+        if self.moe:
+            mlp = (self.moe.n_experts * self.n_mlp_mats * d * ff
+                   + d * self.moe.n_experts)
+        else:
+            mlp = self.n_mlp_mats * d * ff
+        per_layer = attn + mlp + 2 * d
+        emb = V * d if self.tied_embeddings else 2 * V * d
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts only) — for 6·N·D."""
+        if not self.moe:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        attn = d * self.qkv_dim + 2 * d * self.kv_dim + self.qkv_dim * d
+        mlp = self.moe.top_k * self.n_mlp_mats * d * ff + d * self.moe.n_experts
+        emb = self.vocab * d if self.tied_embeddings else 2 * self.vocab * d
+        return self.n_layers * (attn + mlp + 2 * d) + emb + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: LMConfig, key) -> dict:
+    keys = jax.random.split(key, 8)
+    d, pd = cfg.d_model, cfg.param_dtype
+    LN = cfg.n_layers
+
+    def stack(initfn, *shape, k, scale=None):
+        ks = jax.random.split(k, LN)
+        return jax.vmap(lambda kk: initfn(kk, shape, scale=scale, dtype=pd))(ks)
+
+    layer = {
+        "ln1": jnp.ones((LN, d), pd),
+        "ln2": jnp.ones((LN, d), pd),
+        "wq": stack(dense_init, d, cfg.qkv_dim, k=keys[0]),
+        "wk": stack(dense_init, d, cfg.kv_dim, k=keys[1]),
+        "wv": stack(dense_init, d, cfg.kv_dim, k=keys[2]),
+        "wo": stack(dense_init, cfg.qkv_dim, d, k=keys[3]),
+    }
+    if cfg.moe:
+        E, ff = cfg.moe.n_experts, cfg.d_ff
+        layer |= {
+            "w_router": stack(dense_init, d, E, k=keys[4]),
+            "w_gate": stack(dense_init, E, d, ff, k=keys[5],
+                            scale=1.0 / np.sqrt(d)),
+            "w_up": stack(dense_init, E, d, ff, k=keys[6],
+                          scale=1.0 / np.sqrt(d)),
+            "w_down": stack(dense_init, E, ff, d, k=keys[7],
+                            scale=1.0 / np.sqrt(ff)),
+        }
+    else:
+        ff = cfg.d_ff
+        layer |= {
+            "w_up": stack(dense_init, d, ff, k=keys[6]),
+            "w_down": stack(dense_init, ff, d, k=keys[7]),
+        }
+        if cfg.mlp_type == "swiglu":
+            layer["w_gate"] = stack(dense_init, d, ff, k=keys[5])
+    params = {
+        "embed": embed_init(keys[4], (cfg.padded_vocab, d), dtype=pd),
+        "layers": layer,
+        "final_norm": jnp.ones((d,), pd),
+    }
+    if not cfg.tied_embeddings:
+        params["unembed"] = dense_init(keys[3], (d, cfg.padded_vocab),
+                                       dtype=pd)
+    return params
+
+
+def unembed_matrix(cfg: LMConfig, params: dict) -> Array:
+    """(d, V) output projection — embed.T when tied."""
+    if cfg.tied_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: LMConfig, dist: DistCtx | None, h: Array, lw: dict,
+               positions: Array, causal: bool = True) -> Array:
+    """One transformer block. h: (B, S, d)."""
+    B, S, d = h.shape
+    G = cfg.n_heads // cfg.n_kv_heads
+    x = L.rms_norm(h, lw["ln1"].astype(cfg.dtype))
+    q = (x @ lw["wq"].astype(cfg.dtype)).reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = (x @ lw["wk"].astype(cfg.dtype)).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ lw["wv"].astype(cfg.dtype)).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    # GQA -> MHA: expand KV to query heads (local slice only under GSPMD)
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    q = shard(q, dist, dp(dist), None, "model", None)
+    k = shard(k, dist, dp(dist), None, "model", None)
+    v = shard(v, dist, dp(dist), None, "model", None)
+    attn = L.blockwise_attention(q, k, v, causal=causal,
+                                 q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                 unroll=cfg.unroll)
+    attn = attn.reshape(B, S, cfg.qkv_dim)
+    h = h + attn @ lw["wo"].astype(cfg.dtype)
+    h = shard(h, dist, dp(dist), None, None)
+
+    x = L.rms_norm(h, lw["ln2"].astype(cfg.dtype))
+    if cfg.moe:
+        if dist is not None and cfg.moe_impl == "shardmap":
+            y = L.moe_layer_sharded(
+                x, lw["w_router"].astype(cfg.dtype),
+                lw["w_gate"].astype(cfg.dtype), lw["w_up"].astype(cfg.dtype),
+                lw["w_down"].astype(cfg.dtype),
+                top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor, dist=dist)
+        else:
+            xf = x.reshape(B * S, d)
+            y, stats = L.moe_layer(
+                xf, lw["w_router"].astype(cfg.dtype),
+                lw["w_gate"].astype(cfg.dtype), lw["w_up"].astype(cfg.dtype),
+                lw["w_down"].astype(cfg.dtype),
+                top_k=cfg.moe.top_k, capacity_factor=cfg.moe.capacity_factor)
+            y = y.reshape(B, S, d)
+    elif cfg.mlp_type == "swiglu":
+        y = L.glu_mlp(x, lw["w_gate"].astype(cfg.dtype),
+                      lw["w_up"].astype(cfg.dtype),
+                      lw["w_down"].astype(cfg.dtype))
+    else:
+        y = jax.nn.gelu(x @ lw["w_up"].astype(cfg.dtype)) \
+            @ lw["w_down"].astype(cfg.dtype)
+    h = h + y
+    return shard(h, dist, dp(dist), None, None)
+
+
+def forward_hidden(cfg: LMConfig, params: dict, tokens: Array,
+                   dist: DistCtx | None, causal: bool = True) -> Array:
+    """tokens (B, S) -> final hidden (B, S, d). Scan over layers w/ remat."""
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    h = shard(h, dist, dp(dist), None, None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    body = partial(_layer_fwd, cfg, dist, positions=positions, causal=causal)
+    step = jax.checkpoint(lambda hh, lw: (body(hh, lw), None))
+
+    h, _ = jax.lax.scan(step, h, params["layers"],
+                        unroll=cfg.n_layers if cfg.unroll else 1)
+    return L.rms_norm(h, params["final_norm"].astype(cfg.dtype))
+
+
+def chunked_ce_loss(cfg: LMConfig, h: Array, unembed: Array, labels: Array,
+                    dist: DistCtx | None) -> Array:
+    """Mean CE without materializing (B, S, V) logits: scan over S chunks.
+
+    The label log-prob is extracted with a one-hot dot so the vocab-sharded
+    logits are never gathered (GSPMD partial-reduces instead).
+    """
+    B, S, d = h.shape
+    c = min(cfg.loss_chunk, S)
+    assert S % c == 0
+    n = S // c
+    w = unembed.astype(cfg.dtype)
+
+    pad_mask = (jnp.arange(cfg.padded_vocab) < cfg.vocab)
+
+    def step(tot, i):
+        hc = jax.lax.dynamic_slice_in_dim(h, i * c, c, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * c, c, axis=1)
+        logits = jnp.einsum("bsd,dv->bsv", hc, w,
+                            preferred_element_type=jnp.float32)
+        logits = jnp.where(pad_mask, logits, -1e30)   # mask vocab padding
+        logits = shard(logits, dist, dp(dist), None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # bf16 one-hot is EXACT (0/1) and halves this logits-sized buffer
+        onehot = jax.nn.one_hot(lc, cfg.padded_vocab, dtype=jnp.bfloat16)
+        ll = jnp.einsum("bsv,bsv->bs", logits, onehot,
+                        preferred_element_type=jnp.float32)
+        return tot + (lse - ll).sum(), None
+
+    tot, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), jnp.arange(n),
+                          unroll=n if cfg.unroll else 1)
+    return tot / (B * S)
+
+
+def lm_loss(cfg: LMConfig, params: dict, tokens: Array, labels: Array,
+            dist: DistCtx | None = None) -> Array:
+    h = forward_hidden(cfg, params, tokens, dist)
+    return chunked_ce_loss(cfg, h, unembed_matrix(cfg, params), labels, dist)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    k: Array        # (L, B, S_max, Hkv, Dh)
+    v: Array
+    length: Array   # () int32 — tokens already in cache
+
+    @classmethod
+    def empty(cls, cfg: LMConfig, batch: int, s_max: int):
+        shp = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.d_head)
+        return cls(k=jnp.zeros(shp, cfg.dtype), v=jnp.zeros(shp, cfg.dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def decode_step(cfg: LMConfig, params: dict, cache: KVCache, token: Array,
+                dist: DistCtx | None = None,
+                seq_axes: tuple[str, ...] = ("model",),
+                ) -> tuple[Array, KVCache]:
+    """One decode step: token (B,) -> logits (B, V), updated cache.
+
+    KV cache is sequence-sharded over ``seq_axes``; attention uses the
+    flash-decode partial-softmax combine across those axes.
+    """
+    from repro.dist.collectives import seqsharded_decode_attention
+
+    B = token.shape[0]
+    d = cfg.d_model
+    h = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)  # (B, d)
+    pos = cache.length
+
+    def layer(carry, xs):
+        h = carry
+        lw, kc, vc = xs
+        x = L.rms_norm(h, lw["ln1"].astype(cfg.dtype))
+        q = (x @ lw["wq"].astype(cfg.dtype)).reshape(B, cfg.n_heads, cfg.d_head)
+        k = (x @ lw["wk"].astype(cfg.dtype)).reshape(B, cfg.n_kv_heads, cfg.d_head)
+        v = (x @ lw["wv"].astype(cfg.dtype)).reshape(B, cfg.n_kv_heads, cfg.d_head)
+        posb = jnp.full((B, 1), pos)
+        q = L.apply_rope(q[:, None], posb, cfg.rope_theta)[:, 0]
+        k = L.apply_rope(k[:, None], posb, cfg.rope_theta)[:, 0]
+        attn, kc, vc = seqsharded_decode_attention(
+            q, k, v, kc, vc, pos, dist=dist, seq_axes=seq_axes)
+        h = h + attn.reshape(B, cfg.qkv_dim) @ lw["wo"].astype(cfg.dtype)
+        x = L.rms_norm(h, lw["ln2"].astype(cfg.dtype))
+        if cfg.moe:
+            y, _ = L.moe_layer(
+                x, lw["w_router"].astype(cfg.dtype),
+                lw["w_gate"].astype(cfg.dtype), lw["w_up"].astype(cfg.dtype),
+                lw["w_down"].astype(cfg.dtype),
+                top_k=cfg.moe.top_k, capacity_factor=2.0)
+        elif cfg.mlp_type == "swiglu":
+            y = L.glu_mlp(x, lw["w_gate"].astype(cfg.dtype),
+                          lw["w_up"].astype(cfg.dtype),
+                          lw["w_down"].astype(cfg.dtype))
+        else:
+            y = jax.nn.gelu(x @ lw["w_up"].astype(cfg.dtype)) \
+                @ lw["w_down"].astype(cfg.dtype)
+        return h + y, (kc, vc)
+
+    h, (k_new, v_new) = jax.lax.scan(
+        layer, h, (params["layers"], cache.k, cache.v),
+        unroll=cfg.n_layers if cfg.unroll else 1)
+    h = L.rms_norm(h, params["final_norm"].astype(cfg.dtype))
+    logits = jnp.einsum("bd,dv->bv", h,
+                        unembed_matrix(cfg, params).astype(cfg.dtype),
+                        preferred_element_type=jnp.float32)
+    logits = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, logits, -1e30)
+    logits = shard(logits, dist, dp(dist) if token.shape[0] > 1 else None, "model")
+    return logits, KVCache(k=k_new, v=v_new, length=cache.length + 1)
+
+
+def prefill(cfg: LMConfig, params: dict, tokens: Array,
+            dist: DistCtx | None = None) -> Array:
+    """Prefill: (B, S) -> last-position logits (B, V). Chunked attention keeps
+    the 32k×32k score matrix off HBM; KV cache fill is a byproduct omitted here
+    (the dry-run measures the compute path)."""
+    h = forward_hidden(cfg, params, tokens, dist)
+    last = h[:, -1]
+    logits = jnp.einsum("bd,dv->bv", last,
+                        unembed_matrix(cfg, params).astype(cfg.dtype),
+                        preferred_element_type=jnp.float32)
+    logits = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, logits, -1e30)
+    return shard(logits, dist, dp(dist), "model")

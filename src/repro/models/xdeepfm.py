@@ -1,0 +1,139 @@
+"""xDeepFM (Lian et al., arXiv:1803.05170): CIN + deep MLP + linear.
+
+CIN layer k: X^{k+1}_{h} = sum_{i,j} W^{k,h}_{ij} (X^k_i ∘ X^0_j) — computed
+as an outer product along the embedding dim followed by a field-compressing
+einsum (the paper's "1D conv" view). Field embeddings come from one banked
+super-table (one-hot fields), so UpDLRM row partitioning applies; partial-sum
+caching degenerates to hot-row caching (noted in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import BankedTable, DistCtx, banked_gather
+from repro.models.common import dense_init, embed_init, shard, dp
+from repro.models.dlrm import _mlp_params, mlp_apply, bce_loss
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str
+    vocab_sizes: tuple[int, ...]   # 39 fields
+    embed_dim: int                 # 10
+    cin_layers: tuple[int, ...]    # (200, 200, 200)
+    mlp: tuple[int, ...]           # (400, 400)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    def field_offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]]).astype(np.int64)
+
+    def param_count(self) -> int:
+        m, D = self.n_fields, self.embed_dim
+        n = self.total_vocab * (D + 1)     # embeddings + linear (dim-1) weights
+        h_prev = m
+        for h in self.cin_layers:
+            n += h * h_prev * m
+            h_prev = h
+        n += sum(self.cin_layers)          # sum-pool -> logit weights
+        dims = [m * D, *self.mlp, 1]
+        n += sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        return n
+
+
+def init_params(cfg: XDeepFMConfig, key, plan=None) -> tuple[dict, dict]:
+    from repro.core.partitioning import uniform_partition
+    ks = jax.random.split(key, 4 + len(cfg.cin_layers))
+    if plan is None:
+        plan = uniform_partition(cfg.total_vocab, 1)
+    rows = int(plan.max_rows_per_bank)
+    m, D = cfg.n_fields, cfg.embed_dim
+    cin_w = []
+    h_prev = m
+    for i, h in enumerate(cfg.cin_layers):
+        cin_w.append(dense_init(ks[3 + i], (h, h_prev, m),
+                                scale=1.0 / np.sqrt(h_prev * m),
+                                dtype=cfg.dtype))
+        h_prev = h
+    params = {
+        "emb_packed": embed_init(ks[0], (plan.n_banks * rows, D),
+                                 dtype=cfg.dtype),
+        "lin_packed": embed_init(ks[1], (plan.n_banks * rows, 1),
+                                 dtype=cfg.dtype),
+        "cin_w": cin_w,
+        "cin_out": dense_init(ks[2], (int(sum(cfg.cin_layers)), 1),
+                              dtype=cfg.dtype),
+        "mlp": _mlp_params(ks[-1], [m * D, *cfg.mlp, 1], cfg.dtype),
+    }
+    statics = {
+        "remap_bank": jnp.asarray(plan.bank_of_row, jnp.int32),
+        "remap_slot": jnp.asarray(plan.slot_of_row, jnp.int32),
+        "n_banks": plan.n_banks,
+        "rows_per_bank": rows,
+        "field_offsets": jnp.asarray(cfg.field_offsets(), jnp.int32),
+    }
+    return params, statics
+
+
+def _banked(params, statics, leaf) -> BankedTable:
+    return BankedTable(packed=params[leaf],
+                       remap_bank=statics["remap_bank"],
+                       remap_slot=statics["remap_slot"],
+                       n_banks=statics["n_banks"],
+                       rows_per_bank=statics["rows_per_bank"])
+
+
+def cin(x0: Array, cin_w: list[Array]) -> Array:
+    """x0: (B, m, D) -> concat of sum-pooled CIN features (B, sum(H_k))."""
+    xk = x0
+    pooled = []
+    for w in cin_w:
+        # z: (B, H_prev, m, D) outer product along fields, shared over D
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)
+        xk = jnp.einsum("bhmd,ohm->bod", z, w)      # compress to H_k fields
+        pooled.append(xk.sum(-1))                   # (B, H_k)
+    return jnp.concatenate(pooled, axis=-1)
+
+
+def forward(cfg: XDeepFMConfig, params: dict, statics: dict, batch: dict,
+            dist: DistCtx | None = None) -> Array:
+    """batch: sparse (B, m) int32 field values. Returns logits (B,)."""
+    sparse = batch["sparse"]
+    rows = sparse + statics["field_offsets"][None, :]
+    rows = jnp.where(sparse >= 0, rows, -1)
+    emb = banked_gather(_banked(params, statics, "emb_packed"), rows, dist)
+    emb = shard(emb, dist, dp(dist), None, None)                # (B, m, D)
+    lin = banked_gather(_banked(params, statics, "lin_packed"), rows, dist)
+    logit_lin = lin[..., 0].sum(-1)                              # (B,)
+    logit_cin = (cin(emb, params["cin_w"]) @ params["cin_out"])[:, 0]
+    B = emb.shape[0]
+    logit_dnn = mlp_apply(params["mlp"], emb.reshape(B, -1))[:, 0]
+    return logit_lin + logit_cin + logit_dnn
+
+
+def loss_fn(cfg, params, statics, batch, dist=None):
+    return bce_loss(forward(cfg, params, statics, batch, dist), batch["label"])
+
+
+def retrieval_scores(cfg: XDeepFMConfig, params: dict, statics: dict,
+                     batch: dict, dist: DistCtx | None = None) -> Array:
+    """One query, N candidate values for field 0, batched (N,) scoring."""
+    sparse, cand = batch["sparse"], batch["candidates"]          # (1,m), (N,)
+    N = cand.shape[0]
+    sp = jnp.broadcast_to(sparse, (N, sparse.shape[1]))
+    sp = sp.at[:, 0].set(cand)
+    return forward(cfg, params, statics, {"sparse": sp}, dist)

@@ -1,0 +1,1 @@
+"""Serving substrate: per-family serve-step builders + request batching."""

@@ -1,0 +1,96 @@
+"""Serve-step builders per family + a micro-batching request queue.
+
+The recsys serve path is the paper's object of study: p99-latency online
+inference (batch 512), offline bulk scoring (262k), and retrieval scoring
+(1 query x 1M candidates). The LM paths are prefill and KV-cache decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def build_recsys_serve(family_mod, cfg, statics, dist=None):
+    """CTR scoring: forward + sigmoid."""
+    def serve(params, batch):
+        logits = family_mod.forward(cfg, params, statics, batch, dist)
+        return jax.nn.sigmoid(logits)
+    return serve
+
+
+def build_retrieval_serve(family_mod, cfg, statics, dist=None, top_k: int = 128):
+    """1 query x N candidates -> (top-k scores, top-k ids)."""
+    def serve(params, batch):
+        scores = family_mod.retrieval_scores(cfg, params, statics, batch, dist)
+        return jax.lax.top_k(scores, top_k)
+    return serve
+
+
+def build_lm_decode(cfg, dist=None, seq_axes=("model",)):
+    from repro.models.transformer import decode_step
+
+    def serve(params, cache, token):
+        return decode_step(cfg, params, cache, token, dist, seq_axes=seq_axes)
+    return serve
+
+
+def build_lm_prefill(cfg, dist=None):
+    from repro.models.transformer import prefill
+
+    def serve(params, tokens):
+        return prefill(cfg, params, tokens, dist)
+    return serve
+
+
+# ---------------------------------------------------------------------------
+# request micro-batcher (the online-inference half of the paper's Fig. 4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    features: dict
+    t_arrival: float = dataclasses.field(default_factory=time.monotonic)
+
+
+class MicroBatcher:
+    """Collects requests into fixed-size batches (pad the tail) so the jitted
+    serve step sees one static shape; tracks per-request latency."""
+
+    def __init__(self, batch_size: int, pad_request: dict):
+        self.batch_size = batch_size
+        self.pad_request = pad_request
+        self.queue: deque[Request] = deque()
+        self.latencies: list[float] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def ready(self) -> bool:
+        return len(self.queue) > 0
+
+    def next_batch(self) -> tuple[list[Request], dict]:
+        reqs = [self.queue.popleft()
+                for _ in range(min(self.batch_size, len(self.queue)))]
+        feats = {}
+        n_pad = self.batch_size - len(reqs)
+        for key in self.pad_request:
+            rows = [r.features[key] for r in reqs]
+            rows += [self.pad_request[key]] * n_pad
+            feats[key] = jnp.stack([jnp.asarray(r) for r in rows])
+        return reqs, feats
+
+    def complete(self, reqs: list[Request]) -> None:
+        now = time.monotonic()
+        self.latencies.extend(now - r.t_arrival for r in reqs)
+
+    def p99(self) -> float:
+        if not self.latencies:
+            return 0.0
+        s = sorted(self.latencies)
+        return s[min(len(s) - 1, int(0.99 * len(s)))]

@@ -1,0 +1,27 @@
+"""Sparse/ragged primitives built from JAX first principles.
+
+JAX has no native EmbeddingBag and no CSR/CSC sparse support (BCOO only), so the
+gather/segment machinery that recsys + GNN architectures need is implemented here
+from ``jnp.take`` + ``jax.ops.segment_sum`` — this IS part of the system, not a
+stub (see kernel_taxonomy §B.6/B.11).
+"""
+from repro.sparse.ops import (
+    embedding_bag,
+    embedding_bag_onehot,
+    segment_softmax,
+    segment_sum,
+    segment_max,
+    segment_mean,
+)
+from repro.sparse.sampler import NeighborSampler, build_csr
+
+__all__ = [
+    "embedding_bag",
+    "embedding_bag_onehot",
+    "segment_softmax",
+    "segment_sum",
+    "segment_max",
+    "segment_mean",
+    "NeighborSampler",
+    "build_csr",
+]

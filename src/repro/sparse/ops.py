@@ -1,0 +1,108 @@
+"""EmbeddingBag + segment reductions from JAX first principles.
+
+The multi-hot embedding lookup (``embedding_bag``) is THE hot path of the paper:
+DLRM's sparse features are ragged bags of indices per sample; the bag is gathered
+from a (vocab, dim) table and reduced (sum/mean).  UPMEM DPUs do the gather+reduce
+near memory; our TPU analogue is kernels/embedding_bag.py — this module is the
+portable pure-jnp implementation used as the oracle and the CPU path.
+
+Ragged bags are carried in CSR-ish (indices, offsets) form exactly like
+``torch.nn.EmbeddingBag``: ``indices`` is the flat int32 stream, ``offsets[i]`` is
+the start of bag ``i`` (so ``offsets`` has length ``batch`` and bags are
+``indices[offsets[i]:offsets[i+1]]``).  For jit-ability all shapes are static; a
+``valid`` length or padded ``-1`` entries mark ragged ends.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# segment reductions — thin wrappers so callers never touch jax.ops directly and
+# we keep one place to swap implementations (e.g. sorted segment ids fast path).
+segment_sum = jax.ops.segment_sum
+segment_max = jax.ops.segment_max
+
+
+def segment_mean(data: Array, segment_ids: Array, num_segments: int) -> Array:
+    tot = jax.ops.segment_sum(data, segment_ids, num_segments)
+    cnt = jax.ops.segment_sum(jnp.ones_like(segment_ids, dtype=data.dtype),
+                              segment_ids, num_segments)
+    return tot / jnp.maximum(cnt, 1.0)[..., None] if data.ndim > 1 else tot / jnp.maximum(cnt, 1.0)
+
+
+def segment_softmax(scores: Array, segment_ids: Array, num_segments: int) -> Array:
+    """Softmax over variable-length segments (GAT edge-softmax primitive)."""
+    smax = jax.ops.segment_max(scores, segment_ids, num_segments)
+    # -inf for empty segments -> replace to keep exp finite
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    ex = jnp.exp(scores - smax[segment_ids])
+    denom = jax.ops.segment_sum(ex, segment_ids, num_segments)
+    return ex / jnp.maximum(denom[segment_ids], 1e-20)
+
+
+def offsets_to_segment_ids(offsets: Array, total: int) -> Array:
+    """CSR offsets (len batch, offsets[0]==0) -> per-element bag id (len total)."""
+    # scatter 1 at each bag start (except bag 0), cumsum -> segment ids
+    marks = jnp.zeros((total,), jnp.int32).at[offsets[1:]].add(1)
+    return jnp.cumsum(marks)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bags", "combiner"))
+def embedding_bag(
+    table: Array,
+    indices: Array,
+    offsets: Array,
+    *,
+    num_bags: int,
+    combiner: Literal["sum", "mean"] = "sum",
+) -> Array:
+    """Ragged multi-hot lookup-and-reduce: the DLRM SparseLengthsSum op.
+
+    ``indices`` entries < 0 are padding and contribute zero (lets callers pad
+    ragged bags to a static total length).
+    """
+    total = indices.shape[0]
+    seg = offsets_to_segment_ids(offsets, total)
+    valid = indices >= 0
+    safe_idx = jnp.where(valid, indices, 0)
+    rows = jnp.take(table, safe_idx, axis=0)
+    rows = jnp.where(valid[:, None], rows, 0)
+    out = jax.ops.segment_sum(rows, seg, num_bags)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(valid.astype(table.dtype), seg, num_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def embedding_bag_fixed(table: Array, idx: Array, *, combiner: str = "sum") -> Array:
+    """Dense-rectangular bag lookup: idx (batch, bag_len) -> (batch, dim).
+
+    The common recsys fast path (fixed pooling factor / padded bags). Padding is
+    ``-1``. Used by DLRM/DIN at serve time where bag lengths are padded static.
+    """
+    valid = idx >= 0
+    rows = jnp.take(table, jnp.where(valid, idx, 0), axis=0)  # (B, L, D)
+    rows = jnp.where(valid[..., None], rows, 0)
+    out = rows.sum(axis=1)
+    if combiner == "mean":
+        out = out / jnp.maximum(valid.sum(axis=1, keepdims=True), 1).astype(out.dtype)
+    return out
+
+
+def embedding_bag_onehot(table: Array, idx: Array) -> Array:
+    """MXU-path oracle: bag-sum as one-hot × table matmul (small vocabs only).
+
+    Mathematically identical to ``embedding_bag_fixed(..., 'sum')``; used in
+    property tests as an independent oracle and on-TPU for tiny tables where a
+    dense matmul beats a gather.
+    """
+    V = table.shape[0]
+    onehot = jax.nn.one_hot(jnp.where(idx >= 0, idx, V), V + 1, dtype=table.dtype)
+    onehot = onehot[..., :V]  # padding row falls off
+    counts = onehot.sum(axis=1)  # (B, V) multi-hot counts
+    return counts @ table

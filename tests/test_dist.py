@@ -1,0 +1,21 @@
+"""Multi-device distribution correctness — runs dist_checks.py in a
+subprocess with 8 forced host devices (keeps this pytest process at 1 device,
+as smoke tests/benches require)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_distribution_checks():
+    script = os.path.join(os.path.dirname(__file__), "dist_checks.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, script], capture_output=True,
+                          text=True, env=env, timeout=880)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "distribution checks failed"
+    assert "ALL DIST CHECKS PASSED" in proc.stdout

@@ -1,0 +1,92 @@
+"""Analytic hardware model (Eq. 1-3) properties + system-model orderings."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hwmodel import (UPMEM, embedding_stage_latency,
+                                solve_uniform_tile, system_inference_time,
+                                updlrm_layout)
+
+
+class TestMramCurve:
+    def test_plateau_then_rising(self):
+        """Fig. 3: flat 8-32 B, then monotonically rising."""
+        t8 = UPMEM.mram_read_latency(8)
+        t32 = UPMEM.mram_read_latency(32)
+        assert t8 == t32
+        prev = t32
+        for n in (64, 128, 256, 512, 1024, 2048):
+            cur = UPMEM.mram_read_latency(n)
+            assert cur > prev
+            prev = cur
+
+
+class TestStageModel:
+    @given(red=st.floats(10, 400), n_c=st.sampled_from([2, 4, 6, 8]),
+           banks=st.integers(2, 64))
+    @settings(max_examples=30, deadline=None)
+    def test_lookup_linear_in_reduction(self, red, n_c, banks):
+        a = embedding_stage_latency(batch_size=64, avg_reduction=red,
+                                    n_c=n_c, n_banks=banks).lookup
+        b = embedding_stage_latency(batch_size=64, avg_reduction=2 * red,
+                                    n_c=n_c, n_banks=banks).lookup
+        assert np.isclose(b, 2 * a, rtol=1e-6)
+
+    def test_skew_hurts_stage2(self):
+        """A hot bank bounds the parallel lookup time — the §3.2 motivation."""
+        balanced = embedding_stage_latency(
+            batch_size=64, avg_reduction=100, n_c=4, n_banks=8).lookup
+        skewed = embedding_stage_latency(
+            batch_size=64, avg_reduction=100, n_c=4,
+            per_bank_lookup_share=np.array([.5, .1, .1, .1, .05, .05, .05,
+                                            .05])).lookup
+        assert skewed > 3 * balanced
+
+    def test_cache_reduces_lookup(self):
+        no = embedding_stage_latency(batch_size=64, avg_reduction=100,
+                                     n_c=4, n_banks=8)
+        yes = embedding_stage_latency(batch_size=64, avg_reduction=100,
+                                      n_c=4, n_banks=8, cache_hit_rate=0.4)
+        assert yes.lookup < no.lookup
+        assert yes.d_comm == no.d_comm   # stage 3 unchanged (paper Eq.)
+
+    def test_dcomm_grows_with_nc(self):
+        a = embedding_stage_latency(batch_size=64, avg_reduction=100,
+                                    n_c=2, n_banks=8).d_comm
+        b = embedding_stage_latency(batch_size=64, avg_reduction=100,
+                                    n_c=8, n_banks=8).d_comm
+        assert np.isclose(b, 4 * a)
+
+    def test_layout_tradeoff(self):
+        """Larger N_c => more row groups (smaller shares) but wider reads."""
+        rg2, cg2 = updlrm_layout(32, 32, 2)
+        rg8, cg8 = updlrm_layout(32, 32, 8)
+        assert (rg2, cg2) == (2, 16)
+        assert (rg8, cg8) == (8, 4)
+        assert rg2 * cg2 == rg8 * cg8 == 32
+
+    def test_tile_solver_respects_constraints(self):
+        n_r, n_c = solve_uniform_tile(rows=2_360_650, cols=32, n_banks=32,
+                                      batch_size=64, avg_reduction=245.8)
+        assert n_c in (2, 4, 6, 8)
+        assert n_r * n_c * 4 <= UPMEM.mram_bytes
+
+
+class TestSystemModel:
+    def test_fig8_orderings(self):
+        """hybrid < cpu < fae < updlrm (the paper's Fig. 8 ranking)."""
+        kw = dict(batch_size=64, avg_reduction=245.8, n_tables=8, dim=32,
+                  mlp_flops=1e6, n_banks=256)
+        t_cpu = system_inference_time("cpu", **kw)
+        t_hyb = system_inference_time("hybrid", **kw)
+        t_fae = system_inference_time("fae", **kw)
+        t_up = system_inference_time("updlrm", **kw)
+        assert t_hyb > t_cpu > t_fae > t_up
+
+    def test_speedup_grows_with_reduction(self):
+        """Fig. 8: higher avg-reduction => bigger UpDLRM speedup."""
+        def speedup(red):
+            kw = dict(batch_size=64, avg_reduction=red, n_tables=8, dim=32,
+                      mlp_flops=1e6, n_banks=256)
+            return (system_inference_time("cpu", **kw)
+                    / system_inference_time("updlrm", **kw))
+        assert speedup(300) > speedup(50)

@@ -1,0 +1,133 @@
+"""Unit + property tests for the paper's §3 partitioners."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partitioning import (
+    cache_aware_partition,
+    expert_placement,
+    non_uniform_partition,
+    uniform_partition,
+)
+
+
+def zipf_freq(n, a=1.1, seed=0):
+    rng = np.random.default_rng(seed)
+    p = np.arange(1, n + 1, dtype=np.float64) ** (-a)
+    return rng.permutation(p * 1000)
+
+
+class TestUniform:
+    def test_blocks_contiguous_equal(self):
+        plan = uniform_partition(100, 4)
+        plan.validate()
+        assert plan.rows_per_bank.tolist() == [25, 25, 25, 25]
+        assert (plan.bank_of_row[:25] == 0).all()
+        assert (plan.bank_of_row[-25:] == 3).all()
+
+    def test_non_divisible(self):
+        plan = uniform_partition(103, 4)
+        plan.validate()
+        assert plan.rows_per_bank.sum() == 103
+
+    def test_skewed_load_imbalanced(self):
+        freq = zipf_freq(1000)
+        u = uniform_partition(1000, 8, freq)
+        assert u.imbalance() > 1.2  # skew shows up under uniform
+
+
+class TestNonUniform:
+    def test_beats_uniform_on_skew(self):
+        freq = zipf_freq(2000)
+        u = uniform_partition(2000, 8, freq)
+        nu = non_uniform_partition(freq, 8)
+        nu.validate()
+        assert nu.imbalance() <= u.imbalance()
+
+    def test_respects_capacity(self):
+        freq = zipf_freq(100)
+        plan = non_uniform_partition(freq, 4, capacity_rows=25)
+        plan.validate()
+        assert plan.rows_per_bank.max() <= 25
+
+    def test_capacity_infeasible_raises(self):
+        with pytest.raises(ValueError):
+            non_uniform_partition(zipf_freq(100), 4, capacity_rows=10)
+
+    def test_batched_assignment(self):
+        freq = zipf_freq(500)
+        plan = non_uniform_partition(freq, 8, batch=16)
+        plan.validate()
+
+    @given(n=st.integers(16, 400), banks=st.integers(1, 16),
+           a=st.floats(0.1, 2.0), seed=st.integers(0, 100))
+    @settings(max_examples=40, deadline=None)
+    def test_property_valid_and_balanced(self, n, banks, a, seed):
+        freq = zipf_freq(n, a, seed)
+        nu = non_uniform_partition(freq, banks)
+        nu.validate()  # every row exactly once, slots dense
+        u = uniform_partition(n, banks, freq)
+        # greedy is never worse than uniform on aggregate-load balance
+        assert nu.imbalance() <= u.imbalance() + 1e-9
+        # total load preserved
+        assert np.isclose(nu.load_per_bank.sum(), freq.sum())
+
+
+class TestCacheAware:
+    def _mk(self, n=300, n_groups=10, seed=0):
+        rng = np.random.default_rng(seed)
+        freq = zipf_freq(n, seed=seed)
+        used = rng.choice(n, size=(n_groups, 3), replace=False)
+        groups = [np.sort(used[g]) for g in range(n_groups)]
+        benefits = np.array([freq[g].sum() * 0.4 for g in groups])
+        return freq, groups, benefits
+
+    def test_all_rows_assigned(self):
+        freq, groups, benefits = self._mk()
+        plan = cache_aware_partition(freq, groups, benefits, 8)
+        plan.validate()
+
+    def test_group_members_colocated(self):
+        freq, groups, benefits = self._mk()
+        plan = cache_aware_partition(freq, groups, benefits, 8)
+        for g, members in enumerate(groups):
+            banks = set(plan.bank_of_row[members].tolist())
+            assert len(banks) == 1, f"group {g} split across {banks}"
+            assert plan.cache_bank_of_entry[g] == banks.pop()
+
+    def test_benefit_reduces_accounted_load(self):
+        freq, groups, benefits = self._mk()
+        plan = cache_aware_partition(freq, groups, benefits, 8)
+        assert plan.load_per_bank.sum() <= freq.sum()
+
+    def test_cache_capacity_respected(self):
+        freq, groups, benefits = self._mk(n_groups=10)
+        plan = cache_aware_partition(freq, groups, benefits, 4,
+                                     cache_capacity_entries=2)
+        counts = np.bincount(
+            plan.cache_bank_of_entry[plan.cache_bank_of_entry >= 0],
+            minlength=4)
+        assert counts.max() <= 2
+
+    @given(seed=st.integers(0, 50), banks=st.integers(2, 12))
+    @settings(max_examples=25, deadline=None)
+    def test_property_combined_balance(self, seed, banks):
+        freq, groups, benefits = self._mk(seed=seed)
+        plan = cache_aware_partition(freq, groups, benefits, banks)
+        plan.validate()
+        u = uniform_partition(freq.shape[0], banks, freq)
+        # cache-aware should not be wildly worse than uniform on load
+        assert plan.load_per_bank.max() <= u.load_per_bank.max() * 1.5 + 1
+
+
+class TestExpertPlacement:
+    def test_balances_and_caps(self):
+        load = zipf_freq(32)
+        banks = expert_placement(load, 8)
+        counts = np.bincount(banks, minlength=8)
+        assert counts.max() == 4  # 32 experts / 8 banks exactly
+        per_bank = np.zeros(8)
+        np.add.at(per_bank, banks, load)
+        # greedy longest-processing-time bound: max <= mean + heaviest item
+        # (a single mega-hot expert lower-bounds any placement)
+        assert per_bank.max() <= per_bank.mean() + load.max() + 1e-9

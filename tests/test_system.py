@@ -1,0 +1,85 @@
+"""End-to-end behaviour of the paper's system: profile -> mine -> partition
+-> banked train -> cache refresh -> rewritten serving, on the reduced
+updlrm-paper workload. The invariants under test are the paper's:
+
+  1. cache-aware partitioning balances realized bank load at least as well
+     as uniform under a skewed trace,
+  2. the cache-rewritten serving path returns the SAME scores as the plain
+     path (Fig. 7 semantics) after training has moved the table,
+  3. training the banked model reduces loss (the partitioned embedding
+     learns like a plain one).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.cache_runtime import build_cache_table, rewrite_bags
+from repro.core.grace import mine_cooccurrence
+from repro.core.partitioning import cache_aware_partition, uniform_partition
+from repro.data.synthetic import WORKLOADS, multihot_trace, padded_bags
+from repro.models import dlrm as D
+from repro.sparse.ops import embedding_bag_fixed
+from repro.train.train_step import TrainState, build_train_step, default_optimizer
+
+
+def test_updlrm_system_end_to_end():
+    cfg = get_arch("updlrm-paper").reduced
+    n_items = cfg.vocab_sizes[0]
+    rng = np.random.default_rng(0)
+
+    # --- pre-process (Fig. 4): profile -> mine -> partition ---
+    trace = multihot_trace(WORKLOADS["read"], 300, n_items=n_items, seed=0)
+    freq = np.zeros(cfg.total_vocab)
+    for t in range(cfg.n_sparse):
+        for bag in trace:
+            np.add.at(freq, bag + t * n_items, 0.125)
+    cp = mine_cooccurrence(trace[:150], top_items=256, max_groups=16)
+    plan = cache_aware_partition(freq, cp.groups, cp.benefits, 4)
+    plan.validate()
+    u = uniform_partition(cfg.total_vocab, 4, freq)
+    assert plan.imbalance() <= u.imbalance() * 1.5 + 0.5
+
+    # --- banked training ---
+    params, statics = D.init_params(cfg, jax.random.key(0), plan)
+    opt = default_optimizer(lr=5e-3, emb_lr=5e-2)
+    loss_fn = lambda p, b: D.loss_fn(cfg, p, statics, b)
+    step = jax.jit(build_train_step(loss_fn, opt))
+    state = TrainState.create(params, opt)
+
+    B = 16
+    bags = [rng.choice(n_items, size=cfg.multi_hot, replace=False)
+            for _ in range(B)]
+    sparse = np.stack([padded_bags(bags, cfg.multi_hot)] * cfg.n_sparse,
+                      axis=1)
+    batch = {
+        "dense": jnp.asarray(rng.standard_normal((B, cfg.n_dense)),
+                             jnp.float32),
+        "sparse": jnp.asarray(sparse),
+        "label": jnp.asarray(rng.integers(0, 2, B), jnp.float32),
+    }
+    losses = []
+    for _ in range(25):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], (losses[0], losses[-1])
+
+    # --- cache refresh AFTER training + rewritten serving (Fig. 7) ---
+    from repro.core.embedding import lookup_unsharded, BankedTable
+    trained = BankedTable(packed=state.params["emb_packed"],
+                          remap_bank=statics["remap_bank"],
+                          remap_slot=statics["remap_slot"],
+                          n_banks=statics["n_banks"],
+                          rows_per_bank=statics["rows_per_bank"])
+    # logical table for field 0
+    logical = np.asarray(lookup_unsharded(
+        trained, jnp.arange(n_items)[:, None], reduce_bag=True))
+    ctab = build_cache_table(logical, cp)
+    test_bags = [np.unique(rng.choice(256, size=8)) for _ in range(8)]
+    ci, ri = rewrite_bags(test_bags, cp, max_cache_per_bag=8,
+                          max_residual_per_bag=16)
+    got = np.asarray(embedding_bag_fixed(jnp.asarray(ctab), jnp.asarray(ci))
+                     + embedding_bag_fixed(jnp.asarray(logical),
+                                           jnp.asarray(ri)))
+    want = np.stack([logical[b].sum(0) for b in test_bags])
+    np.testing.assert_allclose(got, want, atol=1e-3)

@@ -1,0 +1,142 @@
+"""Training substrate: optimizers, train-step convergence, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import compress as C
+from repro.train import optim as O
+from repro.train.train_step import TrainState, build_train_step, default_optimizer
+
+
+def _quadratic_loss(target):
+    def loss(params, batch):
+        return jnp.mean((params["w"] - target) ** 2) + 0.0 * batch["x"].sum()
+    return loss
+
+
+class TestOptimizers:
+    def _converges(self, opt, steps=200, tol=0.05):
+        target = jnp.array([1.0, -2.0, 3.0])
+        loss = _quadratic_loss(target)
+        step = build_train_step(loss, opt, clip_norm=None)
+        state = TrainState.create({"w": jnp.zeros(3)}, opt)
+        batch = {"x": jnp.zeros(1)}
+        stepj = jax.jit(step)
+        for _ in range(steps):
+            state, m = stepj(state, batch)
+        return float(m["loss"]) < tol
+
+    def test_sgd(self):
+        assert self._converges(O.sgd(0.1))
+
+    def test_sgd_momentum(self):
+        assert self._converges(O.sgd(0.05, momentum=0.9))
+
+    def test_adam(self):
+        assert self._converges(O.adam(0.1))
+
+    def test_rowwise_adagrad_on_table(self):
+        opt = O.rowwise_adagrad(0.5)
+        target = jnp.arange(12.0).reshape(4, 3)
+        loss = lambda p, b: jnp.mean((p["t"] - target) ** 2)
+        step = jax.jit(build_train_step(loss, opt, clip_norm=None))
+        state = TrainState.create({"t": jnp.zeros((4, 3))}, opt)
+        for _ in range(300):
+            state, m = step(state, {})
+        assert float(m["loss"]) < 0.5
+        # accumulator is per-row
+        assert state.opt_state["t"].shape == (4,)
+
+    def test_multi_opt_routing(self):
+        opt = default_optimizer(lr=0.05, emb_lr=0.5)
+        params = {"emb_packed": jnp.zeros((6, 2)), "dense": {"w": jnp.zeros(3)}}
+        target_e = jnp.ones((6, 2))
+        target_w = jnp.array([1.0, 2.0, 3.0])
+        loss = lambda p, b: (jnp.mean((p["emb_packed"] - target_e) ** 2)
+                             + jnp.mean((p["dense"]["w"] - target_w) ** 2))
+        step = jax.jit(build_train_step(loss, opt, clip_norm=None))
+        state = TrainState.create(params, opt)
+        for _ in range(300):
+            state, m = step(state, {})
+        assert float(m["loss"]) < 0.1
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.array([3.0, 4.0])}
+        clipped, norm = O.clip_by_global_norm(g, 1.0)
+        assert np.isclose(float(norm), 5.0)
+        assert np.isclose(float(jnp.linalg.norm(clipped["a"])), 1.0)
+
+    def test_cosine_schedule(self):
+        lr = O.cosine_schedule(1.0, warmup=10, total=100)
+        assert float(lr(0)) == 0.0
+        assert np.isclose(float(lr(10)), 1.0, atol=0.1)
+        assert float(lr(100)) < 0.01
+
+
+class TestCompression:
+    def test_quantize_roundtrip_small_error(self):
+        rng = np.random.default_rng(0)
+        x = jnp.array(rng.standard_normal(1000), jnp.float32)
+        q, s = C.quantize_int8(x)
+        err = np.abs(np.asarray(C.dequantize_int8(q, s) - x))
+        assert err.max() <= float(s) / 2 + 1e-6
+
+    def test_error_feedback_accumulates(self):
+        """With error feedback, the QUANTIZED sum over steps tracks the true
+        sum (residual carries what quantization dropped)."""
+        rng = np.random.default_rng(1)
+        g = jnp.array(rng.standard_normal(100) * 1e-3, jnp.float32)
+        err = {"g": jnp.zeros(100)}
+        tot = np.zeros(100)
+        for _ in range(50):
+            out, err = C.compress_roundtrip({"g": g}, err)
+            tot += np.asarray(out["g"])
+        np.testing.assert_allclose(tot, np.asarray(g) * 50, rtol=0.15,
+                                   atol=1e-3)
+
+    def test_compressed_training_converges(self):
+        opt = O.adam(0.1)
+        target = jnp.array([1.0, -2.0, 3.0])
+        loss = _quadratic_loss(target)
+        step = jax.jit(build_train_step(loss, opt, clip_norm=None,
+                                        compress_grads=True))
+        state = TrainState.create({"w": jnp.zeros(3)}, opt, compress=True)
+        for _ in range(200):
+            state, m = step(state, {"x": jnp.zeros(1)})
+        assert float(m["loss"]) < 0.05
+
+
+class TestLMTraining:
+    def test_tiny_lm_loss_decreases(self):
+        from repro.configs import get_arch
+        from repro.data.synthetic import lm_batch
+        from repro.models import transformer as T
+        cfg = get_arch("smollm-135m").reduced
+        params = T.init_params(cfg, jax.random.key(0))
+        opt = default_optimizer(lr=3e-3, emb_lr=3e-2)
+        loss_fn = lambda p, b: T.lm_loss(cfg, p, b["tokens"], b["labels"])
+        step = jax.jit(build_train_step(loss_fn, opt))
+        state = TrainState.create(params, opt)
+        losses = []
+        for i in range(20):
+            b = lm_batch(4, 32, cfg.vocab, seed=0, step=0)  # memorize 1 batch
+            state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.5, losses[:3] + losses[-3:]
+
+    def test_dlrm_train_decreases(self):
+        from repro.configs import get_arch
+        from repro.data.synthetic import dlrm_batch
+        from repro.models import dlrm as D
+        cfg = get_arch("dlrm-rm2").reduced
+        params, statics = D.init_params(cfg, jax.random.key(0))
+        opt = default_optimizer(lr=1e-2, emb_lr=5e-2)
+        loss_fn = lambda p, b: D.loss_fn(cfg, p, statics, b)
+        step = jax.jit(build_train_step(loss_fn, opt))
+        state = TrainState.create(params, opt)
+        losses = []
+        for i in range(30):
+            b = dlrm_batch(cfg.vocab_sizes, cfg.n_dense, 64, seed=0, step=0)
+            state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], (losses[0], losses[-1])
