@@ -1,0 +1,107 @@
+"""Embedding-bag backend benchmark: jnp scan vs pallas fused kernel.
+
+Times the production lookup (`core/embedding.banked_embedding_bag`) across
+table sizes, bag lengths, and batch, on whatever backend jax reports — on CPU
+the pallas rows run in interpret mode (semantics check + a lower bound no one
+should read as TPU perf; the kernel's DMA pipelining only pays on real HBM).
+
+    PYTHONPATH=src python benchmarks/bench_embedding.py [--out BENCH_embedding.json]
+
+Also exposed as ``embedding_backends()`` for benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# (vocab, dim, batch, bag_len, n_fields) — small enough that interpret-mode
+# pallas stays seconds-fast on CPU; TPU runs can scale these up freely.
+CONFIGS = [
+    (10_000, 64, 32, 8, 1),
+    (10_000, 64, 128, 8, 1),
+    (50_000, 128, 64, 16, 1),
+    (20_000, 32, 32, 16, 4),      # multi-field fused (B, F, L)
+]
+
+REPEATS = 5
+
+
+def _bench_one(v, d, b, l, f, backend, seed=0):
+    from repro.core.embedding import banked_embedding_bag, pack_table
+    from repro.core.partitioning import non_uniform_partition
+
+    rng = np.random.default_rng(seed)
+    table = rng.standard_normal((v, d)).astype(np.float32)
+    bt = pack_table(table, non_uniform_partition(rng.random(v) + 0.1, 8))
+    per_field = v // f
+    offs = jnp.asarray(np.arange(f) * per_field, jnp.int32) if f > 1 else None
+    shape = (b, f, l) if f > 1 else (b, l)
+    idx = jnp.asarray(rng.integers(-1, per_field, shape), jnp.int32)
+
+    fn = jax.jit(lambda t, i: banked_embedding_bag(
+        t, i, None, backend=backend, field_offsets=offs))
+    out = fn(bt, idx)
+    jax.block_until_ready(out)          # compile
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(bt, idx))
+        best = min(best, time.perf_counter() - t0)
+    n_lookups = int(np.prod(shape))
+    gbps = n_lookups * d * 4 / best / 1e9
+    return dict(vocab=v, dim=d, batch=b, bag_len=l, n_fields=f,
+                backend=backend, us_per_call=best * 1e6,
+                effective_gather_gbps=round(gbps, 3))
+
+
+def run_all(backends=("jnp", "pallas")) -> list[dict]:
+    rows = []
+    for cfg in CONFIGS:
+        for backend in backends:
+            rows.append(_bench_one(*cfg, backend))
+    return rows
+
+
+def embedding_backends():
+    """benchmarks/run.py hook: (name, us_per_call, derived) rows."""
+    for r in run_all():
+        name = (f"embedding_{r['backend']}_v{r['vocab']}_d{r['dim']}"
+                f"_b{r['batch']}_l{r['bag_len']}_f{r['n_fields']}")
+        yield name, r["us_per_call"], f"{r['effective_gather_gbps']}GB/s"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_embedding.json")
+    args = ap.parse_args()
+    rows = run_all()
+    doc = {
+        "jax_backend": jax.default_backend(),
+        "pallas_mode": "compiled" if jax.default_backend() == "tpu"
+        else "interpret",
+        "repeats": REPEATS,
+        "results": rows,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(doc, fh, indent=2)
+    print(f"{'config':<34} {'backend':<8} {'us/call':>12} {'GB/s':>8}")
+    for r in rows:
+        cfg = (f"v={r['vocab']} d={r['dim']} b={r['batch']} "
+               f"l={r['bag_len']} f={r['n_fields']}")
+        print(f"{cfg:<34} {r['backend']:<8} {r['us_per_call']:>12.1f} "
+              f"{r['effective_gather_gbps']:>8.3f}")
+    print(f"wrote {args.out} ({len(rows)} rows, "
+          f"pallas={doc['pallas_mode']})")
+
+
+if __name__ == "__main__":
+    main()

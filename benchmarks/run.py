@@ -32,6 +32,8 @@ def main() -> None:
     ]
     if not args.skip_measured:
         benches.append(F.measured_lookup_paths)
+        from benchmarks.bench_embedding import embedding_backends
+        benches.append(embedding_backends)
 
     print("name,us_per_call,derived")
     failed = 0

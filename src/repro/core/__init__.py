@@ -20,6 +20,7 @@ from repro.core.embedding import (
     init_banked,
     banked_embedding_bag,
     banked_gather,
+    banked_cache_residual_bag,
     csr_embedding_bag,
     col_split_embedding_bag,
     lookup_unsharded,

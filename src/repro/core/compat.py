@@ -1,0 +1,30 @@
+"""Version compatibility shims for the pinned container jax (0.4.x).
+
+``jax.shard_map`` and ``jax.sharding.AxisType`` graduated from
+``jax.experimental`` after 0.4.x; model code imports the stable spellings from
+here so a future jax bump is a one-file change.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map(f=None, /, *, mesh, in_specs, out_specs, **kw):
+        # 0.4.x shard_map is strict about replication checks that the stable
+        # API relaxed; check_rep=False matches post-0.5 default behaviour.
+        kw.setdefault("check_rep", False)
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def make_mesh(axis_shapes, axis_names) -> jax.sharding.Mesh:
+    """jax.make_mesh without the axis_types kwarg (absent pre-0.5)."""
+    try:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)

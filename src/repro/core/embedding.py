@@ -13,6 +13,22 @@ physically reordered so bank b's rows are contiguous, giving a global
 device holds exactly its bank.  The row->(bank, slot) remap is two replicated
 ``int32[vocab]`` vectors (8 B/row).
 
+Stage 2 has two interchangeable implementations behind the ``backend`` knob:
+
+  * ``backend='jnp'``    — a segment-scan over the bag length: the accumulator
+    is (..., D) and only ONE (..., D) gather lives at a time, so the
+    (..., L, D) gathered intermediate of a naive take->mask->sum never
+    materializes (the XLA analogue of the paper's in-DPU reduce).
+  * ``backend='pallas'`` — the fused TPU kernel (kernels/embedding_bag.py):
+    scalar-prefetched indices + remap, double-buffered HBM row DMA, ownership
+    mask and per-field offsets applied in-kernel. Off-TPU it runs in
+    interpret mode (tests); on TPU it is the production hot path.
+  * ``backend='auto'``   — 'pallas' on TPU, 'jnp' elsewhere.
+
+Both run *inside* the shard_map (per bank) and both are differentiable: the
+pallas path carries a custom_vjp whose backward is the row scatter-add that is
+the exact transpose of the bag sum.
+
 Column-split mode (the paper's N_c knob) shards the embedding dim instead:
 every bank gathers full bags for its dim-slice (no mask, no psum) and stage 3
 becomes an all-gather of dim slices — the same Eq. 1 tradeoff with TPU
@@ -21,16 +37,30 @@ constants (§Perf explores it).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Sequence
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compat import shard_map
 from repro.core.partitioning import PartitionPlan
 
 Array = jax.Array
+
+BACKENDS = ("auto", "jnp", "pallas")
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return backend
+
+
+def _default_interpret(interpret: bool | None) -> bool:
+    return jax.default_backend() != "tpu" if interpret is None else interpret
 
 
 @jax.tree_util.register_dataclass
@@ -51,6 +81,11 @@ class BankedTable:
     @property
     def dim(self) -> int:
         return self.packed.shape[-1]
+
+    def flat_remap(self) -> Array:
+        """row -> position in the unsharded packed array."""
+        return (self.remap_bank * self.rows_per_bank
+                + self.remap_slot).astype(jnp.int32)
 
 
 def pack_table(table: np.ndarray, plan: PartitionPlan,
@@ -88,23 +123,45 @@ def init_banked(key, plan: PartitionPlan, dim: int, *, scale: float = 0.01,
 
 
 # ---------------------------------------------------------------------------
-# local (single-shard) reference semantics — also the inside of the shard_map
+# stage 2, jnp backend: segment-scan over the bag length
 # ---------------------------------------------------------------------------
 
-def _local_bag_partial(table_local: Array, bank: Array, slot: Array,
-                       idx: Array, my_bank: Array) -> Array:
-    """Stage 2 on one bank: masked gather of owned rows, zeros elsewhere.
+def _field_offsets_per_bag(off: Array, n: int) -> Array:
+    """Bag n of a flattened (..., F, L) batch belongs to field n % F."""
+    return off[jnp.arange(n, dtype=jnp.int32) % off.shape[0]]
 
-    idx: (..., L) padded with -1.  Returns (..., dim) partial bag sums.
+
+def _bag_partial_scan(table: Array, idx: Array, *, remap: Array | None,
+                      bank: Array | None, my_bank, off: Array) -> Array:
+    """Bag sums over the trailing L WITHOUT a (..., L, D) intermediate.
+
+    Scans the bag length, accumulating one (N, D) gather at a time — the jnp
+    rendition of the kernel's streaming accumulate. ``remap`` maps global rows
+    to local slots (identity when None); ``bank``/``my_bank`` apply the PIM
+    ownership mask (skipped when bank is None); ``off`` is the per-field
+    offset vector ((1,) zeros when fields are pre-offset).
     """
-    valid = idx >= 0
-    safe = jnp.where(valid, idx, 0)
-    owner = bank[safe]
-    s = slot[safe]
-    mine = valid & (owner == my_bank)
-    rows = jnp.take(table_local, jnp.where(mine, s, 0), axis=0)
-    rows = jnp.where(mine[..., None], rows, 0)
-    return rows.sum(axis=-2)
+    lead, L = idx.shape[:-1], idx.shape[-1]
+    flat = idx.reshape(-1, L)
+    N = flat.shape[0]
+    offs = _field_offsets_per_bag(off, N)
+    dim = table.shape[-1]
+
+    def body(acc, j):
+        raw = flat[:, j]
+        valid = raw >= 0
+        row = jnp.where(valid, raw + offs, 0)
+        if bank is None:
+            mine = valid
+        else:
+            mine = valid & (bank[row] == my_bank)
+        src = row if remap is None else remap[row]
+        rows = jnp.take(table, jnp.where(mine, src, 0), axis=0)
+        return acc + jnp.where(mine[:, None], rows, 0).astype(acc.dtype), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((N, dim), jnp.float32),
+                          jnp.arange(L))
+    return acc.reshape(*lead, dim).astype(table.dtype)
 
 
 def _local_gather_partial(table_local: Array, bank: Array, slot: Array,
@@ -118,14 +175,145 @@ def _local_gather_partial(table_local: Array, bank: Array, slot: Array,
     return jnp.where(mine[..., None], rows, 0)
 
 
-def lookup_unsharded(t: BankedTable, idx: Array, *, reduce_bag: bool) -> Array:
-    """Single-device semantics (CPU path + oracle): loop banks via reshape."""
-    table = t.packed.reshape(t.n_banks, t.rows_per_bank, t.dim)
-    flat = t.remap_bank * t.rows_per_bank + t.remap_slot
+# ---------------------------------------------------------------------------
+# stage 2, pallas backend: fused kernel + scatter-add custom_vjp
+# ---------------------------------------------------------------------------
+
+def _pad_bags(flat: Array, tile_b: int) -> tuple[Array, int]:
+    from repro.kernels.embedding_bag import pad_leading
+    return pad_leading(flat, tile_b)
+
+
+def _pad_lanes(table: Array, interpret: bool) -> tuple[Array, int]:
+    if interpret:               # no lane constraint off-TPU: skip the copy
+        return table, table.shape[-1]
+    from repro.kernels.embedding_bag import pad_last_dim
+    return pad_last_dim(table)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pallas_bag(cfg: tuple, packed: Array, bank: Array, slot: Array,
+                off: Array, my: Array, idx: Array) -> Array:
+    """One bank's stage-2 partial bag sums via the fused Pallas kernel.
+
+    cfg = (tile_b, interpret). idx (..., L) raw per-field ids; bank/slot the
+    replicated remap; my () int32 bank id (< 0: own everything — the
+    unsharded path, where slot is the flat remap).
+    """
+    from repro.kernels.embedding_bag import banked_embedding_bag_pallas
+    tile_b, interpret = cfg
+    lead, L = idx.shape[:-1], idx.shape[-1]
+    flat, n = _pad_bags(idx.reshape(-1, L).astype(jnp.int32), tile_b)
+    table, d = _pad_lanes(packed, interpret)
+    out = banked_embedding_bag_pallas(
+        table, bank, slot, off, my.reshape(1).astype(jnp.int32), flat,
+        tile_b=tile_b, interpret=interpret)
+    return out[:n, :d].reshape(*lead, d)
+
+
+def _pallas_bag_fwd(cfg, packed, bank, slot, off, my, idx):
+    return _pallas_bag(cfg, packed, bank, slot, off, my, idx), \
+        (packed, bank, slot, off, my, idx)
+
+
+def _pallas_bag_bwd(cfg, res, ct):
+    packed, bank, slot, off, my, idx = res
+    d_tab = _scatter_bag_ct(packed.shape, packed.dtype, bank, slot, my,
+                            idx, ct, off=off)
+    return (d_tab, None, None, None, None, None)
+
+
+_pallas_bag.defvjp(_pallas_bag_fwd, _pallas_bag_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pallas_cache_bag(cfg: tuple, emt_packed: Array, cache_packed: Array,
+                      e_bank: Array, e_slot: Array, c_bank: Array,
+                      c_slot: Array, my: Array, cache_idx: Array,
+                      resid_idx: Array) -> Array:
+    """Fused Fig.-7 stage 2: Σ cache partials + Σ residual rows, one kernel."""
+    from repro.kernels.embedding_bag import fused_cache_bag_pallas
+    tile_b, interpret = cfg
+    lead = cache_idx.shape[:-1]
+    ci, n = _pad_bags(cache_idx.reshape(-1, cache_idx.shape[-1])
+                      .astype(jnp.int32), tile_b)
+    ri, _ = _pad_bags(resid_idx.reshape(-1, resid_idx.shape[-1])
+                      .astype(jnp.int32), tile_b)
+    emt, d = _pad_lanes(emt_packed, interpret)
+    cache, _ = _pad_lanes(cache_packed, interpret)
+    out = fused_cache_bag_pallas(
+        emt, cache, e_bank, e_slot, c_bank, c_slot,
+        my.reshape(1).astype(jnp.int32), ci, ri,
+        tile_b=tile_b, interpret=interpret)
+    return out[:n, :d].reshape(*lead, d)
+
+
+def _pallas_cache_bag_fwd(cfg, emt_packed, cache_packed, e_bank, e_slot,
+                          c_bank, c_slot, my, cache_idx, resid_idx):
+    out = _pallas_cache_bag(cfg, emt_packed, cache_packed, e_bank, e_slot,
+                            c_bank, c_slot, my, cache_idx, resid_idx)
+    return out, (emt_packed, cache_packed, e_bank, e_slot, c_bank, c_slot,
+                 my, cache_idx, resid_idx)
+
+
+def _scatter_bag_ct(shape, dtype, bank, slot, my, idx, ct, *, off=None):
+    """Transpose of the bag sum: scatter ct rows back onto owned slots.
+
+    Scans L like the forward, so the update buffer is one (N, D) slab — the
+    (N*L, D) updates tensor of a flat scatter never materializes. Accumulates
+    in fp32 regardless of the table dtype (thousands of colliding adds onto
+    hot rows would round to zero in a bf16 accumulator), casting to the table
+    dtype at the end — same policy as the kernels' forward accumulator.
+    """
+    L = idx.shape[-1]
+    flat = idx.reshape(-1, L)
+    N = flat.shape[0]
+    ctf = ct.reshape(N, -1).astype(jnp.float32)
+    offs = None if off is None else _field_offsets_per_bag(off, N)
+
+    def body(d_tab, j):
+        raw = flat[:, j]
+        valid = raw >= 0
+        row = jnp.where(valid, raw if offs is None else raw + offs, 0)
+        mine = valid & ((my < 0) | (bank[row] == my))
+        src = jnp.where(mine, slot[row], 0)
+        upd = jnp.where(mine[:, None], ctf, 0)
+        return d_tab.at[src].add(upd), None
+
+    d_tab, _ = jax.lax.scan(body, jnp.zeros(shape, jnp.float32),
+                            jnp.arange(L))
+    return d_tab.astype(dtype)
+
+
+def _pallas_cache_bag_bwd(cfg, res, ct):
+    (emt_packed, cache_packed, e_bank, e_slot, c_bank, c_slot, my,
+     cache_idx, resid_idx) = res
+    d_emt = _scatter_bag_ct(emt_packed.shape, emt_packed.dtype,
+                            e_bank, e_slot, my, resid_idx, ct)
+    d_cache = _scatter_bag_ct(cache_packed.shape, cache_packed.dtype,
+                              c_bank, c_slot, my, cache_idx, ct)
+    return (d_emt, d_cache, None, None, None, None, None, None, None)
+
+
+_pallas_cache_bag.defvjp(_pallas_cache_bag_fwd, _pallas_cache_bag_bwd)
+
+
+# ---------------------------------------------------------------------------
+# single-device semantics
+# ---------------------------------------------------------------------------
+
+def lookup_unsharded(t: BankedTable, idx: Array, *, reduce_bag: bool,
+                     field_offsets: Array | None = None) -> Array:
+    """Single-device semantics (CPU path + oracle), scan formulation."""
+    off = jnp.zeros((1,), jnp.int32) if field_offsets is None \
+        else jnp.asarray(field_offsets, jnp.int32)
+    if reduce_bag:
+        return _bag_partial_scan(t.packed, idx, remap=t.flat_remap(),
+                                 bank=None, my_bank=None, off=off)
+    assert field_offsets is None, "dense gather expects pre-offset rows"
     safe = jnp.where(idx >= 0, idx, 0)
-    rows = jnp.take(table.reshape(-1, t.dim), flat[safe], axis=0)
-    rows = jnp.where((idx >= 0)[..., None], rows, 0)
-    return rows.sum(axis=-2) if reduce_bag else rows
+    rows = jnp.take(t.packed, t.flat_remap()[safe], axis=0)
+    return jnp.where((idx >= 0)[..., None], rows, 0)
 
 
 # ---------------------------------------------------------------------------
@@ -149,15 +337,38 @@ class DistCtx:
 
 
 def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
-                         *, reduce_bag: bool = True) -> Array:
-    """The paper's stages 1-3. idx (B, L) -> (B, dim) [reduce] or (B, L, dim).
+                         *, reduce_bag: bool = True, backend: str = "auto",
+                         field_offsets: Array | None = None,
+                         tile_b: int = 8,
+                         interpret: bool | None = None) -> Array:
+    """The paper's stages 1-3. idx (..., L) -> (..., dim) [reduce] or
+    (..., L, dim).
+
+    ``field_offsets`` fuses all F fields of a (B, F, L) multi-hot batch into
+    one stage-2 pass: bag (b, f) looks up ``idx + field_offsets[f]`` (applied
+    in-kernel / in-scan, only to valid entries).
 
     Under a mesh: shard_map over (dp_axes + bank_axis); indices are sharded on
     batch, replicated across banks (stage 1); each bank computes its partial
-    (stage 2); psum over the bank axis (stage 3).
+    with the selected ``backend`` (stage 2); psum over the bank axis (stage 3).
     """
+    backend = _resolve_backend(backend)
+    interpret = _default_interpret(interpret)
+    if not reduce_bag and field_offsets is not None:
+        raise ValueError("field_offsets requires reduce_bag=True — the dense "
+                         "gather path expects pre-offset union-vocab rows")
+    off = jnp.zeros((1,), jnp.int32) if field_offsets is None \
+        else jnp.asarray(field_offsets, jnp.int32)
+
     if dist is None:
-        return lookup_unsharded(t, idx, reduce_bag=reduce_bag)
+        if not reduce_bag:
+            return lookup_unsharded(t, idx, reduce_bag=False)
+        if backend == "pallas":
+            return _pallas_bag((tile_b, interpret), t.packed, t.remap_bank,
+                               t.flat_remap(), off,
+                               jnp.full((), -1, jnp.int32), idx)
+        return _bag_partial_scan(t.packed, idx, remap=t.flat_remap(),
+                                 bank=None, my_bank=None, off=off)
 
     P = jax.sharding.PartitionSpec
     # batch shards over dp when divisible; tiny/odd batches (retrieval's B=1
@@ -169,21 +380,26 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
     idx_spec = P(dp, *([None] * (idx.ndim - 1)))
     out_spec = P(dp, *([None] * (idx.ndim - (1 if reduce_bag else 0))))
 
-    def fn(packed_local, bank_map, slot_map, idx_local):
+    def fn(packed_local, bank_map, slot_map, off_local, idx_local):
         my = jax.lax.axis_index(bank)
-        if reduce_bag:
-            part = _local_bag_partial(packed_local, bank_map, slot_map,
-                                      idx_local, my)
-        else:
+        if not reduce_bag:
             part = _local_gather_partial(packed_local, bank_map, slot_map,
                                          idx_local, my)
+        elif backend == "pallas":
+            part = _pallas_bag((tile_b, interpret), packed_local, bank_map,
+                               slot_map, off_local,
+                               my.astype(jnp.int32), idx_local)
+        else:
+            part = _bag_partial_scan(packed_local, idx_local,
+                                     remap=slot_map, bank=bank_map,
+                                     my_bank=my, off=off_local)
         return jax.lax.psum(part, bank)
 
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=dist.mesh,
-        in_specs=(P(bank, None), P(), P(), idx_spec),
+        in_specs=(P(bank, None), P(), P(), P(), idx_spec),
         out_specs=out_spec,
-    )(t.packed, t.remap_bank, t.remap_slot, idx)
+    )(t.packed, t.remap_bank, t.remap_slot, off, idx)
 
 
 def banked_gather(t: BankedTable, idx: Array, dist: DistCtx | None) -> Array:
@@ -191,37 +407,164 @@ def banked_gather(t: BankedTable, idx: Array, dist: DistCtx | None) -> Array:
     return banked_embedding_bag(t, idx, dist, reduce_bag=False)
 
 
+def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
+                              cache_idx: Array, residual_idx: Array,
+                              dist: DistCtx | None, *, backend: str = "auto",
+                              tile_b: int = 8,
+                              interpret: bool | None = None) -> Array:
+    """Cache-aware fused lookup (paper Fig. 7): one stage-2 pass computes
+    ``Σ cache_partials + Σ residual_rows`` per bag.
+
+    cache_idx (..., Lc) ids into the partial-sum cache table; residual_idx
+    (..., Lr) union-vocab rows into the EMT. Both tables are banked over the
+    same axis; the combined partial takes ONE psum (half the stage-3 traffic
+    of two separate lookups).
+    """
+    backend = _resolve_backend(backend)
+    interpret = _default_interpret(interpret)
+
+    if dist is None:
+        if backend == "pallas":
+            return _pallas_cache_bag(
+                (tile_b, interpret), t.packed, cache.packed,
+                t.remap_bank, t.flat_remap(), cache.remap_bank,
+                cache.flat_remap(), jnp.full((), -1, jnp.int32),
+                cache_idx, residual_idx)
+        zero = jnp.zeros((1,), jnp.int32)
+        part = _bag_partial_scan(t.packed, residual_idx,
+                                 remap=t.flat_remap(), bank=None,
+                                 my_bank=None, off=zero)
+        return part + _bag_partial_scan(
+            cache.packed, cache_idx, remap=cache.flat_remap(), bank=None,
+            my_bank=None, off=zero).astype(part.dtype)
+
+    P = jax.sharding.PartitionSpec
+    dp_ok = cache_idx.shape[0] % dist.dp_size() == 0
+    dp = (dist.dp_axes if len(dist.dp_axes) > 1 else dist.dp_axes[0]) \
+        if dp_ok else None
+    bank = dist.bank_axis
+    ci_spec = P(dp, *([None] * (cache_idx.ndim - 1)))
+    ri_spec = P(dp, *([None] * (residual_idx.ndim - 1)))
+    out_spec = P(dp, *([None] * (cache_idx.ndim - 1)))
+
+    def fn(emt_local, cache_local, e_bank, e_slot, c_bank, c_slot,
+           ci_local, ri_local):
+        my = jax.lax.axis_index(bank)
+        if backend == "pallas":
+            part = _pallas_cache_bag(
+                (tile_b, interpret), emt_local, cache_local, e_bank, e_slot,
+                c_bank, c_slot, my.astype(jnp.int32), ci_local, ri_local)
+        else:
+            zero = jnp.zeros((1,), jnp.int32)
+            part = _bag_partial_scan(emt_local, ri_local, remap=e_slot,
+                                     bank=e_bank, my_bank=my, off=zero)
+            part = part + _bag_partial_scan(
+                cache_local, ci_local, remap=c_slot, bank=c_bank, my_bank=my,
+                off=zero).astype(part.dtype)
+        return jax.lax.psum(part, bank)
+
+    return shard_map(
+        fn, mesh=dist.mesh,
+        in_specs=(P(bank, None), P(bank, None), P(), P(), P(), P(),
+                  ci_spec, ri_spec),
+        out_specs=out_spec,
+    )(t.packed, cache.packed, t.remap_bank, t.remap_slot,
+      cache.remap_bank, cache.remap_slot, cache_idx, residual_idx)
+
+
+# ---------------------------------------------------------------------------
+# CSR-ragged lookup
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pallas_csr_bag(cfg: tuple, packed: Array, bank: Array, slot: Array,
+                    my: Array, indices: Array, seg: Array,
+                    offs_ext: Array) -> Array:
+    """cfg = (tile_b, interpret, num_bags_padded)."""
+    from repro.kernels.embedding_bag import csr_bag_pallas
+    tile_b, interpret, nb_pad = cfg
+    table, d = _pad_lanes(packed, interpret)
+    out = csr_bag_pallas(table, bank, slot, my.reshape(1).astype(jnp.int32),
+                         indices.astype(jnp.int32), seg.astype(jnp.int32),
+                         offs_ext.astype(jnp.int32), nb_pad,
+                         tile_b=tile_b, interpret=interpret)
+    return out[:, :d]
+
+
+def _pallas_csr_bag_fwd(cfg, packed, bank, slot, my, indices, seg, offs_ext):
+    return _pallas_csr_bag(cfg, packed, bank, slot, my, indices, seg,
+                           offs_ext), (packed, bank, slot, my, indices, seg)
+
+
+def _pallas_csr_bag_bwd(cfg, res, ct):
+    packed, bank, slot, my, indices, seg = res
+    valid = indices >= 0
+    row = jnp.where(valid, indices, 0)
+    mine = valid & ((my < 0) | (bank[row] == my))
+    src = jnp.where(mine, slot[row], 0)
+    upd = jnp.where(mine[:, None], ct[seg], 0).astype(jnp.float32)
+    d_tab = jnp.zeros(packed.shape, jnp.float32).at[src].add(upd)
+    return (d_tab.astype(packed.dtype), None, None, None, None, None, None)
+
+
+_pallas_csr_bag.defvjp(_pallas_csr_bag_fwd, _pallas_csr_bag_bwd)
+
+
 def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
-                      num_bags: int, dist: DistCtx | None) -> Array:
+                      num_bags: int, dist: DistCtx | None, *,
+                      backend: str = "auto", tile_b: int = 8,
+                      interpret: bool | None = None) -> Array:
     """CSR-ragged variant (indices flat + offsets), bag-summed.
 
     Ragged bags cannot shard on batch without equal per-shard totals, so the
     flat stream is replicated across dp as well — used for the paper-faithful
     serving path at modest batch (the paper's batch is 64); the rectangular
     ``banked_embedding_bag`` is the scale path.
+
+    The pallas backend walks each tile's contiguous CSR range with the same
+    double-buffered row DMA as the rectangular kernel (bag id = prefetched
+    segment id), so ragged bags fuse without padding to a rectangle.
     """
+    backend = _resolve_backend(backend)
+    interpret = _default_interpret(interpret)
     from repro.sparse.ops import offsets_to_segment_ids
     total = indices.shape[0]
     seg = offsets_to_segment_ids(offsets, total)
+    nb_pad = -(-num_bags // tile_b) * tile_b
+    offs_ext = jnp.concatenate(
+        [offsets.astype(jnp.int32),
+         jnp.full((nb_pad + 1 - num_bags,), total, jnp.int32)])
 
     if dist is None:
+        if backend == "pallas":
+            out = _pallas_csr_bag((tile_b, interpret, nb_pad), t.packed,
+                                  t.remap_bank, t.flat_remap(),
+                                  jnp.full((), -1, jnp.int32), indices, seg,
+                                  offs_ext)
+            return out[:num_bags]
         rows = lookup_unsharded(t, indices[:, None], reduce_bag=True)
         return jax.ops.segment_sum(rows, seg, num_bags)
 
     P = jax.sharding.PartitionSpec
 
-    def fn(packed_local, bank_map, slot_map, idx_local, seg_local):
+    def fn(packed_local, bank_map, slot_map, idx_local, seg_local, offs_local):
         my = jax.lax.axis_index(dist.bank_axis)
-        part = _local_gather_partial(packed_local, bank_map, slot_map,
-                                     idx_local, my)
-        part = jax.ops.segment_sum(part, seg_local, num_bags)
+        if backend == "pallas":
+            part = _pallas_csr_bag((tile_b, interpret, nb_pad), packed_local,
+                                   bank_map, slot_map, my.astype(jnp.int32),
+                                   idx_local, seg_local,
+                                   offs_local)[:num_bags]
+        else:
+            part = _local_gather_partial(packed_local, bank_map, slot_map,
+                                         idx_local, my)
+            part = jax.ops.segment_sum(part, seg_local, num_bags)
         return jax.lax.psum(part, dist.bank_axis)
 
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=dist.mesh,
-        in_specs=(P(dist.bank_axis, None), P(), P(), P(), P()),
+        in_specs=(P(dist.bank_axis, None), P(), P(), P(), P(), P()),
         out_specs=P(),
-    )(t.packed, t.remap_bank, t.remap_slot, indices, seg)
+    )(t.packed, t.remap_bank, t.remap_slot, indices, seg, offs_ext)
 
 
 # ---------------------------------------------------------------------------

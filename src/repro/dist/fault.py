@@ -1,0 +1,79 @@
+"""Fault tolerance primitives: injected failures, straggler detection, and
+the checkpoint-restart driver loop.
+
+These are deliberately jax-free — they wrap the host-side training loop, not
+the compiled step, so they compose with any family's step function.
+"""
+from __future__ import annotations
+
+import statistics
+from collections import deque
+from typing import Callable
+
+
+class InjectedFailure(RuntimeError):
+    """Raised by FailureInjector.check at the armed step."""
+
+
+class FailureInjector:
+    """Deterministically crash the training loop once at ``fail_at_step`` —
+    the restart path must then restore from checkpoint and replay to an
+    identical final state (test_checkpoint_fault exercises this)."""
+
+    def __init__(self, fail_at_step: int):
+        self.fail_at_step = fail_at_step
+        self.fired = False
+
+    def check(self, step: int) -> None:
+        if not self.fired and step == self.fail_at_step:
+            self.fired = True
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+class StragglerWatchdog:
+    """Flags steps whose wall time exceeds ``factor`` x the running median.
+
+    ``observe(step, seconds)`` returns True (and records the step in
+    ``events`` / fires ``on_straggler(step, seconds, median)``) when the step
+    is a straggler. Straggler times are excluded from the history so one slow
+    step doesn't inflate the baseline.
+    """
+
+    def __init__(self, factor: float = 3.0, window: int = 64,
+                 min_history: int = 5,
+                 on_straggler: Callable[[int, float, float], None] | None = None):
+        self.factor = factor
+        self.min_history = min_history
+        self.on_straggler = on_straggler
+        self.history: deque[float] = deque(maxlen=window)
+        self.events: list[int] = []
+
+    def observe(self, step: int, seconds: float) -> bool:
+        straggler = False
+        if len(self.history) >= self.min_history:
+            med = statistics.median(self.history)
+            if seconds > self.factor * med:
+                straggler = True
+                self.events.append(step)
+                if self.on_straggler is not None:
+                    self.on_straggler(step, seconds, med)
+        if not straggler:
+            self.history.append(seconds)
+        return straggler
+
+
+def run_with_restarts(loop: Callable[[int], int], *,
+                      restore_step: Callable[[], int],
+                      max_restarts: int = 8) -> int:
+    """Run ``loop(start_step)`` to completion, restarting from
+    ``restore_step()`` (the latest durable checkpoint) after each crash.
+    Returns the loop's final return value; re-raises once the restart budget
+    is exhausted."""
+    attempt = 0
+    while True:
+        try:
+            return loop(restore_step())
+        except Exception:
+            attempt += 1
+            if attempt > max_restarts:
+                raise

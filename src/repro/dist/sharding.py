@@ -1,0 +1,188 @@
+"""NamedSharding policies per model family.
+
+Every function returns a pytree of ``NamedSharding`` matching the structure of
+its input struct (ShapeDtypeStructs or real arrays). Policies are guarded by
+divisibility — a dim that doesn't divide by the mesh axis falls back to
+replication, so any (arch x mesh) cell stays compilable.
+
+Conventions (match the with_sharding_constraints inside the models):
+  * LM: vocab-sharded embed/unembed over 'model'; attention/MLP matrices
+    sharded on their widest projection dim; KV projections replicated (GQA).
+  * recsys: the banked table shards P('model', None) — the shard_map stage-2
+    contract in core/embedding.py; everything else (small MLPs) replicates.
+  * batches: leading batch dim over the dp axes; 'spread' arrays (retrieval
+    candidates, GNN edge lists) over every mesh axis.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.embedding import DistCtx
+
+P = jax.sharding.PartitionSpec
+
+
+def _ns(dist: DistCtx, *spec_entries) -> jax.sharding.NamedSharding:
+    return jax.sharding.NamedSharding(dist.mesh, P(*spec_entries))
+
+
+def _rep(dist: DistCtx, leaf) -> jax.sharding.NamedSharding:
+    return _ns(dist, *([None] * len(leaf.shape)))
+
+
+def _div(dist: DistCtx, n: int, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return n % int(np.prod([dist.mesh.shape[a] for a in axes])) == 0
+
+
+def _dp_entry(dist: DistCtx):
+    return dist.dp_axes if len(dist.dp_axes) > 1 else dist.dp_axes[0]
+
+
+def _batch_spec(dist: DistCtx, leaf):
+    """Leading dim over dp when divisible; replicate otherwise."""
+    if leaf.shape and _div(dist, leaf.shape[0], dist.dp_axes):
+        return _ns(dist, _dp_entry(dist), *([None] * (len(leaf.shape) - 1)))
+    return _rep(dist, leaf)
+
+
+def _spread_spec(dist: DistCtx, leaf):
+    """Leading dim over EVERY mesh axis (candidate sets, edge lists)."""
+    axes = tuple(dist.mesh.axis_names)
+    if leaf.shape and _div(dist, leaf.shape[0], axes):
+        return _ns(dist, axes, *([None] * (len(leaf.shape) - 1)))
+    return _rep(dist, leaf)
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def lm_param_shardings(dist: DistCtx, params):
+    """Vocab-sharded embed/unembed, head-sharded q/o, ff-sharded MLP."""
+    m = dist.bank_axis
+
+    def leaf_sh(path, leaf):
+        key = jax.tree_util.keystr(path)
+        nd = len(leaf.shape)
+        if "embed" in key and nd == 2 and _div(dist, leaf.shape[0], m):
+            return _ns(dist, m, None)
+        if "unembed" in key and nd == 2 and _div(dist, leaf.shape[1], m):
+            return _ns(dist, None, m)
+        # stacked per-layer matrices carry a leading n_layers dim
+        if nd == 3 and any(k in key for k in ("wq", "w_gate", "w_up")) \
+                and _div(dist, leaf.shape[2], m):
+            return _ns(dist, None, None, m)
+        if nd == 3 and any(k in key for k in ("wo", "w_down")) \
+                and _div(dist, leaf.shape[1], m):
+            return _ns(dist, None, m, None)
+        # MoE expert stacks (L, E, d, ff): expert-parallel over model
+        if nd == 4 and _div(dist, leaf.shape[1], m):
+            return _ns(dist, None, m, None, None)
+        return _rep(dist, leaf)
+
+    return jax.tree_util.tree_map_with_path(leaf_sh, params)
+
+
+def lm_batch_shardings(dist: DistCtx, batch):
+    return jax.tree.map(lambda l: _batch_spec(dist, l), batch)
+
+
+def kv_cache_shardings(dist: DistCtx, cache_struct,
+                       seq_axes: tuple[str, ...] = ("model",),
+                       batch_gt1: bool = True):
+    """KVCache (k/v (L, B, S, Hkv, Dh), length ()) — seq dim over seq_axes."""
+    dp_eff = tuple(a for a in dist.dp_axes if a not in seq_axes)
+    seq_entry = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+
+    def leaf_sh(leaf):
+        if len(leaf.shape) != 5:
+            return _rep(dist, leaf)          # length scalar
+        L, B, S, Hkv, Dh = leaf.shape
+        bentry = None
+        if batch_gt1 and dp_eff and _div(dist, B, dp_eff):
+            bentry = dp_eff if len(dp_eff) > 1 else dp_eff[0]
+        sentry = seq_entry if _div(dist, S, seq_axes) else None
+        return _ns(dist, None, bentry, sentry, None, None)
+
+    return jax.tree.map(leaf_sh, cache_struct)
+
+
+# ---------------------------------------------------------------------------
+# recsys
+# ---------------------------------------------------------------------------
+
+def recsys_param_shardings(dist: DistCtx, params):
+    """Banked table P(bank_axis, None); small dense params replicated."""
+    m = dist.bank_axis
+
+    def leaf_sh(path, leaf):
+        key = jax.tree_util.keystr(path)
+        if ("packed" in key or "embed" in key) and len(leaf.shape) == 2 \
+                and _div(dist, leaf.shape[0], m):
+            return _ns(dist, m, None)
+        return _rep(dist, leaf)
+
+    return jax.tree_util.tree_map_with_path(leaf_sh, params)
+
+
+def recsys_batch_shardings(dist: DistCtx, batch,
+                           spread_keys: tuple[str, ...] = ()):
+    def leaf_sh(path, leaf):
+        key = jax.tree_util.keystr(path)
+        if any(s in key for s in spread_keys):
+            return _spread_spec(dist, leaf)
+        return _batch_spec(dist, leaf)
+
+    return jax.tree_util.tree_map_with_path(leaf_sh, batch)
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def gnn_batch_shardings(dist: DistCtx, batch):
+    """Edge arrays spread over every axis; node features replicated."""
+    def leaf_sh(path, leaf):
+        key = jax.tree_util.keystr(path)
+        is_edge = "edge_" in key or (
+            "block" in key and key.rstrip("']").endswith(("_src", "_dst",
+                                                          "_mask")))
+        if is_edge:
+            return _spread_spec(dist, leaf)
+        return _rep(dist, leaf)
+
+    return jax.tree_util.tree_map_with_path(leaf_sh, batch)
+
+
+# ---------------------------------------------------------------------------
+# train state
+# ---------------------------------------------------------------------------
+
+def train_state_shardings(dist: DistCtx, state_struct, param_shardings):
+    """TrainState shardings: params use ``param_shardings``; optimizer moments
+    inherit the sharding of the same-shaped param (Adam m/v, Adagrad rows);
+    anything unmatched (scalars, row accumulators) replicates."""
+    from repro.train.train_step import TrainState
+
+    by_shape: dict = {}
+
+    def record(leaf, sh):
+        by_shape.setdefault((tuple(leaf.shape), str(leaf.dtype)), sh)
+        return sh
+
+    jax.tree.map(record, state_struct.params, param_shardings)
+
+    def match(leaf):
+        return by_shape.get((tuple(leaf.shape), str(leaf.dtype)),
+                            _rep(dist, leaf))
+
+    err = state_struct.err_state
+    return TrainState(
+        params=param_shardings,
+        opt_state=jax.tree.map(match, state_struct.opt_state),
+        step=_rep(dist, state_struct.step),
+        err_state=None if err is None else jax.tree.map(match, err),
+    )

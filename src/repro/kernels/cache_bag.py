@@ -1,67 +1,12 @@
-"""Pallas TPU kernel: FUSED cache + EMT bag lookup (paper Fig. 7).
+"""Fused cache + EMT bag lookup (paper Fig. 7) — subsumed by the generalized
+fused kernel in ``kernels/embedding_bag.py``.
 
-One grid step resolves a whole request tile: walk the request's cache-entry
-ids accumulating cached PARTIAL SUMS, then its residual ids accumulating EMT
-rows — one VMEM accumulator, one output write. This is the cache-aware
-stage 2 as a single kernel: the two tables live in HBM (MemorySpace.ANY) and
-only reduced (tile_b, D) bags leave.
+This module keeps the historical single-table-layout entry point: both tables
+unbanked (identity remap, ownership off). The banked/distributed flavour is
+``embedding_bag.fused_cache_bag_pallas`` called with real remap vectors by
+``core/embedding.banked_cache_residual_bag``.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-
-def _cache_bag_kernel(cache_idx_ref, resid_idx_ref, cache_ref, emt_ref,
-                      out_ref, *, tile_b: int, lc: int, lr: int, dim: int):
-    b0 = pl.program_id(0) * tile_b
-
-    def one_table(idx_ref, bag_len, table_ref, i, acc_row):
-        def entry(j, acc_row):
-            row = idx_ref[(b0 + i) * bag_len + j]
-            valid = row >= 0
-            safe = jnp.maximum(row, 0)
-            vec = table_ref[pl.dslice(safe, 1), :]
-            return acc_row + jnp.where(valid, vec[0], 0.0)
-        return jax.lax.fori_loop(0, bag_len, entry, acc_row)
-
-    def bag_body(i, acc):
-        acc_row = jnp.zeros((dim,), jnp.float32)
-        acc_row = one_table(cache_idx_ref, lc, cache_ref, i, acc_row)
-        acc_row = one_table(resid_idx_ref, lr, emt_ref, i, acc_row)
-        return acc.at[i].set(acc_row)
-
-    acc = jax.lax.fori_loop(0, tile_b, bag_body,
-                            jnp.zeros((tile_b, dim), jnp.float32))
-    out_ref[...] = acc.astype(out_ref.dtype)
-
-
-def cache_bag_pallas(emt: jax.Array, cache: jax.Array, cache_idx: jax.Array,
-                     residual_idx: jax.Array, *, tile_b: int = 8,
-                     interpret: bool = False) -> jax.Array:
-    """emt (V, D), cache (Nc, D); cache_idx (B, Lc), residual_idx (B, Lr)
-    (-1 padded) -> (B, D) = cached partials + residual rows."""
-    B, Lc = cache_idx.shape
-    _, Lr = residual_idx.shape
-    V, D = emt.shape
-    assert cache.shape[1] == D
-    assert B % tile_b == 0
-    kernel = functools.partial(_cache_bag_kernel, tile_b=tile_b, lc=Lc,
-                               lr=Lr, dim=D)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B // tile_b,),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
-                  pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
-        out_specs=pl.BlockSpec((tile_b, D), lambda b, *_: (b, 0)),
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, D), emt.dtype),
-        interpret=interpret,
-    )(cache_idx.reshape(-1), residual_idx.reshape(-1), cache, emt)
+from repro.kernels.embedding_bag import plain_cache_bag_pallas as \
+    cache_bag_pallas  # noqa: F401

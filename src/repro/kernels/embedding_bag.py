@@ -1,20 +1,30 @@
-"""Pallas TPU kernel: embedding-bag gather+reduce "near memory".
+"""Pallas TPU kernels: embedding-bag gather+reduce "near memory".
 
-TPU adaptation of the paper's in-DPU lookup (DESIGN.md §5): the table stays in
-HBM (MemorySpace.ANY); bag indices are scalar-prefetched (SMEM) so the kernel
-can issue row-granular HBM->VMEM copies; each grid step accumulates ONE batch
-tile of bag sums in a VMEM accumulator and writes only the reduced (tile_b, D)
-block. The (B*L, D) gathered matrix — the thing a naive XLA gather would
-materialize in HBM — never exists.
+TPU adaptation of the paper's in-DPU lookup (DESIGN.md §5, paper §3.1/Fig. 7).
+The table(s) stay in HBM (`pltpu.ANY`); bag indices and the row->(bank, slot)
+remap vectors are scalar-prefetched (SMEM) so the kernel can compute HBM row
+addresses *before* touching vector memory; rows stream HBM->VMEM through a
+two-slot ping-pong of `pltpu.make_async_copy` DMAs (the copy for entry e+1 is
+in flight while entry e is being accumulated). Each grid step owns a tile of
+bags and writes only the reduced (tile_b, D) block — the (B*L, D) gathered
+matrix a naive XLA gather would materialize never exists.
 
-Alignment: D is padded to the 128-lane boundary by ops.py (the TPU analogue of
-the paper's 8-byte MRAM alignment rule); the row copy is one (1, D) DMA, i.e.
-the ``N_c``-wide access of §3.1 with TPU constants.
+What runs inside the kernel (vs. the seed's wrapper-side precompute):
+  * per-field row offsets      — bag b belongs to field b % n_fields; its raw
+    ids are shifted by `field_offsets[f]`, so ALL F sparse fields of a DLRM
+    batch are one kernel invocation over (B*F, L) bags
+  * bank/slot remap + ownership mask — the PIM stage-2 test `bank[row] == my`
+    happens on the prefetched scalars; foreign rows cost no DMA bandwidth to
+    accumulate (they are masked), and the wrapper no longer materializes a
+    masked index tensor per bank
+  * fused cache + residual     — one accumulator walks the cache-entry stream
+    then the residual stream (Fig. 7's `Σ cache_partials + Σ residual_rows`)
 
-Grid: (B / tile_b,).  One program owns tile_b bags; the inner fori_loop walks
-tile_b * L prefetched indices, accumulating valid rows. Bank masking (the PIM
-stage-2 ownership test) is precomputed by the wrapper: indices not owned are
-already -1.
+Ownership is disabled by passing ``my_bank < 0`` (the unsharded path).
+
+Alignment: D is padded to the 128-lane boundary by the wrappers (the TPU
+analogue of the paper's 8-byte MRAM alignment rule); each row copy is one
+(1, D) DMA — the ``N_c``-wide access of §3.1 with TPU constants.
 """
 from __future__ import annotations
 
@@ -26,44 +36,349 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _bag_kernel(idx_ref, table_ref, out_ref, *, tile_b: int, bag_len: int,
-                dim: int):
+# ---------------------------------------------------------------------------
+# double-buffered row-DMA accumulate
+# ---------------------------------------------------------------------------
+
+def _dma_accumulate(acc, table_ref, buf, sem, start, end, src_fn, meta_fn):
+    """Accumulate table rows for entries [start, end) into per-bag sums.
+
+    ``src_fn(e)``  -> local table row to fetch (already ownership-clamped)
+    ``meta_fn(e)`` -> (bag_local, mine) — accumulator row and validity mask
+
+    Ping-pong over two (1, D) VMEM slots: the DMA for entry e+1 is started
+    before waiting on entry e, so the HBM fetch of the next row overlaps the
+    VPU accumulate of the current one.
+    """
+    def dma(e, slot):
+        return pltpu.make_async_copy(
+            table_ref.at[pl.ds(src_fn(e), 1), :], buf.at[slot], sem.at[slot])
+
+    @pl.when(end > start)
+    def _():
+        dma(start, 0).start()
+
+    def body(e, acc):
+        slot = (e - start) % 2
+
+        @pl.when(e + 1 < end)
+        def _():
+            dma(e + 1, (slot + 1) % 2).start()
+
+        dma(e, slot).wait()
+        bag_local, mine = meta_fn(e)
+        row = jnp.where(mine, buf[slot][0].astype(jnp.float32), 0.0)
+        return acc.at[bag_local].add(row)
+
+    return jax.lax.fori_loop(start, end, body, acc)
+
+
+def _entry_fns(idx_ref, bank_ref, slot_ref, off_ref, my, b0, bag_len,
+               n_fields):
+    """(src_fn, meta_fn) for a rectangular (bags x bag_len) index stream with
+    in-kernel field offsets, remap, and ownership mask. ``e`` is the
+    tile-LOCAL entry id in [0, tile_b * bag_len)."""
+    def resolve(e):
+        bag = b0 + e // bag_len
+        raw = idx_ref[bag * bag_len + e % bag_len]
+        valid = raw >= 0
+        row = jnp.where(valid, raw + off_ref[bag % n_fields], 0)
+        mine = valid & ((my < 0) | (bank_ref[row] == my))
+        return row, mine
+
+    def src_fn(e):
+        row, mine = resolve(e)
+        return jnp.where(mine, slot_ref[row], 0)
+
+    def meta_fn(e):
+        _, mine = resolve(e)
+        return e // bag_len, mine
+
+    return src_fn, meta_fn
+
+
+def _plain_entry_fns(idx_ref, b0, bag_len):
+    """(src_fn, meta_fn) for an identity-mapped index stream — no remap
+    vectors, no ownership test (the single-table drop-in wrappers)."""
+    def resolve(e):
+        raw = idx_ref[(b0 + e // bag_len) * bag_len + e % bag_len]
+        return jnp.maximum(raw, 0), raw >= 0
+
+    def src_fn(e):
+        return resolve(e)[0]
+
+    def meta_fn(e):
+        return e // bag_len, resolve(e)[1]
+
+    return src_fn, meta_fn
+
+
+# ---------------------------------------------------------------------------
+# padding helpers (shared by ops.py and core/embedding.py — ONE home for the
+# 128-lane alignment rule and the -1 bag fill)
+# ---------------------------------------------------------------------------
+
+def pad_last_dim(x: jax.Array, mult: int = 128) -> tuple[jax.Array, int]:
+    """Pad the trailing dim to a multiple (TPU lane alignment, §3.1 rule)."""
+    d = x.shape[-1]
+    pad = (-d) % mult
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, d
+
+
+def pad_leading(x: jax.Array, mult: int, fill=-1) -> tuple[jax.Array, int]:
+    """Pad the leading dim to a multiple with ``fill`` (-1 = padded bags)."""
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+    return x, n
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+def _plain_bag_kernel(idx_ref, table_ref, out_ref, buf, sem, *,
+                      tile_b: int, bag_len: int, dim: int):
     b0 = pl.program_id(0) * tile_b
-
-    def bag_body(i, acc):
-        def entry_body(j, acc_row):
-            row = idx_ref[(b0 + i) * bag_len + j]
-            valid = row >= 0
-            safe = jnp.maximum(row, 0)
-            vec = table_ref[pl.dslice(safe, 1), :]      # (1, D) HBM->VMEM
-            return acc_row + jnp.where(valid, vec[0], 0.0)
-
-        acc_row = jax.lax.fori_loop(0, bag_len, entry_body,
-                                    jnp.zeros((dim,), jnp.float32))
-        return acc.at[i].set(acc_row)
-
-    acc = jax.lax.fori_loop(0, tile_b, bag_body,
-                            jnp.zeros((tile_b, dim), jnp.float32))
+    src_fn, meta_fn = _plain_entry_fns(idx_ref, b0, bag_len)
+    acc = jnp.zeros((tile_b, dim), jnp.float32)
+    acc = _dma_accumulate(acc, table_ref, buf, sem, 0, tile_b * bag_len,
+                          src_fn, meta_fn)
     out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _plain_fused_kernel(cache_idx_ref, resid_idx_ref, cache_ref, emt_ref,
+                        out_ref, buf, sem, *, tile_b: int, lc: int, lr: int,
+                        dim: int):
+    b0 = pl.program_id(0) * tile_b
+    acc = jnp.zeros((tile_b, dim), jnp.float32)
+    c_src, c_meta = _plain_entry_fns(cache_idx_ref, b0, lc)
+    acc = _dma_accumulate(acc, cache_ref, buf, sem, 0, tile_b * lc,
+                          c_src, c_meta)
+    r_src, r_meta = _plain_entry_fns(resid_idx_ref, b0, lr)
+    acc = _dma_accumulate(acc, emt_ref, buf, sem, 0, tile_b * lr,
+                          r_src, r_meta)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _banked_bag_kernel(idx_ref, bank_ref, slot_ref, off_ref, my_ref,
+                       table_ref, out_ref, buf, sem, *,
+                       tile_b: int, bag_len: int, n_fields: int, dim: int):
+    b0 = pl.program_id(0) * tile_b
+    src_fn, meta_fn = _entry_fns(idx_ref, bank_ref, slot_ref, off_ref,
+                                 my_ref[0], b0, bag_len, n_fields)
+    acc = jnp.zeros((tile_b, dim), jnp.float32)
+    acc = _dma_accumulate(acc, table_ref, buf, sem, 0, tile_b * bag_len,
+                          src_fn, meta_fn)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _fused_cache_bag_kernel(cache_idx_ref, resid_idx_ref, c_bank_ref,
+                            c_slot_ref, r_bank_ref, r_slot_ref, my_ref,
+                            zero_off_ref, cache_ref, emt_ref, out_ref, buf,
+                            sem, *, tile_b: int, lc: int, lr: int, dim: int):
+    """Fig. 7 fused lookup: Σ cache partial-sums + Σ residual EMT rows, one
+    accumulator, one output write. The two streams run back-to-back through
+    the same ping-pong buffers (the bubble between them is a single DMA)."""
+    b0 = pl.program_id(0) * tile_b
+    my = my_ref[0]
+    acc = jnp.zeros((tile_b, dim), jnp.float32)
+
+    c_src, c_meta = _entry_fns(cache_idx_ref, c_bank_ref, c_slot_ref,
+                               zero_off_ref, my, b0, lc, 1)
+    acc = _dma_accumulate(acc, cache_ref, buf, sem, 0, tile_b * lc,
+                          c_src, c_meta)
+
+    r_src, r_meta = _entry_fns(resid_idx_ref, r_bank_ref, r_slot_ref,
+                               zero_off_ref, my, b0, lr, 1)
+    acc = _dma_accumulate(acc, emt_ref, buf, sem, 0, tile_b * lr,
+                          r_src, r_meta)
+
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _csr_bag_kernel(idx_ref, seg_ref, offs_ref, bank_ref, slot_ref, my_ref,
+                    table_ref, out_ref, buf, sem, *, tile_b: int, dim: int):
+    """CSR-ragged bags: entries for bags [b0, b0+tile_b) are the contiguous
+    index range [offs[b0], offs[b0+tile_b]); per-entry bag = seg[e]."""
+    b0 = pl.program_id(0) * tile_b
+    my = my_ref[0]
+
+    def resolve(e):
+        raw = idx_ref[e]
+        valid = raw >= 0
+        row = jnp.where(valid, raw, 0)
+        mine = valid & ((my < 0) | (bank_ref[row] == my))
+        return row, mine
+
+    def src_fn(e):
+        row, mine = resolve(e)
+        return jnp.where(mine, slot_ref[row], 0)
+
+    def meta_fn(e):
+        _, mine = resolve(e)
+        return seg_ref[e] - b0, mine
+
+    acc = jnp.zeros((tile_b, dim), jnp.float32)
+    acc = _dma_accumulate(acc, table_ref, buf, sem,
+                          offs_ref[b0], offs_ref[b0 + tile_b],
+                          src_fn, meta_fn)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (shape plumbing only — padding stays in the callers)
+# ---------------------------------------------------------------------------
+
+def _scratch(dim: int, dtype):
+    return [pltpu.VMEM((2, 1, dim), dtype), pltpu.SemaphoreType.DMA((2,))]
+
+
+def banked_embedding_bag_pallas(table: jax.Array, bank: jax.Array,
+                                slot: jax.Array, field_offsets: jax.Array,
+                                my_bank: jax.Array, idx: jax.Array, *,
+                                tile_b: int = 8, interpret: bool = False
+                                ) -> jax.Array:
+    """One bank's stage-2 partial bag sums, remap + mask in-kernel.
+
+    table (R, D) local rows in HBM; bank/slot (V,) int32 remap (prefetched);
+    field_offsets (F,) int32; my_bank (1,) int32 (< 0 disables the ownership
+    test); idx (NB, L) int32 raw per-field ids, -1 padded. -> (NB, D).
+    """
+    NB, L = idx.shape
+    R, D = table.shape
+    assert NB % tile_b == 0, (NB, tile_b)
+    kernel = functools.partial(
+        _banked_bag_kernel, tile_b=tile_b, bag_len=L,
+        n_fields=field_offsets.shape[0], dim=D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(NB // tile_b,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((tile_b, D), lambda b, *_: (b, 0)),
+        scratch_shapes=_scratch(D, table.dtype),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((NB, D), table.dtype),
+        interpret=interpret,
+    )(idx.reshape(-1), bank, slot, field_offsets, my_bank, table)
 
 
 def embedding_bag_pallas(table: jax.Array, idx: jax.Array, *,
                          tile_b: int = 8, interpret: bool = False
                          ) -> jax.Array:
-    """table (V, D) in HBM; idx (B, L) int32, -1 padded -> (B, D)."""
+    """Plain bag sum: table (V, D); idx (B, L) -1 padded -> (B, D).
+
+    Remap-free variant: rows are table positions, so no (V,)-sized scalar
+    operands hit SMEM — any vocab size works on real TPUs.
+    """
     B, L = idx.shape
     V, D = table.shape
     assert B % tile_b == 0, (B, tile_b)
-    kernel = functools.partial(_bag_kernel, tile_b=tile_b, bag_len=L, dim=D)
+    kernel = functools.partial(_plain_bag_kernel, tile_b=tile_b, bag_len=L,
+                               dim=D)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B // tile_b,),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
-        out_specs=pl.BlockSpec((tile_b, D), lambda b, idx_ref: (b, 0)),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((tile_b, D), lambda b, *_: (b, 0)),
+        scratch_shapes=_scratch(D, table.dtype),
     )
     return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
+        kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
         interpret=interpret,
     )(idx.reshape(-1), table)
+
+
+def plain_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
+                           cache_idx: jax.Array, residual_idx: jax.Array, *,
+                           tile_b: int = 8, interpret: bool = False
+                           ) -> jax.Array:
+    """Fig.-7 fused lookup over unbanked tables (identity layout): no remap
+    operands in SMEM. -> (B, D) = Σ cached partials + Σ residual rows."""
+    B, Lc = cache_idx.shape
+    B2, Lr = residual_idx.shape
+    assert B == B2 and B % tile_b == 0, (B, B2, tile_b)
+    D = emt.shape[1]
+    assert cache.shape[1] == D
+    cache = cache.astype(emt.dtype)     # one scratch buffer, one row dtype
+    kernel = functools.partial(_plain_fused_kernel, tile_b=tile_b, lc=Lc,
+                               lr=Lr, dim=D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B // tile_b,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((tile_b, D), lambda b, *_: (b, 0)),
+        scratch_shapes=_scratch(D, emt.dtype),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), emt.dtype),
+        interpret=interpret,
+    )(cache_idx.reshape(-1), residual_idx.reshape(-1), cache, emt)
+
+
+def fused_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
+                           emt_bank: jax.Array, emt_slot: jax.Array,
+                           cache_bank: jax.Array, cache_slot: jax.Array,
+                           my_bank: jax.Array, cache_idx: jax.Array,
+                           residual_idx: jax.Array, *, tile_b: int = 8,
+                           interpret: bool = False) -> jax.Array:
+    """emt (R, D), cache (Rc, D); cache_idx (B, Lc), residual_idx (B, Lr)
+    (-1 padded) -> (B, D) = Σ cached partials + Σ residual rows, one pass."""
+    B, Lc = cache_idx.shape
+    B2, Lr = residual_idx.shape
+    assert B == B2 and B % tile_b == 0, (B, B2, tile_b)
+    D = emt.shape[1]
+    assert cache.shape[1] == D
+    cache = cache.astype(emt.dtype)     # one scratch buffer, one row dtype
+    kernel = functools.partial(_fused_cache_bag_kernel, tile_b=tile_b,
+                               lc=Lc, lr=Lr, dim=D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=8,
+        grid=(B // tile_b,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((tile_b, D), lambda b, *_: (b, 0)),
+        scratch_shapes=_scratch(D, emt.dtype),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), emt.dtype),
+        interpret=interpret,
+    )(cache_idx.reshape(-1), residual_idx.reshape(-1), cache_bank,
+      cache_slot, emt_bank, emt_slot, my_bank, jnp.zeros((1,), jnp.int32),
+      cache, emt)
+
+
+def csr_bag_pallas(table: jax.Array, bank: jax.Array, slot: jax.Array,
+                   my_bank: jax.Array, indices: jax.Array, seg_ids: jax.Array,
+                   offsets_ext: jax.Array, num_bags: int, *, tile_b: int = 8,
+                   interpret: bool = False) -> jax.Array:
+    """CSR bag sums: indices (T,) flat stream, seg_ids (T,) bag per entry,
+    offsets_ext (num_bags + 1,) with offsets_ext[-1] == T. -> (num_bags, D).
+    ``num_bags`` must be a multiple of tile_b (pad offsets with T)."""
+    T = indices.shape[0]
+    R, D = table.shape
+    assert num_bags % tile_b == 0, (num_bags, tile_b)
+    assert offsets_ext.shape[0] == num_bags + 1
+    kernel = functools.partial(_csr_bag_kernel, tile_b=tile_b, dim=D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(num_bags // tile_b,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((tile_b, D), lambda b, *_: (b, 0)),
+        scratch_shapes=_scratch(D, table.dtype),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_bags, D), table.dtype),
+        interpret=interpret,
+    )(indices, seg_ids, offsets_ext, bank, slot, my_bank, table)

@@ -24,21 +24,13 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_dim(x: jax.Array, mult: int = 128) -> tuple[jax.Array, int]:
-    d = x.shape[-1]
-    pad = (-d) % mult
-    if pad:
-        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-    return x, d
+# one home for the alignment rules: kernels/embedding_bag.py
+from repro.kernels.embedding_bag import pad_last_dim as _pad_dim
+from repro.kernels.embedding_bag import pad_leading
 
 
 def _pad_batch(idx: jax.Array, tile_b: int) -> tuple[jax.Array, int]:
-    b = idx.shape[0]
-    pad = (-b) % tile_b
-    if pad:
-        idx = jnp.concatenate(
-            [idx, jnp.full((pad,) + idx.shape[1:], -1, idx.dtype)])
-    return idx, b
+    return pad_leading(idx, tile_b)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
@@ -85,6 +77,7 @@ embedding_bag_trainable.defvjp(_bag_fwd, _bag_bwd)
 def cache_bag(emt: jax.Array, cache: jax.Array, cache_idx: jax.Array,
               residual_idx: jax.Array, *, tile_b: int = 8,
               interpret: bool | None = None) -> jax.Array:
+    """Fused Fig.-7 lookup: one kernel pass over both index streams."""
     if interpret is None:
         interpret = not _on_tpu()
     epad, d0 = _pad_dim(emt)

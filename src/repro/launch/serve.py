@@ -23,6 +23,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=512)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="embedding stage-2 backend (dlrm only)")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -30,8 +33,9 @@ def main() -> None:
     cfg = spec.reduced
     mod = __import__(f"repro.models.{spec.family}", fromlist=["forward"])
     params, statics = mod.init_params(cfg, jax.random.key(args.seed))
-    serve = jax.jit(lambda p, b: jax.nn.sigmoid(
-        mod.forward(cfg, p, statics, b)))
+    from repro.serve.serve_step import build_recsys_serve
+    backend = args.backend if spec.family == "dlrm" else None
+    serve = jax.jit(build_recsys_serve(mod, cfg, statics, backend=backend))
 
     rng = np.random.default_rng(args.seed)
     from repro.data import synthetic as syn

@@ -42,13 +42,14 @@ def make_batch_fn(spec, cfg):
     raise ValueError(f"use examples/ for family {fam}")
 
 
-def build_loss(spec, cfg, statics):
+def build_loss(spec, cfg, statics, backend: str | None = None):
     fam = spec.family
     if fam == "lm":
         from repro.models import transformer as T
         return lambda p, b: T.lm_loss(cfg, p, b["tokens"], b["labels"])
     mod = __import__(f"repro.models.{fam}", fromlist=["loss_fn"])
-    return lambda p, b: mod.loss_fn(cfg, p, statics, b)
+    kw = {"backend": backend} if backend is not None and fam == "dlrm" else {}
+    return lambda p, b: mod.loss_fn(cfg, p, statics, b, **kw)
 
 
 def main() -> None:
@@ -65,6 +66,10 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="embedding stage-2 backend (dlrm; fwd AND bwd via "
+                         "the kernel's scatter-add custom_vjp)")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -84,7 +89,7 @@ def main() -> None:
     print(f"arch={args.arch} family={spec.family} params={n_params:,}")
 
     opt = default_optimizer(lr=args.lr, emb_lr=args.emb_lr)
-    loss_fn = build_loss(spec, cfg, statics)
+    loss_fn = build_loss(spec, cfg, statics, backend=args.backend)
     step_fn = jax.jit(build_train_step(loss_fn, opt,
                                        compress_grads=args.compress_grads))
     state = TrainState.create(params, opt, compress=args.compress_grads)

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.embedding import (
-    BankedTable, DistCtx, banked_embedding_bag, banked_gather)
+    BankedTable, DistCtx, banked_cache_residual_bag, banked_embedding_bag,
+    banked_gather)
 from repro.models.common import dense_init, embed_init, shard, dp
 
 Array = jax.Array
@@ -138,21 +139,28 @@ def dot_interaction(z: Array) -> Array:
 
 
 def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
-            dist: DistCtx | None = None) -> Array:
+            dist: DistCtx | None = None, *, backend: str = "auto") -> Array:
     """batch: dense (B, n_dense) fp; sparse (B, F) int32 (one-hot fields) or
-    (B, F, L) multi-hot. Returns logits (B,)."""
+    (B, F, L) multi-hot. Returns logits (B,).
+
+    ``backend`` selects the stage-2 lookup implementation (core/embedding.py):
+    'jnp' scan, 'pallas' fused kernel, or 'auto'. The multi-hot path hands the
+    RAW (B, F, L) per-field ids plus ``field_offsets`` to ONE fused
+    banked_embedding_bag call — all F fields in a single stage-2 pass, and no
+    (B, F, L, D) gathered intermediate on either backend.
+    """
     dense, sparse = batch["dense"], batch["sparse"]
     B = dense.shape[0]
     t = _banked(params, statics)
-    # per-field ids -> union-vocab rows
     if sparse.ndim == 2:
+        # one-hot fields: dense gather; per-field ids -> union-vocab rows
         rows = sparse + statics["field_offsets"][None, :]
         rows = jnp.where(sparse >= 0, rows, -1)
         emb = banked_gather(t, rows, dist)                       # (B, F, D)
     else:
-        rows = sparse + statics["field_offsets"][None, :, None]
-        rows = jnp.where(sparse >= 0, rows, -1)
-        emb = banked_embedding_bag(t, rows, dist)                # (B, F, D)
+        emb = banked_embedding_bag(                              # (B, F, D)
+            t, sparse, dist, backend=backend,
+            field_offsets=statics["field_offsets"])
     emb = shard(emb, dist, dp(dist), None, None).astype(cfg.dtype)
 
     x = mlp_apply(params["bot"], dense.astype(cfg.dtype))        # (B, D)
@@ -165,15 +173,18 @@ def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
 
 def forward_cached(cfg: DLRMConfig, params: dict, statics: dict,
                    cache_table: BankedTable, batch: dict,
-                   dist: DistCtx | None = None) -> Array:
+                   dist: DistCtx | None = None, *,
+                   backend: str = "auto") -> Array:
     """Cache-aware path (Fig. 7): batch carries rewritten multi-hot bags:
     ``cache_idx`` (B, T, Lc) entries into the partial-sum cache table and
     ``residual_idx`` (B, T, Lr) union-vocab rows. Bag sum = cache partials +
-    residual rows — both via the banked lookup, then identical CTR compute."""
+    residual rows — ONE fused stage-2 pass over both tables (one psum), then
+    identical CTR compute."""
     dense = batch["dense"]
     t = _banked(params, statics)
-    emb = banked_embedding_bag(t, batch["residual_idx"], dist)
-    emb = emb + banked_embedding_bag(cache_table, batch["cache_idx"], dist)
+    emb = banked_cache_residual_bag(t, cache_table, batch["cache_idx"],
+                                    batch["residual_idx"], dist,
+                                    backend=backend)
     x = mlp_apply(params["bot"], dense.astype(cfg.dtype))
     z = jnp.concatenate([x[:, None], emb], axis=1)
     inter = dot_interaction(z)
@@ -189,8 +200,9 @@ def bce_loss(logits: Array, labels: Array) -> Array:
 
 
 def loss_fn(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
-            dist: DistCtx | None = None) -> Array:
-    return bce_loss(forward(cfg, params, statics, batch, dist), batch["label"])
+            dist: DistCtx | None = None, *, backend: str = "auto") -> Array:
+    return bce_loss(forward(cfg, params, statics, batch, dist,
+                            backend=backend), batch["label"])
 
 
 def retrieval_scores(cfg: DLRMConfig, params: dict, statics: dict,

@@ -15,10 +15,31 @@ import jax
 import jax.numpy as jnp
 
 
-def build_recsys_serve(family_mod, cfg, statics, dist=None):
-    """CTR scoring: forward + sigmoid."""
+def build_recsys_serve(family_mod, cfg, statics, dist=None,
+                       backend: str | None = None):
+    """CTR scoring: forward + sigmoid.
+
+    ``backend`` selects the embedding stage-2 implementation for families
+    that expose the knob (dlrm: 'jnp' | 'pallas' | 'auto'); None keeps the
+    family default.
+    """
+    kw = {} if backend is None else {"backend": backend}
+
     def serve(params, batch):
-        logits = family_mod.forward(cfg, params, statics, batch, dist)
+        logits = family_mod.forward(cfg, params, statics, batch, dist, **kw)
+        return jax.nn.sigmoid(logits)
+    return serve
+
+
+def build_recsys_serve_cached(family_mod, cfg, statics, cache_table,
+                              dist=None, backend: str | None = None):
+    """Cache-aware CTR scoring (Fig. 7): requests pre-rewritten into
+    (cache_idx, residual_idx) bags by the host pipeline."""
+    kw = {} if backend is None else {"backend": backend}
+
+    def serve(params, batch):
+        logits = family_mod.forward_cached(cfg, params, statics, cache_table,
+                                           batch, dist, **kw)
         return jax.nn.sigmoid(logits)
     return serve
 

@@ -31,8 +31,8 @@ def check(name, ok):
 
 
 def mesh42():
-    return jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh
+    return make_mesh((4, 2), ("data", "model"))
 
 
 def check_banked_lookup_distributed():
@@ -75,6 +75,37 @@ def check_banked_lookup_grads():
     gd = jax.jit(jax.grad(loss_d))(bt.packed)
     gl = jax.grad(loss_l)(bt.packed)
     check("banked_lookup_grads", np.allclose(gd, gl, atol=1e-5))
+
+
+def check_banked_pallas_backend():
+    """Pallas stage 2 (interpret mode) INSIDE the shard_map == jnp backend,
+    forward and gradient — the fused-kernel production path."""
+    rng = np.random.default_rng(7)
+    V, D, banks = 64, 16, 2
+    table = rng.standard_normal((V, D)).astype(np.float32)
+    plan = non_uniform_partition(rng.random(V) + 0.1, banks)
+    bt = pack_table(table, plan)
+    fo = jnp.array([0, 20, 40], jnp.int32)
+    idx = jnp.array(rng.integers(-1, 20, (8, 3, 5)), jnp.int32)
+    mesh = mesh42()
+    dist = DistCtx(mesh=mesh, dp_axes=("data",))
+    want = banked_embedding_bag(bt, idx, None, backend="jnp",
+                                field_offsets=fo)
+    got = jax.jit(lambda t, i: banked_embedding_bag(
+        t, i, dist, backend="pallas", field_offsets=fo))(bt, idx)
+    check("banked_pallas_backend_fwd",
+          np.allclose(got, want, atol=1e-5))
+
+    import dataclasses
+
+    def loss(packed, backend, d):
+        t2 = dataclasses.replace(bt, packed=packed)
+        return (banked_embedding_bag(t2, idx, d, backend=backend,
+                                     field_offsets=fo) ** 2).sum()
+
+    gl = jax.grad(lambda p: loss(p, "jnp", None))(bt.packed)
+    gd = jax.jit(jax.grad(lambda p: loss(p, "pallas", dist)))(bt.packed)
+    check("banked_pallas_backend_grad", np.allclose(gd, gl, atol=1e-4))
 
 
 def check_seqsharded_decode():
@@ -182,6 +213,7 @@ def check_lm_gspmd_matches_local():
 if __name__ == "__main__":
     check_banked_lookup_distributed()
     check_banked_lookup_grads()
+    check_banked_pallas_backend()
     check_seqsharded_decode()
     check_gat_edge_sharded()
     check_dp_compressed_step()

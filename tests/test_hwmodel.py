@@ -1,5 +1,8 @@
 """Analytic hardware model (Eq. 1-3) properties + system-model orderings."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hwmodel import (UPMEM, embedding_stage_latency,

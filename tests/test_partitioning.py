@@ -1,6 +1,7 @@
 """Unit + property tests for the paper's §3 partitioners."""
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partitioning import (

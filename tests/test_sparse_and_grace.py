@@ -3,6 +3,9 @@ cache runtime correctness, and banked-table semantics."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache_runtime import (build_cache_table, measure_hit_rate,
