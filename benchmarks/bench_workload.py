@@ -1,0 +1,187 @@
+"""Adaptive replanning vs a static plan under drifting traffic.
+
+The experiment the repro.workload subsystem exists for: serve a drifting
+Zipf trace (hot-set rotation + bursts) against
+
+  static    — the §3.2 non-uniform plan built from the FIRST window's
+              frequencies and never touched again (the paper's offline
+              assumption), and
+  adaptive  — the same starting plan plus the closed loop: telemetry ->
+              drift detector -> replan -> live migration.
+
+Two metrics per micro-batch, both on the paper's own cost model:
+
+  max-bank-load share — the fraction of that batch's row reads landing on
+      the hottest bank (1/n_banks is perfect). This is Fig. 6's y-axis, and
+      under Eq. 1 the bank-parallel lookup time is proportional to it.
+  modeled batch latency — max-bank reads x the UPMEM MRAM row-read latency
+      (hwmodel Fig. 3 curve at the row's byte size): the stage-2 term of
+      Eq. 1 for the slowest bank, which bounds the batch.
+
+Writes BENCH_workload.json; ``workload_drift()`` is the benchmarks/run.py
+hook. Wall-clock is NOT the claim here (CPU interpret-mode timings say
+nothing about bank parallelism); the latency column is the analytic model,
+the same one benchmarks/paper_figs.py uses for Figs. 8-11.
+
+    PYTHONPATH=src python benchmarks/bench_workload.py [--out BENCH_workload.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.hwmodel import UPMEMProfile
+from repro.core.partitioning import non_uniform_partition
+from repro.workload import (DriftConfig, DriftingZipfTrace, ReplanConfig,
+                            Replanner)
+
+VOCAB = 30_000
+DIM = 64
+BANKS = 8
+BATCH = 64
+WARMUP_BAGS = 512          # window the static plan is built from
+STREAM_BAGS = 4096         # drifting traffic both plans then serve
+SEED = 0
+
+DRIFT = DriftConfig(
+    n_items=VOCAB, zipf_a=1.08, avg_bag=12.0,
+    rotate_every=640, rotate_frac=0.3,
+    burst_prob=0.01, burst_len=48, burst_items=24, burst_share=0.5,
+)
+
+
+def _batch_stats(bags: list[np.ndarray], plan) -> tuple[float, float]:
+    """(max-bank-load share, modeled latency us) for one micro-batch."""
+    counts = np.zeros(plan.n_banks)
+    for bag in bags:
+        rows = np.unique(bag)
+        np.add.at(counts, plan.bank_of_row[rows], 1.0)
+    total = counts.sum()
+    share = float(counts.max() / total) if total else 1.0 / plan.n_banks
+    t_row = UPMEMProfile().mram_read_latency(DIM * 4)
+    return share, float(counts.max() * t_row * 1e6)
+
+
+def run(stream_bags: int = STREAM_BAGS, *, seed: int = SEED) -> dict:
+    cap = int(np.ceil(VOCAB / BANKS) * 1.25)
+    trace = DriftingZipfTrace(DRIFT, seed=seed)
+
+    # --- warmup window -> the shared starting plan -------------------------
+    warm = trace.bags(WARMUP_BAGS)
+    freq0 = np.zeros(VOCAB)
+    for bag in warm:
+        np.add.at(freq0, bag, 1.0)
+    static_plan = non_uniform_partition(freq0 + 1e-3, BANKS,
+                                        capacity_rows=cap)
+
+    rcfg = ReplanConfig.for_vocab(
+        VOCAB, BANKS, capacity_rows=cap, check_every=8,
+        min_jaccard=0.6, max_weighted_l1=0.5)
+    rp = Replanner(rcfg, VOCAB, init_freq=freq0 + 1e-3)
+    adaptive_plan = static_plan
+
+    # --- drifting stream: both plans score every batch ---------------------
+    rows_static, rows_adaptive = [], []
+    lat_static, lat_adaptive = [], []
+    n_batches = stream_bags // BATCH
+    for _ in range(n_batches):
+        bags = trace.bags(BATCH)
+        s_share, s_lat = _batch_stats(bags, static_plan)
+        a_share, a_lat = _batch_stats(bags, adaptive_plan)
+        rows_static.append(s_share)
+        rows_adaptive.append(a_share)
+        lat_static.append(s_lat)
+        lat_adaptive.append(a_lat)
+        # feed telemetry AFTER scoring (the plan serving a batch is the one
+        # installed before it arrived)
+        for bag in bags:
+            rp.telemetry.observe(bag)
+        update = rp.end_batch()
+        if update is not None:
+            adaptive_plan = update.plan
+
+    def p99(xs):
+        s = sorted(xs)
+        return s[min(len(s) - 1, int(0.99 * len(s)))]
+
+    return {
+        "config": {
+            "vocab": VOCAB, "dim": DIM, "banks": BANKS, "batch": BATCH,
+            "warmup_bags": WARMUP_BAGS, "stream_bags": stream_bags,
+            "drift": dataclass_dict(DRIFT), "seed": seed,
+            "latency_model": "max-bank row reads x UPMEM MRAM read latency "
+                             "(hwmodel Fig. 3), stage-2 term of Eq. 1",
+        },
+        "static": {
+            "mean_max_bank_load_share": float(np.mean(rows_static)),
+            "p99_max_bank_load_share": float(p99(rows_static)),
+            "p99_model_latency_us": float(p99(lat_static)),
+            "mean_model_latency_us": float(np.mean(lat_static)),
+        },
+        "adaptive": {
+            "mean_max_bank_load_share": float(np.mean(rows_adaptive)),
+            "p99_max_bank_load_share": float(p99(rows_adaptive)),
+            "p99_model_latency_us": float(p99(lat_adaptive)),
+            "mean_model_latency_us": float(np.mean(lat_adaptive)),
+            "n_replans": rp.n_replans,
+        },
+        "adaptive_wins": {
+            "lower_mean_max_bank_load":
+                float(np.mean(rows_adaptive)) < float(np.mean(rows_static)),
+            "no_worse_p99_latency":
+                p99(lat_adaptive) <= p99(lat_static) * 1.001,
+        },
+        "ideal_share": 1.0 / BANKS,
+    }
+
+
+def dataclass_dict(dc) -> dict:
+    import dataclasses
+    return dataclasses.asdict(dc)
+
+
+def workload_drift():
+    """benchmarks/run.py hook: (name, us_per_call, derived) rows. A short
+    stream keeps the CI run in seconds; the standalone script uses the full
+    one."""
+    doc = run(stream_bags=1024)
+    s, a = doc["static"], doc["adaptive"]
+    yield ("workload_static_p99_model", s["p99_model_latency_us"],
+           f"maxload{s['mean_max_bank_load_share']:.3f}")
+    yield ("workload_adaptive_p99_model", a["p99_model_latency_us"],
+           f"maxload{a['mean_max_bank_load_share']:.3f}"
+           f"_replans{a['n_replans']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_workload.json")
+    ap.add_argument("--stream-bags", type=int, default=STREAM_BAGS)
+    args = ap.parse_args()
+    doc = run(stream_bags=args.stream_bags)
+    with open(args.out, "w") as fh:
+        json.dump(doc, fh, indent=2)
+    s, a = doc["static"], doc["adaptive"]
+    print(f"{'':<10} {'mean max-bank share':>20} {'p99 share':>10} "
+          f"{'p99 model us':>13}")
+    print(f"{'static':<10} {s['mean_max_bank_load_share']:>20.4f} "
+          f"{s['p99_max_bank_load_share']:>10.4f} "
+          f"{s['p99_model_latency_us']:>13.1f}")
+    print(f"{'adaptive':<10} {a['mean_max_bank_load_share']:>20.4f} "
+          f"{a['p99_max_bank_load_share']:>10.4f} "
+          f"{a['p99_model_latency_us']:>13.1f}   "
+          f"(replans={a['n_replans']})")
+    print(f"ideal share {doc['ideal_share']:.4f}; wins={doc['adaptive_wins']}")
+    print(f"wrote {args.out}")
+    if not all(doc["adaptive_wins"].values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,8 @@ def main() -> None:
         benches.append(F.measured_lookup_paths)
         from benchmarks.bench_embedding import embedding_backends
         benches.append(embedding_backends)
+        from benchmarks.bench_workload import workload_drift
+        benches.append(workload_drift)
 
     print("name,us_per_call,derived")
     failed = 0

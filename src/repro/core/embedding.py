@@ -568,6 +568,129 @@ def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
 
 
 # ---------------------------------------------------------------------------
+# CSR batch sharding: balanced split of the ragged stream over dp shards
+# ---------------------------------------------------------------------------
+
+def balanced_csr_shards(offsets: np.ndarray, n_shards: int) -> np.ndarray:
+    """(n_shards + 1,) bag-aligned cut points with near-equal per-shard INDEX
+    totals (not bag counts — ragged bags make those very different).
+
+    Cut k lands on the bag boundary closest to total * k / n_shards; with
+    any bag smaller than total / n_shards the per-shard imbalance is at most
+    one bag's length.
+    """
+    offsets = np.asarray(offsets, np.int64)
+    num_bags = offsets.shape[0] - 1
+    total = int(offsets[-1])
+    targets = total * np.arange(1, n_shards) / n_shards
+    cuts = np.searchsorted(offsets, targets, side="left")
+    # snap to the nearer of the two surrounding boundaries
+    left = np.clip(cuts - 1, 0, num_bags)
+    cuts = np.where(targets - offsets[left] < offsets[np.clip(cuts, 0,
+                                                              num_bags)]
+                    - targets, left, cuts)
+    cuts = np.clip(cuts, 0, num_bags)
+    bounds = np.concatenate([[0], np.maximum.accumulate(cuts), [num_bags]])
+    return bounds.astype(np.int64)
+
+
+def shard_csr_batch(indices: np.ndarray, offsets: np.ndarray,
+                    n_shards: int) -> dict:
+    """Host-side prep (pre-processing stage, like ``rewrite_bags``): split a
+    CSR batch into ``n_shards`` equal-total slices, padded to one static
+    shape. Returns stacked per-shard arrays ready for
+    ``csr_embedding_bag_sharded``:
+
+      idx (S, cap)   flat row ids, -1 padded
+      seg (S, cap)   GLOBAL bag id per entry (num_bags on padding)
+      bounds (S+1,)  the bag cut points
+    """
+    indices = np.asarray(indices)
+    offsets = np.asarray(offsets, np.int64)
+    num_bags = offsets.shape[0] - 1
+    seg = np.repeat(np.arange(num_bags), np.diff(offsets))
+    bounds = balanced_csr_shards(offsets, n_shards)
+    caps = offsets[bounds[1:]] - offsets[bounds[:-1]]
+    cap = max(int(caps.max()), 1)
+    idx_s = np.full((n_shards, cap), -1, dtype=np.int32)
+    seg_s = np.full((n_shards, cap), num_bags, dtype=np.int32)
+    for s in range(n_shards):
+        lo, hi = int(offsets[bounds[s]]), int(offsets[bounds[s + 1]])
+        idx_s[s, :hi - lo] = indices[lo:hi]
+        seg_s[s, :hi - lo] = seg[lo:hi]
+    return {"idx": idx_s, "seg": seg_s, "bounds": bounds}
+
+
+def csr_embedding_bag_sharded(t: BankedTable, indices: np.ndarray,
+                              offsets: np.ndarray, num_bags: int,
+                              dist: DistCtx | None, *, backend: str = "auto",
+                              tile_b: int = 8,
+                              interpret: bool | None = None) -> Array:
+    """CSR bag sums with the flat stream SHARDED over dp (vs the replicating
+    ``csr_embedding_bag``): each dp shard owns a contiguous bag range chosen
+    by ``balanced_csr_shards`` so per-shard index totals are near-equal, does
+    its own stage 2 against its bank slice, and the (num_bags, D) partials
+    combine in one psum over (dp, bank).
+
+    ``indices``/``offsets`` must be HOST (concrete) arrays — the balanced
+    split is data-dependent and runs in the pre-processing stage. ``offsets``
+    may be starts-only (length num_bags, ``csr_embedding_bag``'s convention)
+    or include the trailing total (length num_bags + 1).
+    """
+    indices = np.asarray(indices)
+    offsets = np.asarray(offsets, np.int64)
+    if offsets.shape[0] == num_bags:       # starts-only -> append the total
+        offsets = np.concatenate([offsets, [indices.shape[0]]])
+    assert offsets.shape[0] == num_bags + 1, (offsets.shape, num_bags)
+    if dist is None or dist.dp_size() == 1:
+        return csr_embedding_bag(t, jnp.asarray(indices),
+                                 jnp.asarray(offsets[:num_bags]), num_bags,
+                                 dist, backend=backend, tile_b=tile_b,
+                                 interpret=interpret)
+    backend = _resolve_backend(backend)
+    interpret = _default_interpret(interpret)
+    nd = dist.dp_size()
+    sh = shard_csr_batch(indices, offsets, nd)
+    nb_pad = -(-num_bags // tile_b) * tile_b
+    bounds = sh["bounds"]
+    # per-shard clipped cumulative offsets: bags outside the shard's range
+    # collapse to empty [x, x) spans, so the CSR kernel's per-tile walk
+    # touches only owned entries
+    offs_ext = np.concatenate([offsets, np.full(nb_pad + 1 - num_bags - 1,
+                                                offsets[-1])])
+    lo = offsets[bounds[:-1]][:, None]                     # (S, 1)
+    hi = offsets[bounds[1:]][:, None]
+    offs_s = np.clip(offs_ext[None, :] - lo, 0, hi - lo).astype(np.int32)
+
+    P = jax.sharding.PartitionSpec
+    dp = dist.dp_axes if len(dist.dp_axes) > 1 else dist.dp_axes[0]
+    bank = dist.bank_axis
+
+    def fn(packed_local, bank_map, slot_map, idx_s, seg_s, offs_local):
+        my = jax.lax.axis_index(bank)
+        idx_local = idx_s[0]
+        seg_local = seg_s[0]
+        if backend == "pallas":
+            part = _pallas_csr_bag((tile_b, interpret, nb_pad), packed_local,
+                                   bank_map, slot_map, my.astype(jnp.int32),
+                                   idx_local, seg_local,
+                                   offs_local[0])[:num_bags]
+        else:
+            part = _local_gather_partial(packed_local, bank_map, slot_map,
+                                         idx_local, my)
+            part = jax.ops.segment_sum(part, seg_local, num_bags)
+        return jax.lax.psum(part, (*dist.dp_axes, bank))
+
+    return shard_map(
+        fn, mesh=dist.mesh,
+        in_specs=(P(bank, None), P(), P(), P(dp, None), P(dp, None),
+                  P(dp, None)),
+        out_specs=P(),
+    )(t.packed, t.remap_bank, t.remap_slot, jnp.asarray(sh["idx"]),
+      jnp.asarray(sh["seg"]), jnp.asarray(offs_s))
+
+
+# ---------------------------------------------------------------------------
 # column-split table (the paper's N_c axis, TPU rendition)
 # ---------------------------------------------------------------------------
 

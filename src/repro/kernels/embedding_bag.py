@@ -118,6 +118,16 @@ def _plain_entry_fns(idx_ref, b0, bag_len):
 # 128-lane alignment rule and the -1 bag fill)
 # ---------------------------------------------------------------------------
 
+def effective_lengths(idx: jax.Array) -> jax.Array:
+    """(B, L) -1-padded bags -> (B,) int32 count through the LAST valid
+    entry (1 + its position; 0 for all-pad bags). Interior -1 holes are kept
+    inside the walk — the in-kernel validity mask still skips them — so the
+    early exit is exact for any padding pattern, suffix or not."""
+    valid = idx >= 0
+    last = idx.shape[1] - jnp.argmax(valid[:, ::-1], axis=1)
+    return jnp.where(valid.any(axis=1), last, 0).astype(jnp.int32)
+
+
 def pad_last_dim(x: jax.Array, mult: int = 128) -> tuple[jax.Array, int]:
     """Pad the trailing dim to a multiple (TPU lane alignment, §3.1 rule)."""
     d = x.shape[-1]
@@ -151,17 +161,21 @@ def _plain_bag_kernel(idx_ref, table_ref, out_ref, buf, sem, *,
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
-def _plain_fused_kernel(cache_idx_ref, resid_idx_ref, cache_ref, emt_ref,
-                        out_ref, buf, sem, *, tile_b: int, lc: int, lr: int,
-                        dim: int):
+def _plain_fused_kernel(cache_idx_ref, resid_idx_ref, c_len_ref, r_len_ref,
+                        cache_ref, emt_ref, out_ref, buf, sem, *,
+                        tile_b: int, lc: int, lr: int, dim: int):
     b0 = pl.program_id(0) * tile_b
     acc = jnp.zeros((tile_b, dim), jnp.float32)
     c_src, c_meta = _plain_entry_fns(cache_idx_ref, b0, lc)
-    acc = _dma_accumulate(acc, cache_ref, buf, sem, 0, tile_b * lc,
-                          c_src, c_meta)
     r_src, r_meta = _plain_entry_fns(resid_idx_ref, b0, lr)
-    acc = _dma_accumulate(acc, emt_ref, buf, sem, 0, tile_b * lr,
-                          r_src, r_meta)
+    # per-bag early exit on the prefetched effective lengths (CSR-style):
+    # the walk stops at each bag's last valid entry instead of masked-
+    # accumulating the full L — all-pad bags cost zero DMAs
+    for i in range(tile_b):
+        acc = _dma_accumulate(acc, cache_ref, buf, sem, i * lc,
+                              i * lc + c_len_ref[b0 + i], c_src, c_meta)
+        acc = _dma_accumulate(acc, emt_ref, buf, sem, i * lr,
+                              i * lr + r_len_ref[b0 + i], r_src, r_meta)
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
@@ -177,27 +191,28 @@ def _banked_bag_kernel(idx_ref, bank_ref, slot_ref, off_ref, my_ref,
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
-def _fused_cache_bag_kernel(cache_idx_ref, resid_idx_ref, c_bank_ref,
-                            c_slot_ref, r_bank_ref, r_slot_ref, my_ref,
-                            zero_off_ref, cache_ref, emt_ref, out_ref, buf,
-                            sem, *, tile_b: int, lc: int, lr: int, dim: int):
+def _fused_cache_bag_kernel(cache_idx_ref, resid_idx_ref, c_len_ref,
+                            r_len_ref, c_bank_ref, c_slot_ref, r_bank_ref,
+                            r_slot_ref, my_ref, zero_off_ref, cache_ref,
+                            emt_ref, out_ref, buf, sem, *, tile_b: int,
+                            lc: int, lr: int, dim: int):
     """Fig. 7 fused lookup: Σ cache partial-sums + Σ residual EMT rows, one
-    accumulator, one output write. The two streams run back-to-back through
-    the same ping-pong buffers (the bubble between them is a single DMA)."""
+    accumulator, one output write. Both streams run through the same
+    ping-pong buffers; each bag's walk ends at its prefetched effective
+    length (c_len/r_len — trailing -1 padding trimmed, CSR-style), so short
+    bags in a long-L batch stop early instead of masked-accumulating L."""
     b0 = pl.program_id(0) * tile_b
     my = my_ref[0]
     acc = jnp.zeros((tile_b, dim), jnp.float32)
-
     c_src, c_meta = _entry_fns(cache_idx_ref, c_bank_ref, c_slot_ref,
                                zero_off_ref, my, b0, lc, 1)
-    acc = _dma_accumulate(acc, cache_ref, buf, sem, 0, tile_b * lc,
-                          c_src, c_meta)
-
     r_src, r_meta = _entry_fns(resid_idx_ref, r_bank_ref, r_slot_ref,
                                zero_off_ref, my, b0, lr, 1)
-    acc = _dma_accumulate(acc, emt_ref, buf, sem, 0, tile_b * lr,
-                          r_src, r_meta)
-
+    for i in range(tile_b):
+        acc = _dma_accumulate(acc, cache_ref, buf, sem, i * lc,
+                              i * lc + c_len_ref[b0 + i], c_src, c_meta)
+        acc = _dma_accumulate(acc, emt_ref, buf, sem, i * lr,
+                              i * lr + r_len_ref[b0 + i], r_src, r_meta)
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
@@ -311,7 +326,7 @@ def plain_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
     kernel = functools.partial(_plain_fused_kernel, tile_b=tile_b, lc=Lc,
                                lr=Lr, dim=D)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4,
         grid=(B // tile_b,),
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
                   pl.BlockSpec(memory_space=pltpu.ANY)],
@@ -322,7 +337,9 @@ def plain_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, D), emt.dtype),
         interpret=interpret,
-    )(cache_idx.reshape(-1), residual_idx.reshape(-1), cache, emt)
+    )(cache_idx.reshape(-1), residual_idx.reshape(-1),
+      effective_lengths(cache_idx), effective_lengths(residual_idx),
+      cache, emt)
 
 
 def fused_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
@@ -342,7 +359,7 @@ def fused_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
     kernel = functools.partial(_fused_cache_bag_kernel, tile_b=tile_b,
                                lc=Lc, lr=Lr, dim=D)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=8,
+        num_scalar_prefetch=10,
         grid=(B // tile_b,),
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
                   pl.BlockSpec(memory_space=pltpu.ANY)],
@@ -353,9 +370,10 @@ def fused_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, D), emt.dtype),
         interpret=interpret,
-    )(cache_idx.reshape(-1), residual_idx.reshape(-1), cache_bank,
-      cache_slot, emt_bank, emt_slot, my_bank, jnp.zeros((1,), jnp.int32),
-      cache, emt)
+    )(cache_idx.reshape(-1), residual_idx.reshape(-1),
+      effective_lengths(cache_idx), effective_lengths(residual_idx),
+      cache_bank, cache_slot, emt_bank, emt_slot, my_bank,
+      jnp.zeros((1,), jnp.int32), cache, emt)
 
 
 def csr_bag_pallas(table: jax.Array, bank: jax.Array, slot: jax.Array,

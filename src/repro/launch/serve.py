@@ -3,6 +3,13 @@
 Simulates the paper's online-inference setup with the MicroBatcher: a stream
 of requests, cache-aware rewriting in the pre-process stage, jitted scoring,
 p50/p99 latency report.
+
+``--adaptive`` (dlrm only) turns on the repro.workload closed loop: requests
+come from a DRIFTING Zipf stream, the MicroBatcher's observer tap feeds the
+telemetry, and on detected drift the table is repartitioned and live-migrated
+between micro-batches. The remap vectors are jit ARGUMENTS (not closure
+constants) and the packed shape is pinned to a fixed per-bank capacity, so a
+swap never recompiles the serve step.
 """
 from __future__ import annotations
 
@@ -26,12 +33,27 @@ def main() -> None:
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "jnp", "pallas"),
                     help="embedding stage-2 backend (dlrm only)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="online telemetry + drift-triggered repartitioning "
+                         "with live table migration (dlrm only)")
+    ap.add_argument("--banks", type=int, default=8,
+                    help="bank count for the adaptive partition")
+    ap.add_argument("--replan-every", type=int, default=8,
+                    help="micro-batches between drift checks")
+    ap.add_argument("--capacity-slack", type=float, default=0.25,
+                    help="per-bank row headroom over vocab/banks")
+    ap.add_argument("--drift-rotate-every", type=int, default=512,
+                    help="requests between hot-set rotations of the "
+                         "synthetic drifting stream")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
     assert spec.family in ("dlrm", "din", "xdeepfm"), "recsys serving CLI"
     cfg = spec.reduced
     mod = __import__(f"repro.models.{spec.family}", fromlist=["forward"])
+    if args.adaptive:
+        assert spec.family == "dlrm", "--adaptive drives the banked super-table"
+        return _main_adaptive(args, spec, cfg, mod)
     params, statics = mod.init_params(cfg, jax.random.key(args.seed))
     from repro.serve.serve_step import build_recsys_serve
     backend = args.backend if spec.family == "dlrm" else None
@@ -68,6 +90,85 @@ def main() -> None:
     p50 = lat[len(lat) // 2] * 1e3
     print(f"served {len(lat)} requests  p50={p50:.2f}ms "
           f"p99={mb.p99() * 1e3:.2f}ms")
+
+
+def _main_adaptive(args, spec, cfg, mod) -> None:
+    """Drifting traffic -> telemetry -> replan -> migrate -> swap, live."""
+    from repro.core.embedding import BankedTable
+    from repro.core.partitioning import non_uniform_partition
+    from repro.workload import (AdaptiveEmbeddingRuntime, DriftConfig,
+                                DriftingZipfTrace, ReplanConfig,
+                                dlrm_drifting_batch, rows_from_sparse)
+
+    banks = args.banks
+    V = cfg.total_vocab
+    cap = int(np.ceil(V / banks) * (1.0 + args.capacity_slack))
+    plan = non_uniform_partition(np.ones(V), banks, capacity_rows=cap)
+    params, statics = mod.init_params(cfg, jax.random.key(args.seed),
+                                      plan=plan, rows_per_bank=cap)
+    offs = np.asarray(statics["field_offsets"])
+
+    table = BankedTable(packed=params["emb_packed"],
+                        remap_bank=statics["remap_bank"],
+                        remap_slot=statics["remap_slot"],
+                        n_banks=banks, rows_per_bank=cap)
+    rcfg = ReplanConfig.for_vocab(V, banks, capacity_rows=cap,
+                                  check_every=args.replan_every)
+    runtime = AdaptiveEmbeddingRuntime(table, plan, rcfg,
+                                       init_freq=np.ones(V))
+
+    # remap vectors enter as ARGUMENTS: a swap feeds new arrays of the same
+    # shape to the same executable — zero recompiles across replans
+    @jax.jit
+    def serve(params, remap_bank, remap_slot, batch):
+        st = {**statics, "remap_bank": remap_bank, "remap_slot": remap_slot}
+        logits = mod.forward(cfg, params, st, batch, backend=args.backend)
+        return jax.nn.sigmoid(logits)
+
+    def observe(feats, n_real):
+        sp = np.asarray(feats["sparse"])[:n_real]        # (n, F) or (n, F, L)
+        runtime.observe_batch(rows_from_sparse(sp, offs))
+
+    from repro.serve.serve_step import MicroBatcher, Request
+    mh = max(cfg.multi_hot, 1)
+    traces = [DriftingZipfTrace(
+        DriftConfig(n_items=v, zipf_a=1.05, avg_bag=float(mh),
+                    rotate_every=args.drift_rotate_every, rotate_frac=0.25),
+        seed=args.seed + f) for f, v in enumerate(cfg.vocab_sizes)]
+    rng = np.random.default_rng(args.seed)
+
+    def one_request(rid):
+        sparse = dlrm_drifting_batch(traces, 1, cfg.multi_hot)[0]
+        return {"dense": rng.standard_normal(cfg.n_dense).astype(np.float32),
+                "sparse": sparse}
+
+    pad = one_request(-1)
+    mb = MicroBatcher(args.batch, pad, observer=observe)
+
+    def run_batch():
+        reqs, feats = mb.next_batch()
+        p = {**params, "emb_packed": runtime.table.packed}
+        scores = serve(p, runtime.table.remap_bank, runtime.table.remap_slot,
+                       feats)
+        jax.block_until_ready(scores)
+        mb.complete(reqs)
+        event = runtime.end_batch()        # drift check -> migrate -> swap
+        if event is not None:
+            print(f"  [swap @batch {event.batch}] {event.update.report} "
+                  f"imbalance {event.old_imbalance:.3f} -> "
+                  f"{event.new_imbalance:.3f}")
+
+    for rid in range(args.requests):
+        mb.submit(Request(rid=rid, features=one_request(rid)))
+        if len(mb.queue) >= args.batch:
+            run_batch()
+    while mb.ready():
+        run_batch()
+
+    lat = sorted(mb.latencies)
+    p50 = lat[len(lat) // 2] * 1e3
+    print(f"served {len(lat)} requests  p50={p50:.2f}ms "
+          f"p99={mb.p99() * 1e3:.2f}ms  replans={runtime.replanner.n_replans}")
 
 
 def _one(spec, cfg, rng, rid):

@@ -70,6 +70,16 @@ def main() -> None:
                     choices=("auto", "jnp", "pallas"),
                     help="embedding stage-2 backend (dlrm; fwd AND bwd via "
                          "the kernel's scatter-add custom_vjp)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="telemetry + drift-triggered repartitioning of the "
+                         "banked table during training (dlrm only); the "
+                         "row-wise Adagrad state migrates with its rows")
+    ap.add_argument("--banks", type=int, default=8,
+                    help="bank count for the adaptive partition")
+    ap.add_argument("--replan-every", type=int, default=25,
+                    help="steps between drift checks (--adaptive)")
+    ap.add_argument("--capacity-slack", type=float, default=0.25,
+                    help="per-bank row headroom over vocab/banks")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -77,9 +87,29 @@ def main() -> None:
     key = jax.random.key(args.seed)
 
     statics = None
+    replanner = None
+    cap = None
+    if args.adaptive:
+        assert spec.family == "dlrm", "--adaptive drives the banked super-table"
+        from repro.core.partitioning import non_uniform_partition
+        from repro.workload import (ReplanConfig, Replanner,
+                                    rows_from_sparse)
+        V = cfg.total_vocab
+        cap = int(np.ceil(V / args.banks) * (1.0 + args.capacity_slack))
+        plan = non_uniform_partition(np.ones(V), args.banks,
+                                     capacity_rows=cap)
+        replanner = Replanner(
+            ReplanConfig.for_vocab(V, args.banks, capacity_rows=cap,
+                                   check_every=args.replan_every),
+            V, init_freq=np.ones(V))
     if spec.family == "lm":
         from repro.models import transformer as T
         params = T.init_params(cfg, key)
+    elif args.adaptive:
+        mod = __import__(f"repro.models.{spec.family}",
+                         fromlist=["init_params"])
+        params, statics = mod.init_params(cfg, key, plan=plan,
+                                          rows_per_bank=cap)
     else:
         mod = __import__(f"repro.models.{spec.family}",
                          fromlist=["init_params"])
@@ -99,12 +129,26 @@ def main() -> None:
     if ck and latest_step(args.ckpt_dir) is not None:
         state, start = restore_checkpoint(args.ckpt_dir, state)
         print(f"restored step {start}")
+        # --adaptive: the checkpointed emb_packed follows whatever plan was
+        # live at save time, NOT the deterministic initial plan — restore the
+        # remap vectors saved FOR THIS STEP (per-step files: the restored
+        # checkpoint may not be the newest save, e.g. a crash mid-write) or
+        # every lookup would silently gather the wrong rows
+        if replanner is not None:
+            remaps = _load_remaps(args.ckpt_dir, start)
+            if remaps is not None:
+                statics["remap_bank"] = jnp.asarray(remaps["remap_bank"])
+                statics["remap_slot"] = jnp.asarray(remaps["remap_slot"])
 
     batch_fn = make_batch_fn(spec, cfg)
     wd = StragglerWatchdog()
     t_begin = time.time()
+    n_migrations = 0
+    field_offs = np.asarray(statics["field_offsets"]) if replanner else None
     for step in range(start, args.steps):
         b = batch_fn(args.batch, args.seed, step)
+        if replanner is not None:
+            replanner.observe_rows(rows_from_sparse(b["sparse"], field_offs))
         b = {k: jnp.asarray(v) for k, v in b.items()}
         t0 = time.time()
         state, metrics = step_fn(state, b)
@@ -113,12 +157,71 @@ def main() -> None:
         if step % args.log_every == 0 or step == args.steps - 1:
             print(f"step {step:5d} loss {loss:.4f} "
                   f"({(time.time() - t0) * 1e3:.0f} ms)")
+        if replanner is not None:
+            update = replanner.end_batch()
+            if update is not None:
+                # migrate table rows + their row-wise Adagrad history in one
+                # pass, swap the remap vectors, rebuild the jitted step (the
+                # remaps are closure constants on the train path)
+                from repro.core.embedding import BankedTable
+                from repro.workload import migrate_packed_leaves
+                old_t = BankedTable(packed=state.params["emb_packed"],
+                                    remap_bank=statics["remap_bank"],
+                                    remap_slot=statics["remap_slot"],
+                                    n_banks=args.banks, rows_per_bank=cap)
+                state = migrate_packed_leaves(state, old_t, update.plan,
+                                              rows_per_bank=cap)
+                statics["remap_bank"] = jnp.asarray(update.plan.bank_of_row,
+                                                    jnp.int32)
+                statics["remap_slot"] = jnp.asarray(update.plan.slot_of_row,
+                                                    jnp.int32)
+                loss_fn = build_loss(spec, cfg, statics,
+                                     backend=args.backend)
+                step_fn = jax.jit(build_train_step(
+                    loss_fn, opt, compress_grads=args.compress_grads))
+                n_migrations += 1
+                print(f"  [migrate @step {step}] {update.report} "
+                      f"imbalance -> {update.plan.imbalance():.3f}")
         if ck and (step + 1) % args.ckpt_every == 0:
+            if replanner is not None:
+                _save_remaps(args.ckpt_dir, statics, step + 1)
             ck.save(step + 1, state)
     if ck:
+        if replanner is not None:
+            _save_remaps(args.ckpt_dir, statics, args.steps)
         ck.save(args.steps, state)
         ck.join()
-    print(f"done in {time.time() - t_begin:.1f}s; stragglers={wd.events}")
+    extra = f"; migrations={n_migrations}" if replanner is not None else ""
+    print(f"done in {time.time() - t_begin:.1f}s; stragglers={wd.events}"
+          + extra)
+
+
+def _remaps_path(ckpt_dir: str, step: int) -> str:
+    import os
+    return os.path.join(ckpt_dir, f"adaptive_remaps_{step}.npz")
+
+
+def _save_remaps(ckpt_dir: str, statics: dict, step: int) -> None:
+    """Persist the LIVE plan's remap vectors for THIS checkpoint step — the
+    packed table layout and its remaps must restore as a pair, and the
+    restored step may be older than the newest remaps (checkpoints are
+    written asynchronously and pruned; restore picks the newest COMPLETE
+    one). Written synchronously BEFORE ck.save so a crash can only orphan a
+    remaps file, never a checkpoint."""
+    import os
+    os.makedirs(ckpt_dir, exist_ok=True)
+    np.savez(_remaps_path(ckpt_dir, step),
+             remap_bank=np.asarray(statics["remap_bank"]),
+             remap_slot=np.asarray(statics["remap_slot"]))
+
+
+def _load_remaps(ckpt_dir: str, step: int):
+    import os
+    p = _remaps_path(ckpt_dir, step)
+    if not os.path.exists(p):
+        return None     # checkpoint predates --adaptive: initial plan holds
+    with np.load(p) as z:
+        return {"remap_bank": z["remap_bank"], "remap_slot": z["remap_slot"]}
 
 
 if __name__ == "__main__":

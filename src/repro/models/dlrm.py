@@ -88,14 +88,21 @@ def mlp_apply(p: dict, x: Array, act=jax.nn.relu, final_act=None) -> Array:
     return x
 
 
-def init_params(cfg: DLRMConfig, key, plan=None) -> tuple[dict, dict]:
+def init_params(cfg: DLRMConfig, key, plan=None,
+                rows_per_bank: int | None = None) -> tuple[dict, dict]:
     """Returns (params, statics). ``plan`` is a PartitionPlan over the union
-    vocab; statics carries the row remap (untrained int arrays)."""
+    vocab; statics carries the row remap (untrained int arrays).
+
+    ``rows_per_bank`` over-allocates each bank to a fixed capacity (>= the
+    plan's max) so later plans can be swapped in-place without changing the
+    packed shape — the adaptive-replanning contract (repro.workload)."""
     from repro.core.partitioning import uniform_partition
     k1, k2, k3 = jax.random.split(key, 3)
     if plan is None:
         plan = uniform_partition(cfg.total_vocab, 1)
-    rows_per_bank = int(plan.max_rows_per_bank)
+    rows_per_bank = int(plan.max_rows_per_bank if rows_per_bank is None
+                        else rows_per_bank)
+    assert rows_per_bank >= plan.max_rows_per_bank
     packed = embed_init(k1, (plan.n_banks * rows_per_bank, cfg.embed_dim),
                         dtype=cfg.emb_dtype)
     params = {

@@ -81,11 +81,19 @@ class Request:
 
 class MicroBatcher:
     """Collects requests into fixed-size batches (pad the tail) so the jitted
-    serve step sees one static shape; tracks per-request latency."""
+    serve step sees one static shape; tracks per-request latency.
 
-    def __init__(self, batch_size: int, pad_request: dict):
+    ``observer`` is the workload-telemetry tap (repro.workload): called as
+    ``observer(feats, n_real)`` on every assembled batch, where ``n_real`` is
+    the count of genuine (non-pad) requests — pad rows replicate a prototype
+    request and must not be counted as traffic.
+    """
+
+    def __init__(self, batch_size: int, pad_request: dict,
+                 observer: Callable[[dict, int], None] | None = None):
         self.batch_size = batch_size
         self.pad_request = pad_request
+        self.observer = observer
         self.queue: deque[Request] = deque()
         self.latencies: list[float] = []
 
@@ -104,6 +112,8 @@ class MicroBatcher:
             rows = [r.features[key] for r in reqs]
             rows += [self.pad_request[key]] * n_pad
             feats[key] = jnp.stack([jnp.asarray(r) for r in rows])
+        if self.observer is not None:
+            self.observer(feats, len(reqs))
         return reqs, feats
 
     def complete(self, reqs: list[Request]) -> None:

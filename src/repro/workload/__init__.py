@@ -1,0 +1,27 @@
+"""Online workload telemetry + adaptive repartitioning (README.md).
+
+Closes the loop the paper leaves open: §3's partitioners need access
+frequencies, this package measures them live, detects drift, replans, and
+migrates the banked tables without a serving pause.
+"""
+from repro.workload.telemetry import (CountMinSketch, DriftDetector,
+                                      DriftReport, TableTelemetry,
+                                      TopKCounter, rows_from_sparse,
+                                      topk_jaccard, weighted_l1)
+from repro.workload.trace import (DriftConfig, DriftingZipfTrace,
+                                  dlrm_drifting_batch, read_criteo_tsv)
+from repro.workload.replanner import PlanUpdate, ReplanConfig, Replanner
+from repro.workload.migrate import (migrate_packed_leaves,
+                                    migrate_rowwise_state, migrate_table,
+                                    permute_packed_rows)
+from repro.workload.runtime import AdaptiveEmbeddingRuntime, SwapEvent
+
+__all__ = [
+    "AdaptiveEmbeddingRuntime", "CountMinSketch", "DriftConfig",
+    "DriftDetector", "DriftReport", "DriftingZipfTrace", "PlanUpdate",
+    "ReplanConfig", "Replanner", "SwapEvent", "TableTelemetry", "TopKCounter",
+    "dlrm_drifting_batch", "migrate_packed_leaves", "migrate_rowwise_state",
+    "migrate_table",
+    "permute_packed_rows", "read_criteo_tsv", "rows_from_sparse",
+    "topk_jaccard", "weighted_l1",
+]

@@ -1,0 +1,147 @@
+"""Background replanning: live counters -> fresh §3 partition plan.
+
+The decision loop (README.md):
+
+    every ``check_every`` batches:
+        report = DriftDetector.check(telemetry)       # vs plan-time freqs
+        if report.drifted:
+            freq = telemetry.freq_vector()
+            plan = non_uniform_partition(freq, ...)   # or cache-aware
+            (cache plan remined + cache table rebuilt when cache-aware)
+            -> PlanUpdate for the runtime to migrate + swap
+
+The replanner itself is host-side and cheap (the greedy partitioners are
+O(V log B)); the expensive part — moving rows — is migrate.py's job, and
+WHETHER to pay it is exactly what the drift detector gates.
+
+``capacity_rows`` should be the serving table's fixed per-bank capacity so
+every plan the replanner emits fits the already-allocated packed array
+(shape-stable swaps; see migrate.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.core.grace import CachePlan, mine_cooccurrence
+from repro.core.partitioning import (PartitionPlan, cache_aware_partition,
+                                     non_uniform_partition)
+from repro.workload.telemetry import DriftDetector, DriftReport, TableTelemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanConfig:
+    n_banks: int
+    partitioner: str = "non_uniform"       # 'non_uniform' | 'cache_aware'
+    capacity_rows: int | None = None       # per-bank row budget (fixed shape)
+    check_every: int = 20                  # batches between drift checks
+    topk: int = 256                        # hot-set size for the Jaccard test
+    min_jaccard: float = 0.5
+    max_weighted_l1: float = 0.5
+    min_observations: int = 2000
+    # cache-aware only: GRACE re-mining window + knobs
+    mine_window: int = 512                 # recent bags kept for re-mining
+    mine_top_items: int = 2048
+    mine_max_groups: int = 256
+    mine_min_support: int = 3
+
+    @classmethod
+    def for_vocab(cls, vocab: int, n_banks: int, **overrides) -> "ReplanConfig":
+        """Defaults scaled to the table size: the hot-set Jaccard needs a k
+        well under the vocab (k=vocab makes it identically 1.0), and the
+        detector should not arm before ~a few observations per hot row."""
+        scaled = dict(
+            topk=max(16, min(256, vocab // 8)),
+            min_observations=max(256, min(2000, 4 * vocab)),
+        )
+        scaled.update(overrides)
+        return cls(n_banks=n_banks, **scaled)
+
+
+@dataclasses.dataclass
+class PlanUpdate:
+    plan: PartitionPlan
+    freq: np.ndarray                       # frequencies the plan was built on
+    report: DriftReport
+    cache_plan: CachePlan | None = None    # cache-aware: remined groups
+
+
+class Replanner:
+    """Owns the telemetry + drift detector + replan policy for ONE table
+    (DLRM's union-vocab super-table counts as one)."""
+
+    def __init__(self, cfg: ReplanConfig, vocab: int, *,
+                 init_freq: np.ndarray | None = None,
+                 telemetry: TableTelemetry | None = None):
+        self.cfg = cfg
+        self.vocab = vocab
+        self.telemetry = telemetry or TableTelemetry(vocab)
+        if init_freq is None:
+            init_freq = np.ones(vocab, dtype=np.float64)
+        self.detector = DriftDetector(
+            init_freq, k=cfg.topk, min_jaccard=cfg.min_jaccard,
+            max_weighted_l1=cfg.max_weighted_l1,
+            min_observations=cfg.min_observations)
+        self._recent_bags: deque[np.ndarray] = deque(maxlen=cfg.mine_window)
+        self._batches = 0
+        self.n_replans = 0
+        self.last_report: DriftReport | None = None
+
+    # -- feeding ------------------------------------------------------------
+
+    def observe_rows(self, rows: np.ndarray) -> None:
+        """Union-vocab row ids from one serve/train batch (any shape,
+        negatives = padding)."""
+        self.telemetry.observe(rows)
+
+    def observe_bags(self, bags: list[np.ndarray]) -> None:
+        """Bag-granular feed — also retained for cache re-mining."""
+        for bag in bags:
+            self.telemetry.observe(bag)
+            self._recent_bags.append(np.asarray(bag))
+
+    # -- planning -----------------------------------------------------------
+
+    def build_plan(self, freq: np.ndarray
+                   ) -> tuple[PartitionPlan, CachePlan | None]:
+        cfg = self.cfg
+        if cfg.partitioner == "non_uniform":
+            return non_uniform_partition(
+                freq, cfg.n_banks, capacity_rows=cfg.capacity_rows), None
+        if cfg.partitioner == "cache_aware":
+            if not self._recent_bags:
+                raise ValueError("cache_aware replanning needs observe_bags() "
+                                 "traffic to re-mine co-occurrence groups")
+            cp = mine_cooccurrence(
+                list(self._recent_bags), top_items=cfg.mine_top_items,
+                max_groups=cfg.mine_max_groups,
+                min_support=cfg.mine_min_support)
+            plan = cache_aware_partition(
+                freq, cp.groups, cp.benefits, cfg.n_banks,
+                emt_capacity_rows=cfg.capacity_rows)
+            return plan, cp
+        raise ValueError(f"unknown partitioner {cfg.partitioner!r}")
+
+    def force_replan(self, report: DriftReport | None = None) -> PlanUpdate:
+        freq = self.telemetry.freq_vector()
+        plan, cache_plan = self.build_plan(freq)
+        if report is None:
+            report = self.detector.check(self.telemetry)
+        self.detector.rebase(freq)
+        self.n_replans += 1
+        return PlanUpdate(plan=plan, freq=freq, report=report,
+                          cache_plan=cache_plan)
+
+    def end_batch(self) -> PlanUpdate | None:
+        """Advance the batch clock; on cadence, drift-check and (only if
+        drifted) emit a PlanUpdate. Returns None when the plan stands."""
+        self._batches += 1
+        if self._batches % self.cfg.check_every != 0:
+            return None
+        report = self.detector.check(self.telemetry)
+        self.last_report = report
+        if not report.drifted:
+            return None
+        return self.force_replan(report)

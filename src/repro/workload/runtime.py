@@ -1,0 +1,171 @@
+"""AdaptiveEmbeddingRuntime: the closed loop, packaged for the serve/train CLIs.
+
+Glues the subsystem together around one banked table:
+
+    observe_batch(rows)  ->  telemetry                       (every batch)
+    end_batch()          ->  drift check -> replan -> MIGRATE -> atomic swap
+                                                             (on cadence)
+
+The swap is atomic with respect to the serving loop because it happens on the
+host between micro-batches: the jitted step reads (packed, remap_bank,
+remap_slot) as ARGUMENTS (never closure constants), and the runtime replaces
+all three references at once. Shapes never change — the table keeps its
+initial ``rows_per_bank`` capacity across plans — so a swap costs zero
+recompiles.
+
+For training, ``migrate_aux`` applies the same row permutation to any
+packed-row-aligned extra (the row-wise Adagrad accumulator), keeping the
+optimizer's per-row history attached to its row through a migration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.embedding import BankedTable, DistCtx, pack_table
+from repro.core.cache_runtime import build_cache_table
+from repro.core.partitioning import PartitionPlan
+from repro.workload.migrate import migrate_rowwise_state, migrate_table
+from repro.workload.replanner import PlanUpdate, ReplanConfig, Replanner
+
+
+@dataclasses.dataclass
+class SwapEvent:
+    """What a completed replan+migration looked like (for logs/benches)."""
+
+    batch: int
+    update: PlanUpdate
+    old_imbalance: float
+    new_imbalance: float
+
+
+class AdaptiveEmbeddingRuntime:
+    def __init__(self, table: BankedTable, plan: PartitionPlan,
+                 cfg: ReplanConfig, *, dist: DistCtx | None = None,
+                 init_freq: np.ndarray | None = None,
+                 on_swap: Callable[[SwapEvent], None] | None = None):
+        if cfg.capacity_rows is not None \
+                and cfg.capacity_rows != table.rows_per_bank:
+            raise ValueError(
+                f"capacity_rows {cfg.capacity_rows} != table rows_per_bank "
+                f"{table.rows_per_bank}: shape-stable swaps need them equal")
+        self.table = table
+        self.plan = plan
+        self.dist = dist
+        self.on_swap = on_swap
+        self.replanner = Replanner(cfg, table.vocab, init_freq=init_freq)
+        self.swaps: list[SwapEvent] = []
+        self._batch = 0
+
+    # -- per-batch hooks ----------------------------------------------------
+
+    def observe_batch(self, rows: np.ndarray) -> None:
+        """Union-vocab row ids actually looked up this batch (padding < 0)."""
+        self.replanner.observe_rows(np.asarray(rows))
+
+    def observe_bags(self, bags: list[np.ndarray]) -> None:
+        self.replanner.observe_bags(bags)
+
+    def end_batch(self) -> SwapEvent | None:
+        """Advance the clock; migrate + swap if the replanner fired."""
+        self._batch += 1
+        update = self.replanner.end_batch()
+        if update is None:
+            return None
+        return self.apply(update)
+
+    # -- migration + swap ---------------------------------------------------
+
+    def apply(self, update: PlanUpdate) -> SwapEvent:
+        old_imb = self._realized_imbalance(self.plan, update.freq)
+        new_table = migrate_table(self.table, update.plan, self.dist,
+                                  rows_per_bank=self.table.rows_per_bank)
+        event = SwapEvent(batch=self._batch, update=update,
+                          old_imbalance=old_imb,
+                          new_imbalance=update.plan.imbalance())
+        # the swap: one host-side rebind of all plan-coupled references —
+        # in-flight micro-batches already captured the old arrays, the next
+        # micro-batch picks up the new ones
+        self.table = new_table
+        self.plan = update.plan
+        self.swaps.append(event)
+        if self.on_swap is not None:
+            self.on_swap(event)
+        return event
+
+    def migrate_aux(self, arr, update_or_plan) -> "np.ndarray":
+        """Permute a packed-row-aligned array (optimizer state) to match a
+        plan that apply() is about to install. Call BEFORE apply() — it needs
+        the pre-swap remap still on self.table."""
+        plan = update_or_plan.plan if isinstance(update_or_plan, PlanUpdate) \
+            else update_or_plan
+        return migrate_rowwise_state(arr, self.table, plan,
+                                     rows_per_bank=self.table.rows_per_bank)
+
+    def rebuild_cache_table(self, update: PlanUpdate,
+                            dtype=None) -> BankedTable | None:
+        """Cache-aware replans: rebuild the GRACE partial-sum table under the
+        new plan (entries re-summed from the CURRENT row values, placed on
+        the banks Algorithm 1 chose)."""
+        if update.cache_plan is None:
+            return None
+        import jax.numpy as jnp
+        # unpack current rows host-side (the cache table is tiny; its source
+        # rows are a gather over the members only)
+        t = self.table
+        flat = (np.asarray(t.remap_bank, np.int64) * t.rows_per_bank
+                + np.asarray(t.remap_slot))
+        packed = np.asarray(t.packed)
+        rows = packed[flat]                                   # (V, D)
+        cache_np = build_cache_table(rows, update.cache_plan)
+        plan = update.plan
+        if plan.cache_bank_of_entry is None:
+            from repro.core.partitioning import uniform_partition
+            cplan = uniform_partition(cache_np.shape[0], t.n_banks)
+        else:
+            cplan = _cache_side_plan(plan, update.cache_plan, t.n_banks)
+        return pack_table(cache_np, cplan, dtype=dtype)
+
+    @staticmethod
+    def _realized_imbalance(plan: PartitionPlan, freq: np.ndarray) -> float:
+        """max/mean of the CURRENT traffic under the (possibly stale) plan —
+        what the old plan actually costs, as opposed to plan.imbalance()
+        which scores it against its own build-time frequencies."""
+        loads = np.zeros(plan.n_banks)
+        np.add.at(loads, plan.bank_of_row, freq)
+        mean = loads.mean()
+        return float(loads.max() / mean) if mean > 0 else 1.0
+
+
+def _cache_side_plan(plan: PartitionPlan, cache_plan, n_banks: int
+                     ) -> PartitionPlan:
+    """Entry -> (bank, slot) for the partial-sum table: every subset entry
+    lives on its mined group's bank (Algorithm 1's co-location invariant);
+    groups that overflowed the cache fall back to bank of member 0."""
+    n_entries = max(cache_plan.n_entries, 1)
+    bank = np.zeros(n_entries, dtype=np.int32)
+    for eid, entry in enumerate(cache_plan.entries):
+        g = _group_of(cache_plan, eid)
+        b = int(plan.cache_bank_of_entry[g]) if g is not None else -1
+        bank[eid] = b if b >= 0 else int(plan.bank_of_row[entry.members[0]])
+    slot = np.zeros(n_entries, dtype=np.int32)
+    rows_per_bank = np.zeros(n_banks, dtype=np.int32)
+    for e in range(n_entries):
+        slot[e] = rows_per_bank[bank[e]]
+        rows_per_bank[bank[e]] += 1
+    freq = np.array([e.hits for e in cache_plan.entries], np.float64) \
+        if cache_plan.entries else np.zeros(1)
+    load = np.zeros(n_banks)
+    np.add.at(load, bank, freq[:n_entries])
+    return PartitionPlan(n_banks=n_banks, bank_of_row=bank, slot_of_row=slot,
+                         rows_per_bank=rows_per_bank, load_per_bank=load)
+
+
+def _group_of(cache_plan, entry_id: int) -> int | None:
+    members = set(cache_plan.entries[entry_id].members)
+    for g, grp in enumerate(cache_plan.groups):
+        if members <= set(int(x) for x in grp):
+            return g
+    return None

@@ -1,0 +1,452 @@
+"""repro.workload: telemetry bounds, drift detection, migration parity,
+balanced CSR sharding, and the early-exit fused kernel."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.core.embedding import (BankedTable, balanced_csr_shards,
+                                  banked_cache_residual_bag,
+                                  banked_embedding_bag, pack_table,
+                                  shard_csr_batch)
+from repro.core.partitioning import non_uniform_partition
+from repro.workload import (AdaptiveEmbeddingRuntime, CountMinSketch,
+                            DriftConfig, DriftDetector, DriftingZipfTrace,
+                            ReplanConfig, Replanner, TableTelemetry,
+                            TopKCounter, migrate_packed_leaves,
+                            migrate_table, read_criteo_tsv)
+from repro.workload.migrate import permute_packed_rows
+
+
+def zipf_ids(n_items, n_draws, a=1.1, seed=0):
+    rng = np.random.default_rng(seed)
+    p = np.arange(1, n_items + 1, dtype=np.float64) ** (-a)
+    return rng.choice(n_items, n_draws, p=p / p.sum())
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+class TestCountMinSketch:
+    def test_never_underestimates(self):
+        ids = zipf_ids(5000, 50_000)
+        cms = CountMinSketch(width=1024, depth=4)
+        cms.update(ids)
+        exact = np.bincount(ids, minlength=5000).astype(np.float64)
+        est = cms.query(np.arange(5000))
+        assert (est >= exact - 1e-9).all()
+
+    def test_error_bound(self):
+        """Overestimate <= eps * total with prob >= 1 - e^-depth; with
+        depth=5 the failure prob is ~0.7% per query — check the MAX error
+        over the vocab stays within the bound (generous determinstic run)."""
+        ids = zipf_ids(2000, 100_000, seed=1)
+        cms = CountMinSketch(width=2048, depth=5, seed=1)
+        cms.update(ids)
+        exact = np.bincount(ids, minlength=2000).astype(np.float64)
+        err = cms.query(np.arange(2000)) - exact
+        # all-query max err: allow 3x the single-query eps bound
+        assert err.max() <= 3 * cms.epsilon * cms.total
+
+    def test_error_bound_property(self):
+        hypothesis = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @given(seed=st.integers(0, 50), a=st.floats(0.6, 1.5),
+               width=st.sampled_from([512, 1024, 4096]))
+        @settings(max_examples=20, deadline=None)
+        def check(seed, a, width):
+            ids = zipf_ids(1000, 20_000, a=a, seed=seed)
+            cms = CountMinSketch(width=width, depth=4, seed=seed)
+            cms.update(ids)
+            exact = np.bincount(ids, minlength=1000).astype(np.float64)
+            est = cms.query(np.arange(1000))
+            assert (est >= exact - 1e-9).all()           # conservative
+            # mean overestimate is far inside the eps bound
+            assert (est - exact).mean() <= cms.epsilon * cms.total
+
+        check()
+
+    def test_scale_decay(self):
+        cms = CountMinSketch(width=64, depth=2)
+        cms.update(np.array([3, 3, 3, 7]))
+        cms.scale(0.5)
+        assert cms.query(np.array([3]))[0] == pytest.approx(1.5)
+        assert cms.total == pytest.approx(2.0)
+
+
+class TestTopKCounter:
+    def test_exact_under_budget(self):
+        ids = zipf_ids(300, 10_000)
+        tk = TopKCounter(budget=300)
+        tk.update(ids)
+        exact = np.bincount(ids, minlength=300)
+        assert tk.evictions == 0
+        for i, c in tk.counts.items():
+            assert c == exact[i]
+
+    def test_heavy_hitters_survive_eviction(self):
+        ids = zipf_ids(2000, 50_000, a=1.3, seed=2)
+        tk = TopKCounter(budget=128)
+        tk.update(ids)
+        exact = np.bincount(ids, minlength=2000)
+        true_top10 = set(np.argsort(-exact)[:10].tolist())
+        kept = set(int(i) for i in tk.topk(64).tolist())
+        assert true_top10 <= kept
+
+
+class TestDriftDetector:
+    def _tel(self, vocab=2000, seed=0, perm=None, n=30_000):
+        ids = zipf_ids(vocab, n, seed=seed)
+        if perm is not None:
+            ids = perm[ids]
+        t = TableTelemetry(vocab, topk_budget=512, sketch_width=1024)
+        t.observe(ids)
+        return t
+
+    def test_no_trigger_same_distribution(self):
+        t = self._tel(seed=0)
+        det = DriftDetector(t.freq_vector(), k=128, min_observations=100)
+        t.observe(zipf_ids(2000, 30_000, seed=99))       # fresh same-dist draw
+        rep = det.check(t)
+        assert not rep.drifted
+
+    def test_trigger_on_rotation(self):
+        t = self._tel(seed=0)
+        det = DriftDetector(t.freq_vector(), k=128, min_observations=100)
+        perm = np.roll(np.arange(2000), 700)
+        t.observe(perm[zipf_ids(2000, 60_000, seed=1)])
+        rep = det.check(t)
+        assert rep.drifted and rep.topk_jaccard < 0.6
+
+    def test_holds_fire_below_min_observations(self):
+        t = TableTelemetry(2000)
+        t.observe(np.arange(50))
+        det = DriftDetector(np.ones(2000), k=64, min_observations=10_000)
+        assert not det.check(t).drifted
+
+
+# ---------------------------------------------------------------------------
+# trace generation / replay
+# ---------------------------------------------------------------------------
+
+class TestDriftingTrace:
+    CFG = DriftConfig(n_items=3000, zipf_a=1.1, avg_bag=6,
+                      rotate_every=100, rotate_frac=0.3,
+                      burst_prob=0.02, burst_len=16, burst_items=8)
+
+    def test_deterministic_replay(self):
+        a = DriftingZipfTrace(self.CFG, seed=5).bags(250)
+        b = DriftingZipfTrace(self.CFG, seed=5).bags(250)
+        assert all((x == y).all() for x, y in zip(a, b))
+
+    def test_random_access_matches_stream(self):
+        tr1 = DriftingZipfTrace(self.CFG, seed=5)
+        stream = tr1.bags(150)
+        tr2 = DriftingZipfTrace(self.CFG, seed=5)
+        assert (tr2.bag(149) == stream[149]).all()
+        assert (tr2.bag(3) == stream[3]).all()           # out of order too
+
+    def test_hot_set_rotates(self):
+        tr = DriftingZipfTrace(self.CFG, seed=1)
+        top0 = set(np.argsort(-tr.popularity(0))[:40].tolist())
+        top3 = set(np.argsort(-tr.popularity(350))[:40].tolist())
+        assert len(top0 & top3) < 20
+
+    def test_rect_padding(self):
+        tr = DriftingZipfTrace(self.CFG, seed=2)
+        r = tr.rect(16, 5)
+        assert r.shape == (16, 5) and r.dtype == np.int32
+        assert ((r >= -1) & (r < self.CFG.n_items)).all()
+        assert (r[:, 0] >= 0).all()                      # bags never empty
+
+    def test_diurnal_oscillates(self):
+        cfg = DriftConfig(n_items=2000, zipf_a=1.2, diurnal_period=200)
+        tr = DriftingZipfTrace(cfg, seed=0)
+        day = set(np.argsort(-tr.popularity(0))[:30].tolist())
+        night = set(np.argsort(-tr.popularity(100))[:30].tolist())
+        day2 = set(np.argsort(-tr.popularity(200))[:30].tolist())
+        assert len(day & night) < 15                     # swapped audience
+        assert len(day & day2) > 25                      # and back again
+
+
+class TestCriteoReader:
+    def test_roundtrip(self, tmp_path):
+        rows = ["1\t" + "\t".join(str(i) for i in range(13)) + "\t"
+                + "\t".join(f"{i:x}" for i in range(26)),
+                "0\t" + "\t".join("" for _ in range(13)) + "\t"
+                + "\t".join("" for _ in range(26))]
+        p = tmp_path / "crit.tsv"
+        p.write_text("\n".join(rows) + "\n")
+        out = read_criteo_tsv(str(p), hash_vocab=1000)
+        assert out["label"].tolist() == [1.0, 0.0]
+        assert out["dense"].shape == (2, 13)
+        assert out["sparse"].shape == (2, 26)
+        assert (out["sparse"][0] >= 0).all()
+        assert (out["sparse"][1] == -1).all()            # missing -> pad id
+
+
+# ---------------------------------------------------------------------------
+# migration
+# ---------------------------------------------------------------------------
+
+def _capacity_table(table, plan, cap):
+    flat = (plan.bank_of_row.astype(np.int64) * cap
+            + plan.slot_of_row).astype(np.int32)
+    return BankedTable(
+        packed=permute_packed_rows(jnp.asarray(table),
+                                   np.arange(table.shape[0], dtype=np.int32),
+                                   flat, plan.n_banks * cap),
+        remap_bank=jnp.asarray(plan.bank_of_row, jnp.int32),
+        remap_slot=jnp.asarray(plan.slot_of_row, jnp.int32),
+        n_banks=plan.n_banks, rows_per_bank=cap)
+
+
+class TestMigration:
+    def _plans(self, V=400, banks=4, cap=None, seed=0):
+        rng = np.random.default_rng(seed)
+        cap = cap or (V // banks + 20)
+        p_a = non_uniform_partition(rng.random(V) + 0.1, banks,
+                                    capacity_rows=cap)
+        p_b = non_uniform_partition(np.roll(rng.random(V) + 0.1, V // 3),
+                                    banks, capacity_rows=cap)
+        return p_a, p_b, cap
+
+    def test_bit_identical_to_fresh_pack(self):
+        V, D = 400, 24
+        rng = np.random.default_rng(3)
+        table = rng.standard_normal((V, D)).astype(np.float32)
+        p_a, p_b, cap = self._plans(V)
+        t_a = _capacity_table(table, p_a, cap)
+        t_mig = migrate_table(t_a, p_b, rows_per_bank=cap)
+        fresh = np.zeros((p_b.n_banks * cap, D), np.float32)
+        fresh[p_b.bank_of_row.astype(np.int64) * cap + p_b.slot_of_row] \
+            = table
+        assert (np.asarray(t_mig.packed) == fresh).all()
+        assert (np.asarray(t_mig.remap_bank) == p_b.bank_of_row).all()
+        assert (np.asarray(t_mig.remap_slot) == p_b.slot_of_row).all()
+
+    def test_migrated_lookup_identical_to_fresh_build(self):
+        """The acceptance bar: migrated table + new remap arrays produce
+        bit-identical lookups to a fresh build of the same plan."""
+        V, D = 300, 16
+        rng = np.random.default_rng(4)
+        table = rng.standard_normal((V, D)).astype(np.float32)
+        p_a, p_b, cap = self._plans(V)
+        t_mig = migrate_table(_capacity_table(table, p_a, cap), p_b,
+                              rows_per_bank=cap)
+        t_fresh = _capacity_table(table, p_b, cap)
+        idx = jnp.asarray(rng.integers(-1, V, (16, 6)), jnp.int32)
+        out_mig = banked_embedding_bag(t_mig, idx, None, backend="jnp")
+        out_fresh = banked_embedding_bag(t_fresh, idx, None, backend="jnp")
+        assert (np.asarray(out_mig) == np.asarray(out_fresh)).all()
+
+    def test_rowwise_state_follows_rows(self):
+        V = 200
+        rng = np.random.default_rng(5)
+        p_a, p_b, cap = self._plans(V, seed=5)
+        acc = jnp.asarray(rng.random(p_a.n_banks * cap).astype(np.float32))
+        table = rng.standard_normal((V, 8)).astype(np.float32)
+        t_a = _capacity_table(table, p_a, cap)
+        tree = {"emb_packed": t_a.packed, "acc": acc,
+                "dense": jnp.ones((3, 3))}
+        out = migrate_packed_leaves(tree, t_a, p_b, rows_per_bank=cap)
+        old_flat = p_a.bank_of_row.astype(np.int64) * cap + p_a.slot_of_row
+        new_flat = p_b.bank_of_row.astype(np.int64) * cap + p_b.slot_of_row
+        np.testing.assert_array_equal(
+            np.asarray(out["acc"])[new_flat], np.asarray(acc)[old_flat])
+        assert out["dense"] is tree["dense"]             # untouched leaf
+
+    def test_vocab_mismatch_raises(self):
+        p_a, p_b, cap = self._plans(100)
+        t = _capacity_table(np.zeros((100, 4), np.float32), p_a, cap)
+        bad = non_uniform_partition(np.ones(50), 4)
+        with pytest.raises(ValueError):
+            migrate_table(t, bad)
+
+
+# ---------------------------------------------------------------------------
+# replanner + runtime loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestAdaptiveLoop:
+    def test_replans_on_drift_and_improves_balance(self):
+        V, banks = 1500, 4
+        cap = V // banks + 60
+        rng = np.random.default_rng(0)
+        table = rng.standard_normal((V, 8)).astype(np.float32)
+        plan0 = non_uniform_partition(np.ones(V), banks, capacity_rows=cap)
+        t0 = _capacity_table(table, plan0, cap)
+        rcfg = ReplanConfig.for_vocab(V, banks, capacity_rows=cap,
+                                      check_every=4)
+        rt = AdaptiveEmbeddingRuntime(t0, plan0, rcfg, init_freq=np.ones(V))
+        tr = DriftingZipfTrace(
+            DriftConfig(n_items=V, zipf_a=1.2, avg_bag=10,
+                        rotate_every=120, rotate_frac=0.35), seed=9)
+        for _ in range(40):
+            rt.observe_bags(tr.bags(24))
+            rt.end_batch()
+        assert rt.replanner.n_replans >= 1
+        # the LIVE traffic is balanced under the current plan
+        freq = rt.replanner.telemetry.freq_vector()
+        cur = rt._realized_imbalance(rt.plan, freq)
+        stale = rt._realized_imbalance(plan0, freq)
+        assert cur <= stale
+        # swap preserved capacity: shapes never changed
+        assert rt.table.packed.shape == t0.packed.shape
+
+    def test_cache_aware_replan_builds_cache_plan(self):
+        V, banks = 600, 4
+        cap = V // banks + 40
+        rcfg = ReplanConfig.for_vocab(
+            V, banks, capacity_rows=cap, partitioner="cache_aware",
+            check_every=2, mine_min_support=2, min_observations=256)
+        rp = Replanner(rcfg, V, init_freq=np.ones(V))
+        tr = DriftingZipfTrace(
+            DriftConfig(n_items=V, zipf_a=1.3, avg_bag=8,
+                        rotate_every=60, rotate_frac=0.4), seed=2)
+        update = None
+        for _ in range(30):
+            rp.observe_bags(tr.bags(16))
+            update = rp.end_batch() or update
+        assert update is not None and update.cache_plan is not None
+        update.plan.validate()
+
+    def test_rebuilt_cache_table_entries_exact(self):
+        """After a cache_aware replan, every rebuilt cache entry stores the
+        exact partial sum of its member rows (from the LIVE table values)."""
+        V, banks, D = 600, 4, 8
+        cap = V // banks + 40
+        rng = np.random.default_rng(0)
+        table = rng.standard_normal((V, D)).astype(np.float32)
+        plan0 = non_uniform_partition(np.ones(V), banks, capacity_rows=cap)
+        t0 = _capacity_table(table, plan0, cap)
+        rcfg = ReplanConfig.for_vocab(
+            V, banks, capacity_rows=cap, partitioner="cache_aware",
+            check_every=2, mine_min_support=2, min_observations=256)
+        rt = AdaptiveEmbeddingRuntime(t0, plan0, rcfg, init_freq=np.ones(V))
+        tr = DriftingZipfTrace(
+            DriftConfig(n_items=V, zipf_a=1.3, avg_bag=8,
+                        rotate_every=60, rotate_frac=0.4), seed=2)
+        event = None
+        for _ in range(30):
+            rt.observe_bags(tr.bags(16))
+            event = rt.end_batch() or event
+        assert event is not None
+        ct = rt.rebuild_cache_table(event.update)
+        cp = event.update.cache_plan
+        assert ct is not None and cp.n_entries > 0
+        cflat = (np.asarray(ct.remap_bank).astype(np.int64)
+                 * ct.rows_per_bank + np.asarray(ct.remap_slot))
+        packed = np.asarray(ct.packed)
+        for e, entry in enumerate(cp.entries):
+            want = table[list(entry.members)].sum(axis=0)
+            np.testing.assert_allclose(packed[cflat[e]], want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# balanced CSR sharding (host-side splitter; the mesh path runs in
+# tests/dist_checks.py)
+# ---------------------------------------------------------------------------
+
+class TestBalancedCsrSplit:
+    def test_equal_totals(self):
+        rng = np.random.default_rng(0)
+        lens = rng.integers(1, 40, 200)
+        offsets = np.concatenate([[0], np.cumsum(lens)])
+        bounds = balanced_csr_shards(offsets, 8)
+        totals = offsets[bounds[1:]] - offsets[bounds[:-1]]
+        assert bounds[0] == 0 and bounds[-1] == 200
+        assert (np.diff(bounds) >= 0).all()
+        # each shard within one max-bag of the ideal share
+        ideal = offsets[-1] / 8
+        assert (np.abs(totals - ideal) <= lens.max()).all()
+
+    def test_beats_equal_bag_count_split(self):
+        """Skewed raggedness: totals-based cuts are tighter than bag-count
+        cuts (the whole point vs replicating / naive splitting)."""
+        rng = np.random.default_rng(1)
+        lens = np.where(rng.random(160) < 0.1,
+                        rng.integers(50, 100, 160), rng.integers(1, 4, 160))
+        offsets = np.concatenate([[0], np.cumsum(lens)])
+        bounds = balanced_csr_shards(offsets, 4)
+        totals = offsets[bounds[1:]] - offsets[bounds[:-1]]
+        naive = np.array([offsets[40] - offsets[0], offsets[80] - offsets[40],
+                          offsets[120] - offsets[80],
+                          offsets[160] - offsets[120]])
+        assert totals.max() <= naive.max()
+
+    def test_shard_csr_batch_covers_every_entry(self):
+        rng = np.random.default_rng(2)
+        lens = rng.integers(1, 9, 37)
+        offsets = np.concatenate([[0], np.cumsum(lens)])
+        indices = rng.integers(0, 500, int(offsets[-1])).astype(np.int32)
+        sh = shard_csr_batch(indices, offsets, 4)
+        got = sh["idx"][sh["idx"] >= 0]
+        assert sorted(got.tolist()) == sorted(indices.tolist())
+        seg = sh["seg"][sh["idx"] >= 0]
+        assert (np.sort(np.unique(seg)) == np.arange(37)).all()
+
+    def test_degenerate_single_shard(self):
+        offsets = np.array([0, 3, 5])
+        bounds = balanced_csr_shards(offsets, 1)
+        assert bounds.tolist() == [0, 2]
+
+
+# ---------------------------------------------------------------------------
+# early-exit fused kernel (satellite): parity incl. interior -1 holes
+# ---------------------------------------------------------------------------
+
+class TestFusedEarlyExit:
+    def _setup(self, seed=0):
+        rng = np.random.default_rng(seed)
+        V, Dc, D = 120, 10, 16
+        emt = rng.standard_normal((V, D)).astype(np.float32)
+        cache = rng.standard_normal((Dc, D)).astype(np.float32)
+        bt = pack_table(emt, non_uniform_partition(rng.random(V) + 0.1, 2))
+        cbt = pack_table(cache, non_uniform_partition(rng.random(Dc) + 0.1, 2))
+        return rng, V, Dc, bt, cbt
+
+    def test_parity_suffix_padding(self):
+        rng, V, Dc, bt, cbt = self._setup()
+        B, Lc, Lr = 16, 3, 7
+        ci = np.full((B, Lc), -1, np.int32)
+        ri = np.full((B, Lr), -1, np.int32)
+        for b in range(B):
+            nc, nr = rng.integers(0, Lc + 1), rng.integers(0, Lr + 1)
+            ci[b, :nc] = rng.integers(0, Dc, nc)
+            ri[b, :nr] = rng.integers(0, V, nr)
+        got = banked_cache_residual_bag(bt, cbt, jnp.asarray(ci),
+                                        jnp.asarray(ri), None,
+                                        backend="pallas", interpret=True)
+        want = banked_cache_residual_bag(bt, cbt, jnp.asarray(ci),
+                                         jnp.asarray(ri), None, backend="jnp")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+    def test_parity_interior_holes(self):
+        """-1 holes BEFORE the last valid entry must still be masked (the
+        early exit trims only the trailing run)."""
+        rng, V, Dc, bt, cbt = self._setup(seed=7)
+        B, Lc, Lr = 8, 4, 6
+        ci = rng.integers(-1, Dc, (B, Lc)).astype(np.int32)
+        ri = rng.integers(-1, V, (B, Lr)).astype(np.int32)
+        ri[:, -1] = -1                                   # trailing pad too
+        got = banked_cache_residual_bag(bt, cbt, jnp.asarray(ci),
+                                        jnp.asarray(ri), None,
+                                        backend="pallas", interpret=True)
+        want = banked_cache_residual_bag(bt, cbt, jnp.asarray(ci),
+                                         jnp.asarray(ri), None, backend="jnp")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+    def test_effective_lengths(self):
+        from repro.kernels.embedding_bag import effective_lengths
+        idx = jnp.asarray([[1, -1, 2, -1, -1],
+                           [-1, -1, -1, -1, -1],
+                           [5, 6, 7, 8, 9]], jnp.int32)
+        np.testing.assert_array_equal(np.asarray(effective_lengths(idx)),
+                                      [3, 0, 5])
