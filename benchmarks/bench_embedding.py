@@ -1,13 +1,22 @@
-"""Embedding-bag backend benchmark: jnp scan vs pallas fused kernel.
+"""Embedding-bag backend benchmark: jnp scan vs pallas fused kernel,
+forward AND grad step.
 
 Times the production lookup (`core/embedding.banked_embedding_bag`) across
 table sizes, bag lengths, and batch, on whatever backend jax reports — on CPU
 the pallas rows run in interpret mode (semantics check + a lower bound no one
 should read as TPU perf; the kernel's DMA pipelining only pays on real HBM).
 
+The GRAD section times one ``jax.grad`` of the bag-sum loss under the pallas
+forward with the two backward scatters: ``bwd=pallas`` (the sorted-run
+scatter kernel — fwd+bwd both in the kernel layer) vs ``bwd=jnp`` (the XLA
+scatter fallback). Same caveat: interpret-mode numbers are a semantics
+check, not TPU perf.
+
     PYTHONPATH=src python benchmarks/bench_embedding.py [--out BENCH_embedding.json]
 
-Also exposed as ``embedding_backends()`` for benchmarks/run.py.
+Also exposed as ``embedding_backends()`` / ``embedding_grad_backends()`` for
+benchmarks/run.py; ``write_json(out, smoke=True)`` is the CI smoke entry
+(first two configs, 2 repeats).
 """
 from __future__ import annotations
 
@@ -34,8 +43,15 @@ CONFIGS = [
 
 REPEATS = 5
 
+# (vocab, dim, batch, bag_len, n_fields) for the grad-step rows — smaller:
+# each timing runs fwd + bwd, and the bwd sort prep is batch-linear anyway.
+GRAD_CONFIGS = [
+    (10_000, 64, 32, 8, 1),
+    (20_000, 32, 32, 8, 4),
+]
 
-def _bench_one(v, d, b, l, f, backend, seed=0):
+
+def _bench_one(v, d, b, l, f, backend, seed=0, repeats=REPEATS):
     from repro.core.embedding import banked_embedding_bag, pack_table
     from repro.core.partitioning import non_uniform_partition
 
@@ -52,7 +68,7 @@ def _bench_one(v, d, b, l, f, backend, seed=0):
     out = fn(bt, idx)
     jax.block_until_ready(out)          # compile
     best = float("inf")
-    for _ in range(REPEATS):
+    for _ in range(repeats):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(bt, idx))
         best = min(best, time.perf_counter() - t0)
@@ -63,11 +79,56 @@ def _bench_one(v, d, b, l, f, backend, seed=0):
                 effective_gather_gbps=round(gbps, 3))
 
 
-def run_all(backends=("jnp", "pallas")) -> list[dict]:
+def _bench_grad_one(v, d, b, l, f, bwd, seed=0, repeats=REPEATS):
+    import jax
+    from repro.core.embedding import banked_embedding_bag, pack_table
+    from repro.core.partitioning import non_uniform_partition
+
+    rng = np.random.default_rng(seed)
+    table = rng.standard_normal((v, d)).astype(np.float32)
+    bt = pack_table(table, non_uniform_partition(rng.random(v) + 0.1, 8))
+    per_field = v // f
+    offs = jnp.asarray(np.arange(f) * per_field, jnp.int32) if f > 1 else None
+    shape = (b, f, l) if f > 1 else (b, l)
+    idx = jnp.asarray(rng.integers(-1, per_field, shape), jnp.int32)
+
+    def loss(packed):
+        import dataclasses
+        t2 = dataclasses.replace(bt, packed=packed)
+        return (banked_embedding_bag(t2, idx, None, backend="pallas",
+                                     bwd_backend=bwd,
+                                     field_offsets=offs) ** 2).sum()
+
+    fn = jax.jit(jax.grad(loss))
+    jax.block_until_ready(fn(bt.packed))            # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(bt.packed))
+        best = min(best, time.perf_counter() - t0)
+    n_lookups = int(np.prod(shape))
+    # grad touches each looked-up row twice (gather fwd + scatter bwd)
+    gbps = 2 * n_lookups * d * 4 / best / 1e9
+    return dict(vocab=v, dim=d, batch=b, bag_len=l, n_fields=f,
+                bwd=bwd, us_per_grad=best * 1e6,
+                effective_scatter_gbps=round(gbps, 3))
+
+
+def run_all(backends=("jnp", "pallas"), configs=None,
+            repeats=REPEATS) -> list[dict]:
     rows = []
-    for cfg in CONFIGS:
+    for cfg in (CONFIGS if configs is None else configs):
         for backend in backends:
-            rows.append(_bench_one(*cfg, backend))
+            rows.append(_bench_one(*cfg, backend, repeats=repeats))
+    return rows
+
+
+def run_grads(bwds=("jnp", "pallas"), configs=None,
+              repeats=REPEATS) -> list[dict]:
+    rows = []
+    for cfg in (GRAD_CONFIGS if configs is None else configs):
+        for bwd in bwds:
+            rows.append(_bench_grad_one(*cfg, bwd, repeats=repeats))
     return rows
 
 
@@ -79,27 +140,57 @@ def embedding_backends():
         yield name, r["us_per_call"], f"{r['effective_gather_gbps']}GB/s"
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_embedding.json")
-    args = ap.parse_args()
-    rows = run_all()
+def embedding_grad_backends():
+    """benchmarks/run.py hook: grad step, pallas bwd vs XLA scatter."""
+    for r in run_grads():
+        name = (f"embedding_grad_bwd-{r['bwd']}_v{r['vocab']}_d{r['dim']}"
+                f"_b{r['batch']}_l{r['bag_len']}_f{r['n_fields']}")
+        yield name, r["us_per_grad"], f"{r['effective_scatter_gbps']}GB/s"
+
+
+def write_json(out: str = "BENCH_embedding.json",
+               smoke: bool = False) -> dict:
+    """Write the benchmark doc; ``smoke=True`` is the CI artifact mode
+    (first fwd/grad configs only, 2 repeats — seconds, not minutes)."""
+    import jax
+    rep = 2 if smoke else REPEATS
     doc = {
         "jax_backend": jax.default_backend(),
         "pallas_mode": "compiled" if jax.default_backend() == "tpu"
         else "interpret",
-        "repeats": REPEATS,
-        "results": rows,
+        "repeats": rep,
+        "smoke": smoke,
+        "results": run_all(configs=CONFIGS[:2] if smoke else None,
+                           repeats=rep),
+        "grad_results": run_grads(configs=GRAD_CONFIGS[:1] if smoke
+                                  else None, repeats=rep),
     }
-    with open(args.out, "w") as fh:
+    with open(out, "w") as fh:
         json.dump(doc, fh, indent=2)
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_embedding.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs/repeats (the CI artifact mode)")
+    args = ap.parse_args()
+    doc = write_json(args.out, smoke=args.smoke)
+    rows, grows = doc["results"], doc["grad_results"]
     print(f"{'config':<34} {'backend':<8} {'us/call':>12} {'GB/s':>8}")
     for r in rows:
         cfg = (f"v={r['vocab']} d={r['dim']} b={r['batch']} "
                f"l={r['bag_len']} f={r['n_fields']}")
         print(f"{cfg:<34} {r['backend']:<8} {r['us_per_call']:>12.1f} "
               f"{r['effective_gather_gbps']:>8.3f}")
-    print(f"wrote {args.out} ({len(rows)} rows, "
+    print(f"{'grad config':<34} {'bwd':<8} {'us/grad':>12} {'GB/s':>8}")
+    for r in grows:
+        cfg = (f"v={r['vocab']} d={r['dim']} b={r['batch']} "
+               f"l={r['bag_len']} f={r['n_fields']}")
+        print(f"{cfg:<34} {r['bwd']:<8} {r['us_per_grad']:>12.1f} "
+              f"{r['effective_scatter_gbps']:>8.3f}")
+    print(f"wrote {args.out} ({len(rows)}+{len(grows)} rows, "
           f"pallas={doc['pallas_mode']})")
 
 

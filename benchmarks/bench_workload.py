@@ -159,14 +159,29 @@ def workload_drift():
            f"_replans{a['n_replans']}")
 
 
+def write_json(out: str = "BENCH_workload.json", smoke: bool = False,
+               stream_bags: int | None = None) -> dict:
+    """Write the benchmark doc; ``smoke=True`` is the CI artifact mode
+    (short stream — the same 1024-bag budget the run.py hook uses)."""
+    doc = run(stream_bags=stream_bags
+              if stream_bags is not None else (1024 if smoke else STREAM_BAGS))
+    doc["smoke"] = smoke
+    with open(out, "w") as fh:
+        json.dump(doc, fh, indent=2)
+    return doc
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_workload.json")
     ap.add_argument("--stream-bags", type=int, default=STREAM_BAGS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short stream (the CI artifact mode); an explicit "
+                         "--stream-bags still wins")
     args = ap.parse_args()
-    doc = run(stream_bags=args.stream_bags)
-    with open(args.out, "w") as fh:
-        json.dump(doc, fh, indent=2)
+    explicit = args.stream_bags != STREAM_BAGS
+    doc = write_json(args.out, smoke=args.smoke,
+                     stream_bags=args.stream_bags if explicit else None)
     s, a = doc["static"], doc["adaptive"]
     print(f"{'':<10} {'mean max-bank share':>20} {'p99 share':>10} "
           f"{'p99 model us':>13}")

@@ -16,7 +16,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-measured", action="store_true",
                     help="skip wall-clock rows (CI use)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: derived rows + reduced measured set, "
+                         "writing BENCH_embedding.json / BENCH_workload.json "
+                         "(the workflow's uploaded artifacts)")
     args = ap.parse_args()
+    if args.smoke and args.skip_measured:
+        ap.error("--smoke and --skip-measured conflict: smoke EXISTS to "
+                 "produce the measured BENCH_*.json artifacts")
 
     from benchmarks import paper_figs as F
     benches = [
@@ -30,10 +37,33 @@ def main() -> None:
         F.fig11_sensitivity,
         F.tile_solver,
     ]
-    if not args.skip_measured:
+    if args.smoke:
+        # write the artifact JSONs (reduced configs/repeats), then surface a
+        # couple of headline rows in the CSV like any other bench
+        from benchmarks import bench_embedding, bench_workload
+
+        def smoke_artifacts():
+            doc_e = bench_embedding.write_json(smoke=True)
+            for r in doc_e["results"]:
+                yield (f"smoke_embedding_{r['backend']}_d{r['dim']}"
+                       f"_b{r['batch']}", r["us_per_call"],
+                       f"{r['effective_gather_gbps']}GB/s")
+            for r in doc_e["grad_results"]:
+                yield (f"smoke_embedding_grad_bwd-{r['bwd']}_d{r['dim']}"
+                       f"_b{r['batch']}", r["us_per_grad"],
+                       f"{r['effective_scatter_gbps']}GB/s")
+            doc_w = bench_workload.write_json(smoke=True)
+            a = doc_w["adaptive"]
+            yield ("smoke_workload_adaptive_p99_model",
+                   a["p99_model_latency_us"], f"replans{a['n_replans']}")
+
+        benches.append(smoke_artifacts)
+    elif not args.skip_measured:
         benches.append(F.measured_lookup_paths)
         from benchmarks.bench_embedding import embedding_backends
         benches.append(embedding_backends)
+        from benchmarks.bench_embedding import embedding_grad_backends
+        benches.append(embedding_grad_backends)
         from benchmarks.bench_workload import workload_drift
         benches.append(workload_drift)
 

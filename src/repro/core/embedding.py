@@ -27,7 +27,13 @@ Stage 2 has two interchangeable implementations behind the ``backend`` knob:
 
 Both run *inside* the shard_map (per bank) and both are differentiable: the
 pallas path carries a custom_vjp whose backward is the row scatter-add that is
-the exact transpose of the bag sum.
+the exact transpose of the bag sum. The backward has its own backend pair
+behind ``bwd_backend`` ('auto' follows the forward): the XLA segment-scan
+scatter (``_scatter_bag_ct``), or the Pallas sorted-run scatter kernel
+(``kernels/embedding_bag.ct_scatter_bag_pallas``) that keeps the gradient's
+irregular row traffic on the same double-buffered near-memory path as the
+lookup — a pallas training step never leaves the kernel layer for embedding
+traffic.
 
 Column-split mode (the paper's N_c knob) shards the embedding dim instead:
 every bank gathers full bags for its dim-slice (no mask, no psum) and stage 3
@@ -61,6 +67,18 @@ def _resolve_backend(backend: str) -> str:
 
 def _default_interpret(interpret: bool | None) -> bool:
     return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def _resolve_bwd(bwd_backend: str, fwd_backend: str) -> str:
+    """Backward scatter backend: 'auto' rides the (resolved) forward choice,
+    so ``backend='pallas'`` alone puts fwd AND bwd near memory; 'jnp' forces
+    the XLA scatter fallback under a pallas forward (the parity baseline).
+    Only consulted on the pallas forward — the jnp forward differentiates
+    through its scan natively."""
+    if bwd_backend not in BACKENDS:
+        raise ValueError(
+            f"bwd_backend must be one of {BACKENDS}, got {bwd_backend!r}")
+    return fwd_backend if bwd_backend == "auto" else bwd_backend
 
 
 @jax.tree_util.register_dataclass
@@ -196,12 +214,14 @@ def _pallas_bag(cfg: tuple, packed: Array, bank: Array, slot: Array,
                 off: Array, my: Array, idx: Array) -> Array:
     """One bank's stage-2 partial bag sums via the fused Pallas kernel.
 
-    cfg = (tile_b, interpret). idx (..., L) raw per-field ids; bank/slot the
-    replicated remap; my () int32 bank id (< 0: own everything — the
-    unsharded path, where slot is the flat remap).
+    cfg = (tile_b, interpret, bwd). idx (..., L) raw per-field ids; bank/slot
+    the replicated remap; my () int32 bank id (< 0: own everything — the
+    unsharded path, where slot is the flat remap). ``bwd`` selects the
+    custom_vjp backward: 'pallas' = the sorted-run scatter kernel, 'jnp' =
+    the XLA segment-scan scatter.
     """
     from repro.kernels.embedding_bag import banked_embedding_bag_pallas
-    tile_b, interpret = cfg
+    tile_b, interpret, _ = cfg
     lead, L = idx.shape[:-1], idx.shape[-1]
     flat, n = _pad_bags(idx.reshape(-1, L).astype(jnp.int32), tile_b)
     table, d = _pad_lanes(packed, interpret)
@@ -217,9 +237,19 @@ def _pallas_bag_fwd(cfg, packed, bank, slot, off, my, idx):
 
 
 def _pallas_bag_bwd(cfg, res, ct):
+    tile_b, interpret, bwd = cfg
     packed, bank, slot, off, my, idx = res
-    d_tab = _scatter_bag_ct(packed.shape, packed.dtype, bank, slot, my,
-                            idx, ct, off=off)
+    if bwd == "pallas":
+        from repro.kernels.embedding_bag import ct_scatter_bag_pallas
+        L = idx.shape[-1]
+        d_tab = ct_scatter_bag_pallas(
+            ct.reshape(-1, ct.shape[-1]),
+            idx.reshape(-1, L).astype(jnp.int32), bank, slot, off,
+            my.reshape(1).astype(jnp.int32), packed.shape[0], packed.dtype,
+            tile_s=tile_b, interpret=interpret)
+    else:
+        d_tab = _scatter_bag_ct(packed.shape, packed.dtype, bank, slot, my,
+                                idx, ct, off=off)
     return (d_tab, None, None, None, None, None)
 
 
@@ -233,7 +263,7 @@ def _pallas_cache_bag(cfg: tuple, emt_packed: Array, cache_packed: Array,
                       resid_idx: Array) -> Array:
     """Fused Fig.-7 stage 2: Σ cache partials + Σ residual rows, one kernel."""
     from repro.kernels.embedding_bag import fused_cache_bag_pallas
-    tile_b, interpret = cfg
+    tile_b, interpret, _ = cfg
     lead = cache_idx.shape[:-1]
     ci, n = _pad_bags(cache_idx.reshape(-1, cache_idx.shape[-1])
                       .astype(jnp.int32), tile_b)
@@ -286,12 +316,31 @@ def _scatter_bag_ct(shape, dtype, bank, slot, my, idx, ct, *, off=None):
 
 
 def _pallas_cache_bag_bwd(cfg, res, ct):
+    tile_b, interpret, bwd = cfg
     (emt_packed, cache_packed, e_bank, e_slot, c_bank, c_slot, my,
      cache_idx, resid_idx) = res
-    d_emt = _scatter_bag_ct(emt_packed.shape, emt_packed.dtype,
-                            e_bank, e_slot, my, resid_idx, ct)
-    d_cache = _scatter_bag_ct(cache_packed.shape, cache_packed.dtype,
-                              c_bank, c_slot, my, cache_idx, ct)
+    if bwd == "pallas":
+        # dual scatter: the fused forward summed BOTH streams into one bag
+        # row, so the same cotangent scatters onto the EMT (via the residual
+        # ids) and the cache table (via the cache ids) — two invocations of
+        # the sorted-run kernel, one per destination table
+        from repro.kernels.embedding_bag import ct_scatter_bag_pallas
+        ctf = ct.reshape(-1, ct.shape[-1])
+        zero = jnp.zeros((1,), jnp.int32)
+        myk = my.reshape(1).astype(jnp.int32)
+        d_emt = ct_scatter_bag_pallas(
+            ctf, resid_idx.reshape(-1, resid_idx.shape[-1]).astype(jnp.int32),
+            e_bank, e_slot, zero, myk, emt_packed.shape[0], emt_packed.dtype,
+            tile_s=tile_b, interpret=interpret)
+        d_cache = ct_scatter_bag_pallas(
+            ctf, cache_idx.reshape(-1, cache_idx.shape[-1]).astype(jnp.int32),
+            c_bank, c_slot, zero, myk, cache_packed.shape[0],
+            cache_packed.dtype, tile_s=tile_b, interpret=interpret)
+    else:
+        d_emt = _scatter_bag_ct(emt_packed.shape, emt_packed.dtype,
+                                e_bank, e_slot, my, resid_idx, ct)
+        d_cache = _scatter_bag_ct(cache_packed.shape, cache_packed.dtype,
+                                  c_bank, c_slot, my, cache_idx, ct)
     return (d_emt, d_cache, None, None, None, None, None, None, None)
 
 
@@ -338,6 +387,7 @@ class DistCtx:
 
 def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
                          *, reduce_bag: bool = True, backend: str = "auto",
+                         bwd_backend: str = "auto",
                          field_offsets: Array | None = None,
                          tile_b: int = 8,
                          interpret: bool | None = None) -> Array:
@@ -348,11 +398,16 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
     one stage-2 pass: bag (b, f) looks up ``idx + field_offsets[f]`` (applied
     in-kernel / in-scan, only to valid entries).
 
+    ``bwd_backend`` selects the pallas forward's gradient scatter ('auto'
+    follows ``backend``): 'pallas' keeps the backward's row traffic on the
+    near-memory kernel path, 'jnp' is the XLA scatter fallback.
+
     Under a mesh: shard_map over (dp_axes + bank_axis); indices are sharded on
     batch, replicated across banks (stage 1); each bank computes its partial
     with the selected ``backend`` (stage 2); psum over the bank axis (stage 3).
     """
     backend = _resolve_backend(backend)
+    bwd = _resolve_bwd(bwd_backend, backend)
     interpret = _default_interpret(interpret)
     if not reduce_bag and field_offsets is not None:
         raise ValueError("field_offsets requires reduce_bag=True — the dense "
@@ -364,8 +419,8 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
         if not reduce_bag:
             return lookup_unsharded(t, idx, reduce_bag=False)
         if backend == "pallas":
-            return _pallas_bag((tile_b, interpret), t.packed, t.remap_bank,
-                               t.flat_remap(), off,
+            return _pallas_bag((tile_b, interpret, bwd), t.packed,
+                               t.remap_bank, t.flat_remap(), off,
                                jnp.full((), -1, jnp.int32), idx)
         return _bag_partial_scan(t.packed, idx, remap=t.flat_remap(),
                                  bank=None, my_bank=None, off=off)
@@ -386,8 +441,8 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
             part = _local_gather_partial(packed_local, bank_map, slot_map,
                                          idx_local, my)
         elif backend == "pallas":
-            part = _pallas_bag((tile_b, interpret), packed_local, bank_map,
-                               slot_map, off_local,
+            part = _pallas_bag((tile_b, interpret, bwd), packed_local,
+                               bank_map, slot_map, off_local,
                                my.astype(jnp.int32), idx_local)
         else:
             part = _bag_partial_scan(packed_local, idx_local,
@@ -410,7 +465,7 @@ def banked_gather(t: BankedTable, idx: Array, dist: DistCtx | None) -> Array:
 def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
                               cache_idx: Array, residual_idx: Array,
                               dist: DistCtx | None, *, backend: str = "auto",
-                              tile_b: int = 8,
+                              bwd_backend: str = "auto", tile_b: int = 8,
                               interpret: bool | None = None) -> Array:
     """Cache-aware fused lookup (paper Fig. 7): one stage-2 pass computes
     ``Σ cache_partials + Σ residual_rows`` per bag.
@@ -418,15 +473,17 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
     cache_idx (..., Lc) ids into the partial-sum cache table; residual_idx
     (..., Lr) union-vocab rows into the EMT. Both tables are banked over the
     same axis; the combined partial takes ONE psum (half the stage-3 traffic
-    of two separate lookups).
+    of two separate lookups). ``bwd_backend='pallas'`` routes the dual
+    gradient scatter (EMT + cache table) through the sorted-run kernel.
     """
     backend = _resolve_backend(backend)
+    bwd = _resolve_bwd(bwd_backend, backend)
     interpret = _default_interpret(interpret)
 
     if dist is None:
         if backend == "pallas":
             return _pallas_cache_bag(
-                (tile_b, interpret), t.packed, cache.packed,
+                (tile_b, interpret, bwd), t.packed, cache.packed,
                 t.remap_bank, t.flat_remap(), cache.remap_bank,
                 cache.flat_remap(), jnp.full((), -1, jnp.int32),
                 cache_idx, residual_idx)
@@ -452,7 +509,8 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
         my = jax.lax.axis_index(bank)
         if backend == "pallas":
             part = _pallas_cache_bag(
-                (tile_b, interpret), emt_local, cache_local, e_bank, e_slot,
+                (tile_b, interpret, bwd), emt_local, cache_local, e_bank,
+                e_slot,
                 c_bank, c_slot, my.astype(jnp.int32), ci_local, ri_local)
         else:
             zero = jnp.zeros((1,), jnp.int32)
@@ -480,9 +538,9 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
 def _pallas_csr_bag(cfg: tuple, packed: Array, bank: Array, slot: Array,
                     my: Array, indices: Array, seg: Array,
                     offs_ext: Array) -> Array:
-    """cfg = (tile_b, interpret, num_bags_padded)."""
+    """cfg = (tile_b, interpret, num_bags_padded, bwd)."""
     from repro.kernels.embedding_bag import csr_bag_pallas
-    tile_b, interpret, nb_pad = cfg
+    tile_b, interpret, nb_pad, _ = cfg
     table, d = _pad_lanes(packed, interpret)
     out = csr_bag_pallas(table, bank, slot, my.reshape(1).astype(jnp.int32),
                          indices.astype(jnp.int32), seg.astype(jnp.int32),
@@ -497,7 +555,15 @@ def _pallas_csr_bag_fwd(cfg, packed, bank, slot, my, indices, seg, offs_ext):
 
 
 def _pallas_csr_bag_bwd(cfg, res, ct):
+    tile_b, interpret, nb_pad, bwd = cfg
     packed, bank, slot, my, indices, seg = res
+    if bwd == "pallas":
+        from repro.kernels.embedding_bag import ct_scatter_csr_pallas
+        d_tab = ct_scatter_csr_pallas(
+            ct, indices, seg, bank, slot, my.reshape(1).astype(jnp.int32),
+            packed.shape[0], packed.dtype, tile_s=tile_b,
+            interpret=interpret)
+        return (d_tab, None, None, None, None, None, None)
     valid = indices >= 0
     row = jnp.where(valid, indices, 0)
     mine = valid & ((my < 0) | (bank[row] == my))
@@ -512,7 +578,8 @@ _pallas_csr_bag.defvjp(_pallas_csr_bag_fwd, _pallas_csr_bag_bwd)
 
 def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
                       num_bags: int, dist: DistCtx | None, *,
-                      backend: str = "auto", tile_b: int = 8,
+                      backend: str = "auto", bwd_backend: str = "auto",
+                      tile_b: int = 8,
                       interpret: bool | None = None) -> Array:
     """CSR-ragged variant (indices flat + offsets), bag-summed.
 
@@ -526,6 +593,7 @@ def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
     segment id), so ragged bags fuse without padding to a rectangle.
     """
     backend = _resolve_backend(backend)
+    bwd = _resolve_bwd(bwd_backend, backend)
     interpret = _default_interpret(interpret)
     from repro.sparse.ops import offsets_to_segment_ids
     total = indices.shape[0]
@@ -537,7 +605,8 @@ def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
 
     if dist is None:
         if backend == "pallas":
-            out = _pallas_csr_bag((tile_b, interpret, nb_pad), t.packed,
+            out = _pallas_csr_bag((tile_b, interpret, nb_pad, bwd),
+                                  t.packed,
                                   t.remap_bank, t.flat_remap(),
                                   jnp.full((), -1, jnp.int32), indices, seg,
                                   offs_ext)
@@ -550,10 +619,10 @@ def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
     def fn(packed_local, bank_map, slot_map, idx_local, seg_local, offs_local):
         my = jax.lax.axis_index(dist.bank_axis)
         if backend == "pallas":
-            part = _pallas_csr_bag((tile_b, interpret, nb_pad), packed_local,
-                                   bank_map, slot_map, my.astype(jnp.int32),
-                                   idx_local, seg_local,
-                                   offs_local)[:num_bags]
+            part = _pallas_csr_bag((tile_b, interpret, nb_pad, bwd),
+                                   packed_local, bank_map, slot_map,
+                                   my.astype(jnp.int32), idx_local,
+                                   seg_local, offs_local)[:num_bags]
         else:
             part = _local_gather_partial(packed_local, bank_map, slot_map,
                                          idx_local, my)
@@ -624,7 +693,7 @@ def shard_csr_batch(indices: np.ndarray, offsets: np.ndarray,
 def csr_embedding_bag_sharded(t: BankedTable, indices: np.ndarray,
                               offsets: np.ndarray, num_bags: int,
                               dist: DistCtx | None, *, backend: str = "auto",
-                              tile_b: int = 8,
+                              bwd_backend: str = "auto", tile_b: int = 8,
                               interpret: bool | None = None) -> Array:
     """CSR bag sums with the flat stream SHARDED over dp (vs the replicating
     ``csr_embedding_bag``): each dp shard owns a contiguous bag range chosen
@@ -645,9 +714,11 @@ def csr_embedding_bag_sharded(t: BankedTable, indices: np.ndarray,
     if dist is None or dist.dp_size() == 1:
         return csr_embedding_bag(t, jnp.asarray(indices),
                                  jnp.asarray(offsets[:num_bags]), num_bags,
-                                 dist, backend=backend, tile_b=tile_b,
+                                 dist, backend=backend,
+                                 bwd_backend=bwd_backend, tile_b=tile_b,
                                  interpret=interpret)
     backend = _resolve_backend(backend)
+    bwd = _resolve_bwd(bwd_backend, backend)
     interpret = _default_interpret(interpret)
     nd = dist.dp_size()
     sh = shard_csr_batch(indices, offsets, nd)
@@ -671,10 +742,10 @@ def csr_embedding_bag_sharded(t: BankedTable, indices: np.ndarray,
         idx_local = idx_s[0]
         seg_local = seg_s[0]
         if backend == "pallas":
-            part = _pallas_csr_bag((tile_b, interpret, nb_pad), packed_local,
-                                   bank_map, slot_map, my.astype(jnp.int32),
-                                   idx_local, seg_local,
-                                   offs_local[0])[:num_bags]
+            part = _pallas_csr_bag((tile_b, interpret, nb_pad, bwd),
+                                   packed_local, bank_map, slot_map,
+                                   my.astype(jnp.int32), idx_local,
+                                   seg_local, offs_local[0])[:num_bags]
         else:
             part = _local_gather_partial(packed_local, bank_map, slot_map,
                                          idx_local, my)

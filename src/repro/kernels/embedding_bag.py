@@ -22,6 +22,12 @@ What runs inside the kernel (vs. the seed's wrapper-side precompute):
 
 Ownership is disabled by passing ``my_bank < 0`` (the unsharded path).
 
+The TRAINING BACKWARD lives here too: ``ct_scatter_bag_pallas`` /
+``ct_scatter_csr_pallas`` scatter-add the bag cotangents back onto the bank's
+rows with the same double-buffered row DMA (cotangents in, accumulated rows
+out) — slot collisions are resolved by a slot-sorted permutation computed in
+the traced prep, never by atomics (see the backward section below).
+
 Alignment: D is padded to the 128-lane boundary by the wrappers (the TPU
 analogue of the paper's 8-byte MRAM alignment rule); each row copy is one
 (1, D) DMA — the ``N_c``-wide access of §3.1 with TPU constants.
@@ -216,6 +222,125 @@ def _fused_cache_bag_kernel(cache_idx_ref, resid_idx_ref, c_len_ref,
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
+# ---------------------------------------------------------------------------
+# backward: sorted-run scatter-add (the transpose of the bag sum, in-kernel)
+# ---------------------------------------------------------------------------
+#
+# The training backward streams each bag's cotangent row back onto every
+# owned table slot its entries touched. A naive near-memory scatter would
+# race whenever two entries of one tile share a slot (duplicate ids inside a
+# bag, or across bags of the same tile); TPUs have no HBM atomics. Instead
+# the traced prep walks the same (bank, slot, ownership, offsets) metadata
+# as the forward to label every entry with its destination slot, sorts the
+# entry stream by that slot, and hands the kernel scalar-prefetched views of
+# the sorted order:
+#
+#   bag_sorted  (E,)    cotangent row (bag id) per sorted position
+#   run_of      (E,)    run id per sorted position — a "run" is a maximal
+#                       group of entries sharing one destination slot
+#   run_starts  (S+1,)  first sorted position of each run; empty tail runs
+#                       collapse to [n_valid, n_valid)
+#   run_slot    (S,)    destination table row of each run
+#   n_run       (1,)    number of live runs
+#
+# Every slot is touched by exactly ONE run and each grid step owns whole
+# runs, so tiles never write the same output row — collision resolution
+# costs a sort, not atomics. Within a tile, colliding entries accumulate
+# into a (tile_s, D) fp32 VMEM accumulator (one row per run) while their
+# cotangent rows stream in through the same two-slot DMA ping-pong as the
+# forward; the finished rows stream OUT through a second ping-pong,
+# overlapping the write-back of run i with the staging of run i+1.
+# Untouched table rows must stay zero, so the d_table output is
+# input_output_aliased to a zeros array.
+#
+# The kernel reads only arrays DERIVED from the sort permutation
+# (bag_sorted = bags[perm], run_slot = dest[perm][starts]), never the raw
+# ``argsort`` output itself: element-wise loads of an argsort result from
+# inside the grid loop miscompile on XLA CPU for SPMD partitions > 0 (the
+# shard_map path of this very backward; jax 0.4.x host platform), while
+# vectorized gathers of the same permutation are fine — so the permutation
+# is applied once in the prep and only its products cross into SMEM.
+
+def scatter_run_metadata(dest: jax.Array, bags: jax.Array, n_rows: int,
+                         n_runs_pad: int) -> tuple[jax.Array, ...]:
+    """Slot-sorted scatter metadata (the backward kernel's prep stage).
+
+    ``dest`` (E,) int32 holds each entry's destination table slot, or any
+    value >= ``n_rows`` for entries that scatter nothing (-1 padding,
+    foreign-bank rows); ``bags`` (E,) the cotangent row each entry drags in.
+    Returns ``(bag_sorted, run_of, run_starts, run_slot, n_run)`` with the
+    run axis padded to ``n_runs_pad`` (>= E, so the grid tiles it
+    statically). Entry order is preserved within a run (stable sort) — the
+    scatter accumulates per slot in the same order as the XLA fallback,
+    which is what makes fp32 parity bit-exact.
+    """
+    E = dest.shape[0]
+    assert n_runs_pad >= E, (n_runs_pad, E)
+    perm = jnp.argsort(dest, stable=True).astype(jnp.int32)
+    sd = jnp.take(dest, perm)
+    bag_sorted = jnp.take(bags, perm).astype(jnp.int32)
+    live = sd < n_rows
+    n_valid = live.sum().astype(jnp.int32)
+    prev = jnp.concatenate([jnp.full((1,), -1, sd.dtype), sd[:-1]])
+    new_run = (sd != prev) & live
+    n_run = new_run.sum().astype(jnp.int32)
+    run_of = jnp.clip(jnp.cumsum(new_run) - 1, 0, None).astype(jnp.int32)
+    starts = jnp.sort(jnp.where(new_run, jnp.arange(E, dtype=jnp.int32), E))
+    pad = jnp.full((n_runs_pad + 1 - E,), E, jnp.int32)
+    run_starts = jnp.minimum(jnp.concatenate([starts, pad]), n_valid)
+    # dead runs get an in-bounds row; the n_run guard skips their write
+    run_slot = jnp.minimum(sd, n_rows - 1)[
+        jnp.minimum(run_starts[:-1], E - 1)].astype(jnp.int32)
+    return bag_sorted, run_of, run_starts, run_slot, n_run.reshape(1)
+
+
+def _ct_scatter_kernel(bag_sorted_ref, run_of_ref, run_starts_ref,
+                       run_slot_ref, n_run_ref, ct_ref, dtab_in_ref,
+                       dtab_ref, in_buf, in_sem, out_buf, out_sem, *,
+                       tile_s: int, dim: int):
+    """Grid step t owns runs [s0, s0 + tile_s): stream the runs' cotangent
+    rows in (double-buffered), accumulate per run in fp32, stream the
+    finished rows out to their table slots (double-buffered). Validity and
+    ownership were folded into run membership by the prep sort, so every
+    walked entry scatters. ``dtab_in_ref`` is the aliased zeros input — the
+    kernel writes through ``dtab_ref`` only."""
+    del dtab_in_ref
+    s0 = pl.program_id(0) * tile_s
+    n_run = n_run_ref[0]
+
+    acc = jnp.zeros((tile_s, dim), jnp.float32)
+    acc = _dma_accumulate(acc, ct_ref, in_buf, in_sem,
+                          run_starts_ref[s0], run_starts_ref[s0 + tile_s],
+                          lambda p: bag_sorted_ref[p],
+                          lambda p: (run_of_ref[p] - s0, True))
+
+    # accumulated-row DMA out: two-slot ping-pong (run i's copy is in
+    # flight while run i+1's row is staged). Runs are packed to the front
+    # globally, so 'run s is live' is the prefix test s < n_run — start and
+    # wait guards agree by construction and the semaphores stay balanced.
+    def dma(i, slot):
+        return pltpu.make_async_copy(
+            out_buf.at[slot], dtab_ref.at[pl.ds(run_slot_ref[s0 + i], 1), :],
+            out_sem.at[slot])
+
+    for i in range(tile_s):
+        slot = i % 2
+        if i >= 2:
+            @pl.when(s0 + i - 2 < n_run)
+            def _(i=i, slot=slot):
+                dma(i - 2, slot).wait()
+
+        @pl.when(s0 + i < n_run)
+        def _(i=i, slot=slot):
+            out_buf[slot] = acc[i][None].astype(out_buf.dtype)
+            dma(i, slot).start()
+
+    for i in range(max(tile_s - 2, 0), tile_s):
+        @pl.when(s0 + i < n_run)
+        def _(i=i):
+            dma(i, i % 2).wait()
+
+
 def _csr_bag_kernel(idx_ref, seg_ref, offs_ref, bank_ref, slot_ref, my_ref,
                     table_ref, out_ref, buf, sem, *, tile_b: int, dim: int):
     """CSR-ragged bags: entries for bags [b0, b0+tile_b) are the contiguous
@@ -374,6 +499,103 @@ def fused_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
       effective_lengths(cache_idx), effective_lengths(residual_idx),
       cache_bank, cache_slot, emt_bank, emt_slot, my_bank,
       jnp.zeros((1,), jnp.int32), cache, emt)
+
+
+def _scatter_scratch(dim: int, ct_dtype, out_dtype):
+    return [pltpu.VMEM((2, 1, dim), ct_dtype), pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((2, 1, dim), out_dtype), pltpu.SemaphoreType.DMA((2,))]
+
+
+def _dest_slots(row: jax.Array, valid: jax.Array, bank: jax.Array,
+                slot: jax.Array, my_bank: jax.Array,
+                n_rows: int) -> jax.Array:
+    """The race-freedom invariant, in ONE place: an entry scatters iff it is
+    valid AND owned (``my < 0`` disables ownership), onto ``slot[row]``;
+    everything else gets the out-of-range sentinel that sorts it out of
+    every run."""
+    my = my_bank.reshape(())
+    mine = valid & ((my < 0) | (bank[row] == my))
+    return jnp.where(mine, slot[row], n_rows)
+
+
+def _ct_scatter_call(ct: jax.Array, dest: jax.Array, bags: jax.Array,
+                     n_rows: int, out_dtype, *, tile_s: int,
+                     interpret: bool) -> jax.Array:
+    """Shared pallas_call plumbing for the backward scatters: run the sort
+    prep, then the sorted-run kernel with the d_table aliased to zeros."""
+    E = dest.shape[0]
+    n_tiles = max(1, -(-E // tile_s))
+    bag_sorted, run_of, run_starts, run_slot, n_run = scatter_run_metadata(
+        dest, bags, n_rows, n_tiles * tile_s)
+    ctp, d = (ct, ct.shape[-1]) if interpret else pad_last_dim(ct)
+    D = ctp.shape[-1]
+    kernel = functools.partial(_ct_scatter_kernel, tile_s=tile_s, dim=D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=_scatter_scratch(D, ctp.dtype, out_dtype),
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, D), out_dtype),
+        # d_table aliases a zeros input (operand 6 = 5 scalars + ct): only
+        # touched rows are DMA'd, the rest must already BE zero
+        input_output_aliases={6: 0},
+        interpret=interpret,
+    )(bag_sorted, run_of, run_starts, run_slot, n_run, ctp,
+      jnp.zeros((n_rows, D), out_dtype))
+    return out[:, :d]
+
+
+def ct_scatter_bag_pallas(ct: jax.Array, idx: jax.Array, bank: jax.Array,
+                          slot: jax.Array, field_offsets: jax.Array,
+                          my_bank: jax.Array, n_rows: int, out_dtype, *,
+                          tile_s: int = 8, interpret: bool = False
+                          ) -> jax.Array:
+    """Transpose of ``banked_embedding_bag_pallas``: scatter-add the bag
+    cotangents back onto one bank's rows, entirely in the kernel layer.
+
+    ct (NB, D) cotangent rows; idx (NB, L) the forward's raw per-field ids
+    (-1 padded); bank/slot (V,) the replicated remap; field_offsets (F,);
+    my_bank (1,) int32 (< 0: own everything). -> d_table (n_rows, D).
+
+    The prep enumerates entries j-major (e = j*NB + bag: position-major like
+    the jnp fallback's scan over L), walks the same remap + ownership +
+    offset metadata as the forward to label each entry with its destination
+    slot, and sorts — see ``scatter_run_metadata``. fp32 accumulation per
+    run, one cast to ``out_dtype`` at the write, matching the fallback's
+    accumulation policy bit-for-bit in fp32.
+    """
+    NB, L = idx.shape
+    E = NB * L
+    F = field_offsets.shape[0]
+    e = jnp.arange(E, dtype=jnp.int32)
+    bag, j = e % NB, e // NB
+    raw = idx.reshape(-1)[bag * L + j]
+    valid = raw >= 0
+    row = jnp.where(valid, raw + field_offsets[bag % F], 0)
+    dest = _dest_slots(row, valid, bank, slot, my_bank, n_rows)
+    return _ct_scatter_call(ct, dest, bag, n_rows, out_dtype,
+                            tile_s=tile_s, interpret=interpret)
+
+
+def ct_scatter_csr_pallas(ct: jax.Array, indices: jax.Array,
+                          seg_ids: jax.Array, bank: jax.Array,
+                          slot: jax.Array, my_bank: jax.Array, n_rows: int,
+                          out_dtype, *, tile_s: int = 8,
+                          interpret: bool = False) -> jax.Array:
+    """Transpose of ``csr_bag_pallas``: ct (num_bags, D) bag cotangents,
+    indices/seg_ids (T,) the forward's flat stream (entries keep their
+    natural stream order within a run — the single-scatter fallback's
+    order). -> (n_rows, D)."""
+    valid = indices >= 0
+    row = jnp.where(valid, indices, 0)
+    dest = _dest_slots(row, valid, bank, slot, my_bank, n_rows)
+    return _ct_scatter_call(ct, dest, seg_ids, n_rows, out_dtype,
+                            tile_s=tile_s, interpret=interpret)
 
 
 def csr_bag_pallas(table: jax.Array, bank: jax.Array, slot: jax.Array,

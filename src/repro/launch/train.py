@@ -42,14 +42,23 @@ def make_batch_fn(spec, cfg):
     raise ValueError(f"use examples/ for family {fam}")
 
 
-def build_loss(spec, cfg, statics, backend: str | None = None):
+def build_loss(spec, cfg, statics, backend: str | None = None,
+               bwd_backend: str | None = None):
+    """Family loss + the kwargs train_step should bind at the jit boundary
+    (the dlrm embedding backend pair; other families take none)."""
     fam = spec.family
     if fam == "lm":
         from repro.models import transformer as T
-        return lambda p, b: T.lm_loss(cfg, p, b["tokens"], b["labels"])
+        return (lambda p, b, **kw: T.lm_loss(cfg, p, b["tokens"],
+                                             b["labels"])), {}
     mod = __import__(f"repro.models.{fam}", fromlist=["loss_fn"])
-    kw = {"backend": backend} if backend is not None and fam == "dlrm" else {}
-    return lambda p, b: mod.loss_fn(cfg, p, statics, b, **kw)
+    kw = {}
+    if fam == "dlrm":
+        if backend is not None:
+            kw["backend"] = backend
+        if bwd_backend is not None:
+            kw["bwd_backend"] = bwd_backend
+    return (lambda p, b, **k: mod.loss_fn(cfg, p, statics, b, **k)), kw
 
 
 def main() -> None:
@@ -68,8 +77,15 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "jnp", "pallas"),
-                    help="embedding stage-2 backend (dlrm; fwd AND bwd via "
-                         "the kernel's scatter-add custom_vjp)")
+                    help="embedding stage-2 backend (dlrm). 'pallas' keeps "
+                         "the WHOLE embedding step near memory: fused "
+                         "lookup kernel forward, sorted-run scatter kernel "
+                         "backward")
+    ap.add_argument("--bwd-backend", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="override the gradient scatter only ('auto' "
+                         "follows --backend; 'jnp' = XLA scatter fallback "
+                         "under a pallas forward, the parity baseline)")
     ap.add_argument("--adaptive", action="store_true",
                     help="telemetry + drift-triggered repartitioning of the "
                          "banked table during training (dlrm only); the "
@@ -119,9 +135,11 @@ def main() -> None:
     print(f"arch={args.arch} family={spec.family} params={n_params:,}")
 
     opt = default_optimizer(lr=args.lr, emb_lr=args.emb_lr)
-    loss_fn = build_loss(spec, cfg, statics, backend=args.backend)
+    loss_fn, loss_kw = build_loss(spec, cfg, statics, backend=args.backend,
+                                  bwd_backend=args.bwd_backend)
     step_fn = jax.jit(build_train_step(loss_fn, opt,
-                                       compress_grads=args.compress_grads))
+                                       compress_grads=args.compress_grads,
+                                       loss_kwargs=loss_kw))
     state = TrainState.create(params, opt, compress=args.compress_grads)
 
     start = 0
@@ -175,10 +193,12 @@ def main() -> None:
                                                     jnp.int32)
                 statics["remap_slot"] = jnp.asarray(update.plan.slot_of_row,
                                                     jnp.int32)
-                loss_fn = build_loss(spec, cfg, statics,
-                                     backend=args.backend)
+                loss_fn, loss_kw = build_loss(
+                    spec, cfg, statics, backend=args.backend,
+                    bwd_backend=args.bwd_backend)
                 step_fn = jax.jit(build_train_step(
-                    loss_fn, opt, compress_grads=args.compress_grads))
+                    loss_fn, opt, compress_grads=args.compress_grads,
+                    loss_kwargs=loss_kw))
                 n_migrations += 1
                 print(f"  [migrate @step {step}] {update.report} "
                       f"imbalance -> {update.plan.imbalance():.3f}")

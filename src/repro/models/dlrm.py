@@ -146,15 +146,19 @@ def dot_interaction(z: Array) -> Array:
 
 
 def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
-            dist: DistCtx | None = None, *, backend: str = "auto") -> Array:
+            dist: DistCtx | None = None, *, backend: str = "auto",
+            bwd_backend: str = "auto") -> Array:
     """batch: dense (B, n_dense) fp; sparse (B, F) int32 (one-hot fields) or
     (B, F, L) multi-hot. Returns logits (B,).
 
     ``backend`` selects the stage-2 lookup implementation (core/embedding.py):
-    'jnp' scan, 'pallas' fused kernel, or 'auto'. The multi-hot path hands the
-    RAW (B, F, L) per-field ids plus ``field_offsets`` to ONE fused
-    banked_embedding_bag call — all F fields in a single stage-2 pass, and no
-    (B, F, L, D) gathered intermediate on either backend.
+    'jnp' scan, 'pallas' fused kernel, or 'auto'. ``bwd_backend`` selects the
+    pallas forward's gradient scatter ('auto' follows ``backend``: a pallas
+    training step keeps the backward's row traffic on the sorted-run scatter
+    kernel). The multi-hot path hands the RAW (B, F, L) per-field ids plus
+    ``field_offsets`` to ONE fused banked_embedding_bag call — all F fields
+    in a single stage-2 pass, and no (B, F, L, D) gathered intermediate on
+    either backend.
     """
     dense, sparse = batch["dense"], batch["sparse"]
     B = dense.shape[0]
@@ -166,7 +170,7 @@ def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
         emb = banked_gather(t, rows, dist)                       # (B, F, D)
     else:
         emb = banked_embedding_bag(                              # (B, F, D)
-            t, sparse, dist, backend=backend,
+            t, sparse, dist, backend=backend, bwd_backend=bwd_backend,
             field_offsets=statics["field_offsets"])
     emb = shard(emb, dist, dp(dist), None, None).astype(cfg.dtype)
 
@@ -180,8 +184,8 @@ def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
 
 def forward_cached(cfg: DLRMConfig, params: dict, statics: dict,
                    cache_table: BankedTable, batch: dict,
-                   dist: DistCtx | None = None, *,
-                   backend: str = "auto") -> Array:
+                   dist: DistCtx | None = None, *, backend: str = "auto",
+                   bwd_backend: str = "auto") -> Array:
     """Cache-aware path (Fig. 7): batch carries rewritten multi-hot bags:
     ``cache_idx`` (B, T, Lc) entries into the partial-sum cache table and
     ``residual_idx`` (B, T, Lr) union-vocab rows. Bag sum = cache partials +
@@ -191,7 +195,8 @@ def forward_cached(cfg: DLRMConfig, params: dict, statics: dict,
     t = _banked(params, statics)
     emb = banked_cache_residual_bag(t, cache_table, batch["cache_idx"],
                                     batch["residual_idx"], dist,
-                                    backend=backend)
+                                    backend=backend,
+                                    bwd_backend=bwd_backend)
     x = mlp_apply(params["bot"], dense.astype(cfg.dtype))
     z = jnp.concatenate([x[:, None], emb], axis=1)
     inter = dot_interaction(z)
@@ -207,9 +212,11 @@ def bce_loss(logits: Array, labels: Array) -> Array:
 
 
 def loss_fn(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
-            dist: DistCtx | None = None, *, backend: str = "auto") -> Array:
+            dist: DistCtx | None = None, *, backend: str = "auto",
+            bwd_backend: str = "auto") -> Array:
     return bce_loss(forward(cfg, params, statics, batch, dist,
-                            backend=backend), batch["label"])
+                            backend=backend, bwd_backend=bwd_backend),
+                    batch["label"])
 
 
 def retrieval_scores(cfg: DLRMConfig, params: dict, statics: dict,

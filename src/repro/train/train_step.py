@@ -39,23 +39,32 @@ def _not_table(path: str) -> bool:
 
 
 def build_train_step(
-    loss_fn: Callable[[Any, Any], jax.Array],
+    loss_fn: Callable[..., jax.Array],
     optimizer: O.Optimizer,
     *,
     clip_norm: float | None = 1.0,
     compress_grads: bool = False,
     clip_include: Callable[[str], bool] = _not_table,
+    loss_kwargs: dict | None = None,
 ) -> Callable[[TrainState, Any], tuple[TrainState, dict]]:
     """Returns step(state, batch) -> (state, metrics). Pure; jit at call site
     with in/out shardings from dist/sharding.py.
+
+    ``loss_kwargs`` are forwarded to every ``loss_fn(params, batch, ...)``
+    call — how launch/train.py binds the embedding backend pair
+    (``backend``/``bwd_backend``) at the step boundary, so a
+    ``backend='pallas'`` step runs the fused lookup kernel forward AND the
+    sorted-run scatter kernel backward without a bespoke closure per config.
 
     Global-norm clipping skips embedding tables by default (§Perf C1): their
     row-wise Adagrad update is per-row scale-invariant and the full-table
     norm pass costs ~2 table reads/writes per step for nothing.
     """
+    kw = dict(loss_kwargs or {})
 
     def step(state: TrainState, batch) -> tuple[TrainState, dict]:
-        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        loss, grads = jax.value_and_grad(
+            lambda p, b: loss_fn(p, b, **kw))(state.params, batch)
         metrics = {"loss": loss}
         if clip_norm is not None:
             grads, gnorm = O.clip_by_global_norm_filtered(

@@ -7,9 +7,13 @@ what is already resident:
   * rows whose bank does NOT change are a per-bank permutation gather
     (slot reshuffle inside the bank's own HBM block — no traffic on the wire),
   * rows that change bank ride ONE psum over the bank axis (`repro.dist`
-    rendition of a cross-bank row exchange: each bank scatters the rows it is
-    giving up into a zero buffer at their new flat position; the reduction
-    materializes every bank's incoming rows),
+    rendition of a cross-bank row exchange) — COMPACTED to the moved set:
+    each bank gathers the rows it is giving up into an (n_moved, D) buffer
+    at their host-assigned position in the global moved list, and the
+    reduction materializes exactly the moved rows (an incremental replan
+    moves a few percent of the vocab, so the wire cost tracks the drift
+    instead of the full packed size; ``exchange='full'`` keeps the original
+    packed-size buffer as the parity baseline),
 
 and the swap to the new (packed, remap_bank, remap_slot) triple happens
 between micro-batches on the host — the jitted serve step never observes a
@@ -61,14 +65,21 @@ def permute_packed_rows(arr: Array, old_flat: np.ndarray,
 
 def migrate_table(t: BankedTable, new_plan: PartitionPlan,
                   dist: DistCtx | None = None, *,
-                  rows_per_bank: int | None = None) -> BankedTable:
+                  rows_per_bank: int | None = None,
+                  exchange: str = "compact") -> BankedTable:
     """Re-layout ``t`` under ``new_plan`` without re-initializing.
 
     ``rows_per_bank`` pins the per-bank capacity (pass the table's current
     value to keep shapes — and therefore compiled executables — stable).
+    ``exchange`` picks the sharded moved-row path: 'compact' psums only the
+    gathered (n_moved, D) buffer, 'full' the original packed-size buffer
+    (bit-identical results; tests assert it).
     """
     if new_plan.vocab != t.vocab:
         raise ValueError(f"plan vocab {new_plan.vocab} != table {t.vocab}")
+    if exchange not in ("compact", "full"):
+        raise ValueError(f"exchange must be 'compact' or 'full', "
+                         f"got {exchange!r}")
     new_rpb = resolve_rows_per_bank(new_plan, rows_per_bank)
     old_flat = np.asarray(
         (np.asarray(t.remap_bank, np.int64) * t.rows_per_bank
@@ -79,7 +90,8 @@ def migrate_table(t: BankedTable, new_plan: PartitionPlan,
         packed = permute_packed_rows(
             t.packed, old_flat, new_flat, new_plan.n_banks * new_rpb)
     else:
-        packed = _migrate_packed_sharded(t, new_plan, new_rpb, dist)
+        packed = _migrate_packed_sharded(t, new_plan, new_rpb, dist,
+                                         exchange=exchange)
 
     return BankedTable(
         packed=packed,
@@ -91,10 +103,20 @@ def migrate_table(t: BankedTable, new_plan: PartitionPlan,
 
 
 def _migrate_packed_sharded(t: BankedTable, new_plan: PartitionPlan,
-                            new_rpb: int, dist: DistCtx) -> Array:
+                            new_rpb: int, dist: DistCtx, *,
+                            exchange: str = "compact") -> Array:
     """shard_map migration: local permutation for stay rows, psum exchange
     for moved rows. Requires the bank count to match the mesh's bank axis
-    (as banked_embedding_bag does)."""
+    (as banked_embedding_bag does).
+
+    The moved-row exchange has two shapes: 'compact' (default) enumerates
+    the moved set HOST-side (the remaps are concrete between micro-batches —
+    the same pre-processing contract as ``shard_csr_batch``) and psums an
+    (n_moved, D) buffer where each moved row owns one host-assigned
+    position; 'full' scatters into an (n_banks * new_rpb, D) buffer at the
+    rows' new flat positions (the original path, kept as parity baseline).
+    Both are exact: every buffer position is written by exactly one bank.
+    """
     if new_plan.n_banks != t.n_banks:
         raise ValueError("sharded migration keeps the bank count (the mesh "
                          f"axis is fixed): {t.n_banks} -> {new_plan.n_banks}")
@@ -103,22 +125,64 @@ def _migrate_packed_sharded(t: BankedTable, new_plan: PartitionPlan,
     n_banks = t.n_banks
     D = t.dim
     dtype = t.packed.dtype
-    new_bank = jnp.asarray(new_plan.bank_of_row, jnp.int32)
+    old_bank_h = np.asarray(t.remap_bank, np.int32)
+    new_bank_h = np.asarray(new_plan.bank_of_row, np.int32)
+    new_bank = jnp.asarray(new_bank_h)
     new_slot = jnp.asarray(new_plan.slot_of_row, jnp.int32)
 
-    def fn(old_local, ob, osl, nb, ns):
-        my = jax.lax.axis_index(bank)
+    def stay_rows(old_local, ob, osl, nb, ns, my):
         mine_old = ob == my
         vals = jnp.take(old_local, jnp.where(mine_old, osl, 0), axis=0)
         vals = jnp.where(mine_old[:, None], vals, jnp.zeros((), dtype))
-
-        # stay rows: in-bank slot permutation, no collective
         stay = mine_old & (nb == my)
         local = jnp.zeros((new_rpb, D), dtype)
-        local = local.at[jnp.where(stay, ns, new_rpb)].set(
+        return mine_old, vals, local.at[jnp.where(stay, ns, new_rpb)].set(
             jnp.where(stay[:, None], vals, jnp.zeros((), dtype)),
             mode="drop")
 
+    if exchange == "compact":
+        moved_rows = np.nonzero(old_bank_h != new_bank_h)[0]
+        if moved_rows.size == 0:
+            # pure in-bank permutation: no collective at all
+            def fn_local(old_local, ob, osl, nb, ns):
+                my = jax.lax.axis_index(bank)
+                return stay_rows(old_local, ob, osl, nb, ns, my)[2]
+
+            return shard_map(
+                fn_local, mesh=dist.mesh,
+                in_specs=(P(bank, None), P(), P(), P(), P()),
+                out_specs=P(bank, None),
+            )(t.packed, t.remap_bank, t.remap_slot, new_bank, new_slot)
+
+        m_ob = jnp.asarray(old_bank_h[moved_rows])
+        m_os = jnp.asarray(np.asarray(t.remap_slot, np.int32)[moved_rows])
+        m_nb = jnp.asarray(new_bank_h[moved_rows])
+        m_ns = jnp.asarray(new_plan.slot_of_row.astype(np.int32)[moved_rows])
+
+        def fn(old_local, ob, osl, nb, ns, mob, mos, mnb, mns):
+            my = jax.lax.axis_index(bank)
+            _, _, local = stay_rows(old_local, ob, osl, nb, ns, my)
+            # each bank fills ITS outgoing rows at their global moved-list
+            # position; the psum materializes the full moved set (n_moved, D)
+            out_mine = mob == my
+            buf = jnp.take(old_local, jnp.where(out_mine, mos, 0), axis=0)
+            buf = jnp.where(out_mine[:, None], buf, jnp.zeros((), dtype))
+            buf = jax.lax.psum(buf, bank)
+            in_mine = mnb == my
+            return local.at[jnp.where(in_mine, mns, new_rpb)].set(
+                jnp.where(in_mine[:, None], buf, jnp.zeros((), dtype)),
+                mode="drop")
+
+        return shard_map(
+            fn, mesh=dist.mesh,
+            in_specs=(P(bank, None), P(), P(), P(), P(), P(), P(), P(), P()),
+            out_specs=P(bank, None),
+        )(t.packed, t.remap_bank, t.remap_slot, new_bank, new_slot,
+          m_ob, m_os, m_nb, m_ns)
+
+    def fn_full(old_local, ob, osl, nb, ns):
+        my = jax.lax.axis_index(bank)
+        mine_old, vals, local = stay_rows(old_local, ob, osl, nb, ns, my)
         # moved rows: scatter into the global layout, exchange via psum
         moved = mine_old & (nb != my)
         flat = jnp.where(moved, nb * new_rpb + ns, n_banks * new_rpb)
@@ -132,7 +196,7 @@ def _migrate_packed_sharded(t: BankedTable, new_plan: PartitionPlan,
         return local + incoming
 
     return shard_map(
-        fn, mesh=dist.mesh,
+        fn_full, mesh=dist.mesh,
         in_specs=(P(bank, None), P(), P(), P(), P()),
         out_specs=P(bank, None),
     )(t.packed, t.remap_bank, t.remap_slot, new_bank, new_slot)

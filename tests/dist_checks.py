@@ -231,7 +231,9 @@ def check_csr_sharded_lookup():
 
 def check_migration_sharded():
     """shard_map migration (local permutation + psum row exchange) is
-    bit-identical to a fresh pack of the same rows under the new plan."""
+    bit-identical to a fresh pack of the same rows under the new plan —
+    on BOTH exchange shapes: 'compact' ((n_moved, D) psum) and 'full'
+    (packed-size psum, the parity baseline)."""
     from repro.workload import migrate_table
     rng = np.random.default_rng(13)
     V, D, banks = 96, 8, 2
@@ -255,12 +257,91 @@ def check_migration_sharded():
         rows_per_bank=cap)
     mesh = mesh42()
     dist = DistCtx(mesh=mesh, dp_axes=("data",))
-    t_mig = migrate_table(t_a, plan_b, dist, rows_per_bank=cap)
     fresh = np.zeros((banks * cap, D), np.float32)
     fresh[plan_b.bank_of_row.astype(np.int64) * cap + plan_b.slot_of_row] \
         = table
-    check("migration_sharded_bitexact",
-          (np.asarray(t_mig.packed) == fresh).all())
+    for exchange in ("compact", "full"):
+        t_mig = migrate_table(t_a, plan_b, dist, rows_per_bank=cap,
+                              exchange=exchange)
+        check(f"migration_sharded_bitexact_{exchange}",
+              (np.asarray(t_mig.packed) == fresh).all())
+    # no-move replan: the compact path drops the collective entirely and
+    # must still reproduce the (identical) layout bit-for-bit
+    t_same = migrate_table(t_a, plan_a, dist, rows_per_bank=cap)
+    check("migration_sharded_nomove",
+          (np.asarray(t_same.packed) == np.asarray(t_a.packed)).all())
+
+
+def check_pallas_backward_sharded():
+    """The sorted-run Pallas scatter backward INSIDE the shard_map matches
+    the XLA scatter fallback and the local jnp gradient, on all three
+    custom_vjp paths (rectangular multi-field, fused cache+residual, CSR).
+    This is the config that exposed the argsort-consumption miscompile the
+    kernels' derived-operand prep works around."""
+    import dataclasses
+    from repro.core.embedding import (banked_cache_residual_bag,
+                                      csr_embedding_bag)
+    from repro.core.partitioning import uniform_partition
+    rng = np.random.default_rng(23)
+    V, D, banks = 64, 16, 2
+    table = rng.standard_normal((V, D)).astype(np.float32)
+    plan = non_uniform_partition(rng.random(V) + 0.1, banks)
+    bt = pack_table(table, plan)
+    fo = jnp.array([0, 20, 40], jnp.int32)
+    idx = jnp.array(rng.integers(-1, 20, (8, 3, 5)), jnp.int32)
+    mesh = mesh42()
+    dist = DistCtx(mesh=mesh, dp_axes=("data",))
+
+    def loss(packed, bwd, d):
+        t2 = dataclasses.replace(bt, packed=packed)
+        return (banked_embedding_bag(t2, idx, d, backend="pallas",
+                                     bwd_backend=bwd,
+                                     field_offsets=fo) ** 2).sum()
+
+    gl = jax.grad(lambda p: loss(p, "jnp", None))(bt.packed)
+    gp = jax.jit(jax.grad(lambda p: loss(p, "pallas", dist)))(bt.packed)
+    gs = jax.jit(jax.grad(lambda p: loss(p, "jnp", dist)))(bt.packed)
+    check("pallas_bwd_sharded_rect",
+          np.allclose(gp, gl, atol=1e-4) and np.allclose(gp, gs, atol=1e-4))
+
+    nc = 24
+    ctab = rng.standard_normal((nc, D)).astype(np.float32)
+    cbt = pack_table(ctab, uniform_partition(nc, banks))
+    ci = jnp.asarray(rng.integers(-1, nc, (8, 3, 4)), jnp.int32)
+    ri = jnp.asarray(rng.integers(-1, V, (8, 3, 6)), jnp.int32)
+
+    def loss_c(ep, cp, bwd, d):
+        t2 = dataclasses.replace(bt, packed=ep)
+        c2 = dataclasses.replace(cbt, packed=cp)
+        return (banked_cache_residual_bag(t2, c2, ci, ri, d,
+                                          backend="pallas",
+                                          bwd_backend=bwd) ** 2).sum()
+
+    ge_p, gc_p = jax.jit(jax.grad(
+        lambda e, c: loss_c(e, c, "pallas", dist),
+        argnums=(0, 1)))(bt.packed, cbt.packed)
+    ge_l, gc_l = jax.grad(
+        lambda e, c: loss_c(e, c, "jnp", None),
+        argnums=(0, 1))(bt.packed, cbt.packed)
+    check("pallas_bwd_sharded_cache",
+          np.allclose(ge_p, ge_l, atol=1e-4)
+          and np.allclose(gc_p, gc_l, atol=1e-4))
+
+    total, num_bags = 41, 7
+    indices = jnp.asarray(rng.integers(-1, V, (total,)), jnp.int32)
+    cuts = np.sort(rng.choice(np.arange(1, total), num_bags - 1,
+                              replace=False))
+    offsets = jnp.asarray(np.concatenate([[0], cuts]), jnp.int32)
+
+    def loss_r(packed, bwd, d):
+        t2 = dataclasses.replace(bt, packed=packed)
+        return (csr_embedding_bag(t2, indices, offsets, num_bags, d,
+                                  backend="pallas",
+                                  bwd_backend=bwd) ** 2).sum()
+
+    g_p = jax.jit(jax.grad(lambda p: loss_r(p, "pallas", dist)))(bt.packed)
+    g_l = jax.grad(lambda p: loss_r(p, "jnp", None))(bt.packed)
+    check("pallas_bwd_sharded_csr", np.allclose(g_p, g_l, atol=1e-4))
 
 
 def check_lm_gspmd_matches_local():
@@ -290,6 +371,7 @@ if __name__ == "__main__":
     check_dp_compressed_step()
     check_csr_sharded_lookup()
     check_migration_sharded()
+    check_pallas_backward_sharded()
     check_lm_gspmd_matches_local()
     if FAILED:
         print("FAILED:", FAILED)

@@ -162,6 +162,138 @@ def test_bf16_table_grads_accumulate_fp32():
                                np.full(d, b * l, np.float32))
 
 
+# ---------------------------------------------------------------------------
+# Pallas backward (sorted-run scatter kernel) vs the XLA scatter fallback
+# (ISSUE 3 tentpole): same pallas forward, bwd_backend='pallas' vs 'jnp'.
+# fp32 must BIT-match (the prep's stable slot-sort preserves the fallback's
+# per-slot accumulation order); bf16 tolerance-matches (both accumulate
+# fp32, cast once).
+# ---------------------------------------------------------------------------
+
+def _grad_pair(loss_of_bwd, *args):
+    gp = jax.grad(lambda *a: loss_of_bwd("pallas", *a), argnums=tuple(
+        range(len(args))))(*args)
+    gj = jax.grad(lambda *a: loss_of_bwd("jnp", *a), argnums=tuple(
+        range(len(args))))(*args)
+    return gp, gj
+
+
+def _assert_bwd_match(gp, gj, dtype):
+    for p, j in zip(jax.tree.leaves(gp), jax.tree.leaves(gj)):
+        if dtype == jnp.float32:
+            np.testing.assert_array_equal(np.asarray(p), np.asarray(j))
+        else:
+            np.testing.assert_allclose(np.asarray(p, np.float32),
+                                       np.asarray(j, np.float32), atol=0.3)
+
+
+@pytest.mark.parametrize("d", [16, 33, 128])       # incl. odd D
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_bwd_rect_sweep(d, dtype):
+    """Rectangular multi-field path: kernel scatter == XLA scatter."""
+    rng = np.random.default_rng(d + 100)
+    vocab_sizes = (40, 30, 30)
+    v = sum(vocab_sizes)
+    offs = np.concatenate([[0], np.cumsum(vocab_sizes)[:-1]]).astype(np.int32)
+    table, bt = _banked(rng, v, d, banks=4, dtype=dtype)
+    idx = _multihot(rng, 9, 3, 5, vocab_sizes)
+    fo = jnp.asarray(offs)
+
+    def loss(bwd, packed):
+        t2 = dataclasses.replace(bt, packed=packed)
+        return (banked_embedding_bag(t2, idx, None, backend="pallas",
+                                     bwd_backend=bwd,
+                                     field_offsets=fo) ** 2).sum()
+
+    gp, gj = _grad_pair(loss, bt.packed)
+    _assert_bwd_match(gp, gj, dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_bwd_collisions_in_tile(dtype):
+    """The case the in-VMEM accumulator must get right: the same row
+    duplicated WITHIN a bag and ACROSS bags of the same tile (tile_b=8, so
+    bags 0..7 collide in one grid step), plus a -1 hole inside a bag."""
+    rng = np.random.default_rng(5)
+    v, d, b, l = 24, 16, 8, 6
+    table, bt = _banked(rng, v, d, banks=2, dtype=dtype)
+    idx = np.asarray(rng.integers(0, v, (b, l)), np.int32)
+    idx[:, 0] = 3                  # every bag hits row 3 (cross-bag)
+    idx[0, 1:4] = 3                # bag 0 hits it 3 more times (in-bag)
+    idx[2, 2] = -1                 # interior hole stays masked
+    idx = jnp.asarray(idx)
+
+    def loss(bwd, packed):
+        t2 = dataclasses.replace(bt, packed=packed)
+        return (banked_embedding_bag(t2, idx, None, backend="pallas",
+                                     bwd_backend=bwd) ** 2).sum()
+
+    gp, gj = _grad_pair(loss, bt.packed)
+    _assert_bwd_match(gp, gj, dtype)
+    # the hot row really saw every colliding contribution
+    hot = int(bt.remap_bank[3]) * bt.rows_per_bank + int(bt.remap_slot[3])
+    assert float(jnp.abs(jnp.asarray(gp[0], jnp.float32)[hot]).sum()) > 0
+
+
+@pytest.mark.parametrize("d", [8, 33])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_bwd_cache_residual_sweep(d, dtype):
+    """Fused cache+residual: the DUAL scatter (one cotangent onto both the
+    EMT and the cache table) matches the XLA fallback on both tables."""
+    rng = np.random.default_rng(d + 200)
+    v, nc = 80, 24
+    table, bt = _banked(rng, v, d, banks=4, dtype=dtype)
+    ctab_raw = rng.standard_normal((nc, d)).astype(np.float32)
+    cbt = pack_table(ctab_raw, uniform_partition(nc, 2), dtype=dtype)
+    ci = np.asarray(rng.integers(-1, nc, (10, 3, 4)), np.int32)
+    ri = np.asarray(rng.integers(-1, v, (10, 3, 6)), np.int32)
+    ci[:, 0, 0] = 1                # cache entry 1 collides across all bags
+    ri[:, 1, 0] = 7                # EMT row 7 collides across all bags
+    ci, ri = jnp.asarray(ci), jnp.asarray(ri)
+
+    def loss(bwd, ep, cp):
+        t2 = dataclasses.replace(bt, packed=ep)
+        c2 = dataclasses.replace(cbt, packed=cp)
+        return (banked_cache_residual_bag(t2, c2, ci, ri, None,
+                                          backend="pallas",
+                                          bwd_backend=bwd) ** 2).sum()
+
+    gp, gj = _grad_pair(loss, bt.packed, cbt.packed)
+    _assert_bwd_match(gp, gj, dtype)
+    assert float(jnp.abs(jnp.asarray(gp[1], jnp.float32)).sum()) > 0
+
+
+@pytest.mark.parametrize("d", [16, 33])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_bwd_csr_sweep(d, dtype):
+    """CSR-ragged path: kernel scatter == the fallback's single scatter,
+    duplicate rows across ragged bags included."""
+    rng = np.random.default_rng(d + 300)
+    v, total, num_bags = 64, 41, 7
+    table, bt = _banked(rng, v, d, banks=4, dtype=dtype)
+    indices = np.asarray(rng.integers(-1, v, (total,)), np.int32)
+    indices[::5] = 11              # row 11 recurs through the flat stream
+    indices = jnp.asarray(indices)
+    cuts = np.sort(rng.choice(np.arange(1, total), num_bags - 1,
+                              replace=False))
+    offsets = jnp.asarray(np.concatenate([[0], cuts]), jnp.int32)
+
+    def loss(bwd, packed):
+        t2 = dataclasses.replace(bt, packed=packed)
+        return (csr_embedding_bag(t2, indices, offsets, num_bags, None,
+                                  backend="pallas",
+                                  bwd_backend=bwd) ** 2).sum()
+
+    gp, gj = _grad_pair(loss, bt.packed)
+    _assert_bwd_match(gp, gj, dtype)
+
+
+def test_bwd_backend_validation():
+    with pytest.raises(ValueError, match="bwd_backend"):
+        from repro.core.embedding import _resolve_bwd
+        _resolve_bwd("kernel", "pallas")
+
+
 @pytest.mark.parametrize("num_bags,total", [(7, 41), (8, 8), (5, 60)])
 def test_csr_pallas_matches_jnp(num_bags, total):
     rng = np.random.default_rng(num_bags + total)

@@ -266,6 +266,40 @@ class TestMigration:
         with pytest.raises(ValueError):
             migrate_table(t, bad)
 
+    def test_bad_exchange_raises(self):
+        p_a, p_b, cap = self._plans(100)
+        t = _capacity_table(np.zeros((100, 4), np.float32), p_a, cap)
+        with pytest.raises(ValueError, match="exchange"):
+            migrate_table(t, p_b, exchange="broadcast")
+
+    def test_compact_exchange_sharded_parity(self):
+        """Compact (n_moved, D) psum == full packed-size psum == fresh pack,
+        on a 1x1 mesh here (the pipe-cleaner; the real 4x2-mesh parity runs
+        in tests/dist_checks.py with forced host devices), including the
+        no-move short-circuit that drops the collective entirely."""
+        from repro.core.compat import make_mesh
+        from repro.core.embedding import DistCtx
+        V, D, banks = 120, 8, 1
+        rng = np.random.default_rng(9)
+        table = rng.standard_normal((V, D)).astype(np.float32)
+        cap = V + 10
+        p_a = non_uniform_partition(rng.random(V) + 0.1, banks,
+                                    capacity_rows=cap)
+        p_b = non_uniform_partition(np.roll(rng.random(V) + 0.1, 40), banks,
+                                    capacity_rows=cap)
+        t_a = _capacity_table(table, p_a, cap)
+        mesh = make_mesh((1, 1), ("data", "model"))
+        dist = DistCtx(mesh=mesh, dp_axes=("data",))
+        fresh = np.zeros((banks * cap, D), np.float32)
+        fresh[p_b.bank_of_row.astype(np.int64) * cap + p_b.slot_of_row] \
+            = table
+        for exchange in ("compact", "full"):
+            t_mig = migrate_table(t_a, p_b, dist, rows_per_bank=cap,
+                                  exchange=exchange)
+            assert (np.asarray(t_mig.packed) == fresh).all(), exchange
+        t_same = migrate_table(t_a, p_a, dist, rows_per_bank=cap)
+        assert (np.asarray(t_same.packed) == np.asarray(t_a.packed)).all()
+
 
 # ---------------------------------------------------------------------------
 # replanner + runtime loop
