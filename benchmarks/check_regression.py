@@ -1,0 +1,137 @@
+"""Bench-regression gate: compare a smoke run's BENCH_*.json against the
+committed baselines.
+
+What the gate certifies (and what it deliberately does not):
+
+  schema   — FATAL. The recursive key structure must match exactly, both
+             directions (list elements are collapsed to one ``[]`` path
+             segment, since smoke runs measure fewer configs than the
+             committed full runs). A renamed/dropped/added field means the
+             artifact consumers (paper_figs, dashboards, this gate) silently
+             diverge — that is the drift this job exists to catch.
+  parity   — FATAL. Boolean leaves are semantic claims ("adaptive wins",
+             "grads bit-match"), not measurements: the smoke configuration is
+             chosen so they are DETERMINISTIC (fixed seeds, analytic models),
+             so any flip is a real behavioral regression, not noise.
+             ``smoke`` itself is excluded (it is the run-mode marker).
+  timing   — ADVISORY. Numeric leaves whose key smells like a measurement
+             (``*_us``, ``us_per_*``, ``*_gbps``, ``*latency*``) are compared
+             with a ±50% sanity band and only WARN: CI wall-clock says
+             nothing reliable, and smoke streams are shorter than the
+             committed full runs. The warnings make gross anomalies visible
+             in the job log without flaking the gate.
+
+    python benchmarks/check_regression.py --baseline-dir .ci-baselines \
+        [--candidate-dir .]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+TIMING_MARKERS = ("_us", "us_per", "_gbps", "latency", "_ms")
+PARITY_EXCLUDE = {"smoke"}
+BAND = 0.5                      # +/-50% advisory sanity band
+
+
+def key_paths(doc, prefix="") -> set[str]:
+    """Recursive key-path set; list indices collapse to '[]' (the union of
+    element schemas), scalars terminate a path."""
+    paths = set()
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            p = f"{prefix}.{k}" if prefix else str(k)
+            paths.add(p)
+            paths |= key_paths(v, p)
+    elif isinstance(doc, list):
+        for v in doc:
+            paths |= key_paths(v, f"{prefix}[]")
+    return paths
+
+
+def scalar_leaves(doc, prefix=""):
+    """Yield (path, value) for scalar leaves at NON-list paths (list element
+    values are config-dependent between smoke and full runs)."""
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            p = f"{prefix}.{k}" if prefix else str(k)
+            if isinstance(v, dict):
+                yield from scalar_leaves(v, p)
+            elif not isinstance(v, list):
+                yield p, v
+
+
+def check_pair(baseline: dict, candidate: dict, name: str
+               ) -> tuple[list[str], list[str]]:
+    """(fatal errors, advisory warnings) for one artifact pair."""
+    errors, warnings = [], []
+    bp, cp = key_paths(baseline), key_paths(candidate)
+    for missing in sorted(bp - cp):
+        errors.append(f"{name}: schema drift — baseline key lost: {missing}")
+    for extra in sorted(cp - bp):
+        errors.append(f"{name}: schema drift — new key not in committed "
+                      f"baseline (regenerate it): {extra}")
+    base_leaves = dict(scalar_leaves(baseline))
+    for path, cval in scalar_leaves(candidate):
+        if path not in base_leaves:
+            continue                      # already reported as schema drift
+        bval = base_leaves[path]
+        leaf = path.rsplit(".", 1)[-1]
+        if isinstance(cval, bool) and isinstance(bval, bool):
+            if leaf not in PARITY_EXCLUDE and cval != bval:
+                errors.append(f"{name}: parity drift — {path}: "
+                              f"baseline {bval} != candidate {cval}")
+        elif (isinstance(cval, (int, float)) and isinstance(bval, (int, float))
+              and any(m in leaf for m in TIMING_MARKERS)):
+            if bval and abs(cval - bval) > BAND * abs(bval):
+                warnings.append(
+                    f"{name}: timing outside +/-{BAND:.0%} band (advisory) — "
+                    f"{path}: baseline {bval:.3f} vs candidate {cval:.3f}")
+    return errors, warnings
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", required=True,
+                    help="directory holding the COMMITTED BENCH_*.json "
+                         "(stash them before the smoke run overwrites)")
+    ap.add_argument("--candidate-dir", default=".",
+                    help="directory the smoke run wrote its BENCH_*.json to")
+    args = ap.parse_args()
+
+    baselines = sorted(glob.glob(os.path.join(args.baseline_dir,
+                                              "BENCH_*.json")))
+    if not baselines:
+        sys.exit(f"no BENCH_*.json baselines under {args.baseline_dir}")
+    errors, warnings = [], []
+    for bpath in baselines:
+        name = os.path.basename(bpath)
+        cpath = os.path.join(args.candidate_dir, name)
+        if not os.path.exists(cpath):
+            errors.append(f"{name}: smoke run produced no artifact "
+                          f"({cpath} missing)")
+            continue
+        with open(bpath) as fh:
+            baseline = json.load(fh)
+        with open(cpath) as fh:
+            candidate = json.load(fh)
+        e, w = check_pair(baseline, candidate, name)
+        errors += e
+        warnings += w
+        print(f"checked {name}: {len(e)} fatal, {len(w)} advisory")
+    for w in warnings:
+        print(f"WARN  {w}")
+    for e in errors:
+        print(f"ERROR {e}")
+    if errors:
+        sys.exit(f"bench regression gate FAILED: {len(errors)} schema/parity "
+                 f"drift(s)")
+    print(f"bench regression gate PASSED "
+          f"({len(baselines)} artifacts, {len(warnings)} advisory warnings)")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,12 +14,28 @@ partial-sum read, the rest go to the EMT.  We mirror that split:
 Training note (beyond the paper, which is inference-only): cached sums go stale
 when the EMT trains; ``build_cache_table`` is cheap (one gather+sum per entry)
 and is refreshed every ``refresh_every`` steps by the train loop.
+
+Adaptive serving (repro.workload) adds two contracts on top:
+
+  fixed capacity —  ``cap_cache_plan`` pins the cache side to
+      ``n_banks * rows_per_bank`` entry positions regardless of what the
+      re-miner found (truncating overflow back to residual reads, padding the
+      remap vectors with unused positions), the same trick the EMT side plays
+      with ``rows_per_bank``: every swap feeds same-shape arrays to the same
+      serve executable, so replans never recompile.
+  versioning —  ``VersionedCacheRewriter`` tags every rewritten batch with the
+      cache-plan version it was rewritten under. A batch in flight across a
+      swap carries entry ids from the OLD table's numbering; the serve loop
+      resolves it with ``table_for(batch.version)`` so it reads the table it
+      was rewritten for, never the one installed after it.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
-from repro.core.grace import CachePlan
+from repro.core.grace import CacheEntry, CachePlan, _subsets
 
 
 def build_cache_table(table: np.ndarray, plan: CachePlan) -> np.ndarray:
@@ -85,3 +101,244 @@ def measure_hit_rate(bags: list[np.ndarray], plan: CachePlan) -> float:
         total += len(set(int(i) for i in bag))
         saved += len(set(int(i) for i in bag)) - (len(c) + len(r))
     return saved / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# fixed-capacity cache side (the adaptive-serving shape contract)
+# ---------------------------------------------------------------------------
+
+def empty_cache_plan() -> CachePlan:
+    """A CachePlan with no groups: every bag rewrites to pure residual."""
+    return CachePlan(groups=[], benefits=np.zeros(0), entries=[],
+                     entry_of_subset={})
+
+
+def entry_banks(plan: CachePlan, bank_of_row: np.ndarray,
+                cache_bank_of_group: np.ndarray | None) -> np.ndarray:
+    """Entry -> bank under Algorithm 1's co-location invariant: every subset
+    entry lives on its mined group's bank; groups the partitioner could not
+    place (or plans with no cache side) fall back to the bank of member 0."""
+    bank = np.zeros(max(plan.n_entries, 1), dtype=np.int32)
+    group_of = {}
+    if cache_bank_of_group is not None:
+        for g, grp in enumerate(plan.groups):
+            # grace._subsets is the SAME enumeration entry_of_subset was
+            # built from — entry.members tuples match it exactly
+            for sub in _subsets([int(x) for x in grp]):
+                group_of.setdefault(sub, g)
+    for e, entry in enumerate(plan.entries):
+        g = group_of.get(entry.members)
+        b = int(cache_bank_of_group[g]) if g is not None else -1
+        bank[e] = b if b >= 0 else int(bank_of_row[entry.members[0]])
+    return bank[:plan.n_entries] if plan.n_entries else bank[:0]
+
+
+@dataclasses.dataclass
+class FixedCachePlan:
+    """A re-mined CachePlan pinned to the serving capacity.
+
+    ``plan`` keeps only the entries that fit (renumbered 0..n_entries-1;
+    subsets that overflowed their bank's ``rows_per_bank`` budget are removed
+    from ``entry_of_subset`` so ``rewrite_bag`` degrades them to residual row
+    reads — losing only the benefit, never the lookup). ``entry_bank`` /
+    ``entry_slot`` are PADDED to the full ``n_banks * rows_per_bank``
+    capacity: pad ids point at the unused positions, so the remap vectors —
+    like the packed cache table — have one shape for the life of the server.
+    """
+
+    plan: CachePlan
+    entry_bank: np.ndarray      # (capacity,) int32
+    entry_slot: np.ndarray      # (capacity,) int32
+    n_banks: int
+    rows_per_bank: int
+    n_dropped: int = 0          # mined entries truncated back to residual
+
+    @property
+    def capacity(self) -> int:
+        return self.n_banks * self.rows_per_bank
+
+    @property
+    def n_entries(self) -> int:
+        return self.plan.n_entries
+
+
+def cap_cache_plan(plan: CachePlan, bank_of_entry: np.ndarray, n_banks: int,
+                   rows_per_bank: int) -> FixedCachePlan:
+    """Pad/truncate a mined cache plan to the fixed serving capacity.
+
+    Entries keep their mined order; each takes the next free slot on its
+    assigned bank, and entries arriving after their bank is full are DROPPED
+    (their subsets leave ``entry_of_subset``, so the rewriter falls back to
+    residual reads for them). Remaining capacity is distributed to the
+    emptiest banks so the padded remap vectors stay in-range.
+    """
+    capacity = n_banks * rows_per_bank
+    kept: list[int] = []
+    bank = np.zeros(capacity, dtype=np.int32)
+    slot = np.zeros(capacity, dtype=np.int32)
+    used = np.zeros(n_banks, dtype=np.int64)
+    for e in range(plan.n_entries):
+        b = int(bank_of_entry[e])
+        if used[b] >= rows_per_bank:
+            continue
+        bank[len(kept)] = b
+        slot[len(kept)] = used[b]
+        used[b] += 1
+        kept.append(e)
+    # pad ids -> remaining (bank, slot) positions, emptiest bank first
+    pos = len(kept)
+    while pos < capacity:
+        b = int(np.argmin(used))
+        bank[pos] = b
+        slot[pos] = used[b]
+        used[b] += 1
+        pos += 1
+    new_id = {e: i for i, e in enumerate(kept)}
+    entries = [CacheEntry(members=plan.entries[e].members,
+                          hits=plan.entries[e].hits) for e in kept]
+    entry_of_subset = {s: new_id[e] for s, e in plan.entry_of_subset.items()
+                       if e in new_id}
+    capped = CachePlan(groups=list(plan.groups),
+                       benefits=np.asarray(plan.benefits),
+                       entries=entries, entry_of_subset=entry_of_subset)
+    return FixedCachePlan(plan=capped, entry_bank=bank, entry_slot=slot,
+                          n_banks=n_banks, rows_per_bank=rows_per_bank,
+                          n_dropped=plan.n_entries - len(kept))
+
+
+def entry_member_union(fcp: FixedCachePlan) -> np.ndarray:
+    """Sorted union of every kept entry's member rows — all a rebuild needs
+    to read from the EMT (a few hundred rows, never the vocab)."""
+    if not fcp.plan.entries:
+        return np.zeros(0, dtype=np.int64)
+    return np.unique(np.fromiter(
+        (m for e in fcp.plan.entries for m in e.members), np.int64))
+
+
+def build_cache_table_fixed(rows: np.ndarray, fcp: FixedCachePlan, dtype=None,
+                            row_ids: np.ndarray | None = None):
+    """Fixed-shape banked GRACE table: entry e (re-summed from the CURRENT
+    ``rows`` values) at packed position ``entry_bank[e] * rows_per_bank +
+    entry_slot[e]``; pad positions stay zero. The returned BankedTable's
+    shapes depend only on (capacity, dim) — never on what was mined — which
+    is what lets a swap reuse the compiled serve step.
+
+    ``rows`` is indexed by union-vocab row id — either the full (vocab, dim)
+    array, or, with ``row_ids``, just those rows (the serve-loop swap passes
+    ``entry_member_union(fcp)`` so a rebuild never materializes the vocab;
+    the member-order summation is identical, so both forms are bit-equal)."""
+    import jax.numpy as jnp
+
+    from repro.core.embedding import BankedTable
+
+    dim = rows.shape[1]
+    dt = rows.dtype if dtype is None else dtype
+    packed = np.zeros((fcp.capacity, dim), dtype=dt)
+    n = fcp.n_entries
+    flat = (fcp.entry_bank.astype(np.int64) * fcp.rows_per_bank
+            + fcp.entry_slot)
+    if n:
+        if row_ids is not None:
+            pos = {int(i): j for j, i in enumerate(np.asarray(row_ids))}
+            vals = np.stack([
+                rows[[pos[int(m)] for m in e.members]].sum(axis=0)
+                for e in fcp.plan.entries]).astype(dt)
+        else:
+            vals = build_cache_table(rows, fcp.plan).astype(dt)[:n]
+        packed[flat[:n]] = vals
+    return BankedTable(
+        packed=jnp.asarray(packed),
+        remap_bank=jnp.asarray(fcp.entry_bank, jnp.int32),
+        remap_slot=jnp.asarray(fcp.entry_slot, jnp.int32),
+        n_banks=fcp.n_banks,
+        rows_per_bank=fcp.rows_per_bank,
+    )
+
+
+# ---------------------------------------------------------------------------
+# versioned rewriting (in-flight batches survive a swap)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RewrittenBatch:
+    """One micro-batch after cache rewriting, tagged with the cache-plan
+    version its entry ids are numbered under."""
+
+    cache_idx: np.ndarray       # (..., Lc) int32, -1 padded
+    residual_idx: np.ndarray    # (..., Lr) int32, -1 padded
+    version: int
+
+
+class VersionedCacheRewriter:
+    """The host/data-pipeline stage of Fig. 7, made swap-safe.
+
+    Owns the CURRENT (FixedCachePlan, cache BankedTable) pair plus the last
+    ``keep - 1`` retired pairs. ``rewrite_rect`` always rewrites against the
+    current plan and stamps the batch with its version; ``table_for`` hands
+    back the table matching any still-retained version, so a batch rewritten
+    just before a swap is served against the entry numbering it was rewritten
+    for. ``keep=2`` covers the serve loop's one-batch in-flight window;
+    deeper pipelines raise it.
+    """
+
+    def __init__(self, *, max_cache_per_bag: int, max_residual_per_bag: int,
+                 keep: int = 2):
+        assert keep >= 1
+        self.max_cache_per_bag = int(max_cache_per_bag)
+        self.max_residual_per_bag = int(max_residual_per_bag)
+        self.keep = int(keep)
+        self.version = -1
+        self._states: dict[int, tuple[FixedCachePlan, object]] = {}
+
+    def install(self, fcp: FixedCachePlan, table) -> int:
+        """Atomically publish a new (plan, table) pair; returns its version.
+        Called on the host between micro-batches — the next ``rewrite_rect``
+        uses the new plan, already-rewritten batches keep resolving."""
+        self.version += 1
+        self._states[self.version] = (fcp, table)
+        for v in [v for v in self._states if v <= self.version - self.keep]:
+            del self._states[v]
+        return self.version
+
+    @property
+    def current(self) -> tuple[FixedCachePlan, object]:
+        return self._states[self.version]
+
+    def plan_for(self, version: int) -> FixedCachePlan:
+        return self._state_for(version)[0]
+
+    def table_for(self, version: int):
+        return self._state_for(version)[1]
+
+    def _state_for(self, version: int):
+        try:
+            return self._states[version]
+        except KeyError:
+            raise KeyError(
+                f"cache version {version} retired (retained: "
+                f"{sorted(self._states)}); raise keep= for deeper pipelines"
+            ) from None
+
+    def rewrite_rect(self, union_idx: np.ndarray) -> RewrittenBatch:
+        """(..., L) union-vocab ids (-1 padded) -> version-tagged
+        (cache_idx, residual_idx) at the static per-bag budgets."""
+        if union_idx.shape[-1] > self.max_residual_per_bag:
+            # a bag of L unique rows with no cache hit needs L residual
+            # slots; past the budget rewrite_bags would silently DROP
+            # lookups (wrong scores), so refuse loudly instead — size
+            # max_residual_per_bag to the serve batch's bag length
+            raise ValueError(
+                f"bag length {union_idx.shape[-1]} > max_residual_per_bag "
+                f"{self.max_residual_per_bag}: residual overflow would drop "
+                f"lookups")
+        fcp, _ = self.current
+        lead = union_idx.shape[:-1]
+        flat = union_idx.reshape(-1, union_idx.shape[-1])
+        bags = [row[row >= 0] for row in flat]
+        ci, ri = rewrite_bags(bags, fcp.plan,
+                              max_cache_per_bag=self.max_cache_per_bag,
+                              max_residual_per_bag=self.max_residual_per_bag)
+        return RewrittenBatch(
+            cache_idx=ci.reshape(*lead, self.max_cache_per_bag),
+            residual_idx=ri.reshape(*lead, self.max_residual_per_bag),
+            version=self.version)

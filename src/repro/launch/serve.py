@@ -10,6 +10,18 @@ telemetry, and on detected drift the table is repartitioned and live-migrated
 between micro-batches. The remap vectors are jit ARGUMENTS (not closure
 constants) and the packed shape is pinned to a fixed per-bank capacity, so a
 swap never recompiles the serve step.
+
+``--adaptive --partition cache_aware`` serves the FUSED cache+residual path
+(paper Fig. 7) under the same loop: every micro-batch is host-rewritten
+against the current GRACE plan and version-tagged; a drifted replan re-mines
+the co-occurrence groups, migrates the EMT, re-sums the cache table from the
+migrated rows at a FIXED entry capacity, and swaps (rewrite plan, cache
+table, remap vectors) atomically between micro-batches — batches in flight
+across the swap resolve against the cache-table version they were rewritten
+for. A compile-count probe (jax.monitoring + the jit cache size) asserts the
+whole run used ONE serve executable, and the first swap is verified
+bit-identical to tearing down and rebuilding the cache path from scratch
+(``--min-swaps`` makes both checks a hard exit code for CI).
 """
 from __future__ import annotations
 
@@ -24,6 +36,20 @@ from repro.configs import get_arch
 from repro.serve.serve_step import MicroBatcher, Request
 
 
+class CompileProbe:
+    """Counts XLA compilations via jax.monitoring — the zero-recompile
+    assertion for live swaps (each jit compilation emits one
+    '/jax/…compile…' event; cache hits emit none)."""
+
+    def __init__(self):
+        self.compiles = 0
+        jax.monitoring.register_event_listener(self._on_event)
+
+    def _on_event(self, name: str, **kw) -> None:
+        if "compile" in name:
+            self.compiles += 1
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dlrm-rm2")
@@ -36,15 +62,27 @@ def main() -> None:
     ap.add_argument("--adaptive", action="store_true",
                     help="online telemetry + drift-triggered repartitioning "
                          "with live table migration (dlrm only)")
+    ap.add_argument("--partition", default="non_uniform",
+                    choices=("non_uniform", "cache_aware"),
+                    help="adaptive replanner: plain banked (§3.2) or the "
+                         "fused GRACE cache+residual serve path (§3.3)")
     ap.add_argument("--banks", type=int, default=8,
                     help="bank count for the adaptive partition")
     ap.add_argument("--replan-every", type=int, default=8,
                     help="micro-batches between drift checks")
     ap.add_argument("--capacity-slack", type=float, default=0.25,
                     help="per-bank row headroom over vocab/banks")
+    ap.add_argument("--cache-entries", type=int, default=128,
+                    help="TOTAL cache-entry capacity across banks "
+                         "(cache_aware; fixed for the life of the server)")
     ap.add_argument("--drift-rotate-every", type=int, default=512,
                     help="requests between hot-set rotations of the "
                          "synthetic drifting stream")
+    ap.add_argument("--min-swaps", type=int, default=0,
+                    help="exit nonzero unless at least this many live swaps "
+                         "occurred AND the swap invariants (bit-parity with "
+                         "a from-scratch rebuild, zero recompiles) held — "
+                         "the CI serve-smoke contract")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -99,6 +137,9 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
     from repro.workload import (AdaptiveEmbeddingRuntime, DriftConfig,
                                 DriftingZipfTrace, ReplanConfig,
                                 dlrm_drifting_batch, rows_from_sparse)
+
+    if args.partition == "cache_aware":
+        return _main_adaptive_cached(args, spec, cfg, mod)
 
     banks = args.banks
     V = cfg.total_vocab
@@ -169,6 +210,178 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
     p50 = lat[len(lat) // 2] * 1e3
     print(f"served {len(lat)} requests  p50={p50:.2f}ms "
           f"p99={mb.p99() * 1e3:.2f}ms  replans={runtime.replanner.n_replans}")
+
+
+def _main_adaptive_cached(args, spec, cfg, mod) -> None:
+    """The fused cache+residual serve path under the adaptive runtime: every
+    batch host-rewritten + version-tagged, live GRACE-table swaps between
+    micro-batches, one serve executable for the whole run."""
+    from repro.core.cache_runtime import build_cache_table_fixed
+    from repro.core.embedding import BankedTable
+    from repro.core.partitioning import non_uniform_partition
+    from repro.serve.serve_step import build_recsys_serve_cached_adaptive
+    from repro.workload import (AdaptiveEmbeddingRuntime, DriftConfig,
+                                DriftingZipfTrace, ReplanConfig,
+                                dlrm_drifting_batch, unpacked_rows)
+
+    mh = cfg.multi_hot
+    assert mh >= 2, ("--partition cache_aware needs multi-hot bags "
+                     "(try --arch updlrm-paper); GRACE partial sums fuse "
+                     ">=2 lookups of one bag")
+    banks = args.banks
+    V = cfg.total_vocab
+    cap = int(np.ceil(V / banks) * (1.0 + args.capacity_slack))
+    crpb = max(1, -(-args.cache_entries // banks))
+    plan = non_uniform_partition(np.ones(V), banks, capacity_rows=cap)
+    params, statics = mod.init_params(cfg, jax.random.key(args.seed),
+                                      plan=plan, rows_per_bank=cap)
+    offs = np.asarray(statics["field_offsets"])
+
+    probe = CompileProbe()
+    table = BankedTable(packed=params["emb_packed"],
+                        remap_bank=statics["remap_bank"],
+                        remap_slot=statics["remap_slot"],
+                        n_banks=banks, rows_per_bank=cap)
+    rcfg = ReplanConfig.for_vocab(V, banks, capacity_rows=cap,
+                                  check_every=args.replan_every,
+                                  partitioner="cache_aware",
+                                  cache_rows_per_bank=crpb,
+                                  mine_min_support=2,
+                                  # exponential window: a long-lived server's
+                                  # cumulative estimate goes blind to late
+                                  # rotations (bench_workload's p99 spike)
+                                  telemetry_decay=0.8,
+                                  telemetry_decay_every=4096)
+    runtime = AdaptiveEmbeddingRuntime(
+        table, plan, rcfg, init_freq=np.ones(V),
+        max_cache_per_bag=max(2, mh // 4), max_residual_per_bag=mh)
+
+    serve = jax.jit(build_recsys_serve_cached_adaptive(
+        mod, cfg, statics, backend=args.backend))
+
+    def union_rect(feats):
+        sp = np.asarray(feats["sparse"])                 # (B, F, L)
+        return np.where(sp >= 0, sp + offs[None, :, None], -1)
+
+    def observe(feats, n_real):
+        sp = np.asarray(feats["sparse"])[:n_real]
+        u = np.where(sp >= 0, sp + offs[None, :, None], -1)
+        runtime.observe_bags([bag[bag >= 0]
+                              for bag in u.reshape(-1, u.shape[-1])])
+
+    traces = [DriftingZipfTrace(
+        DriftConfig(n_items=v, zipf_a=1.2, avg_bag=float(mh),
+                    rotate_every=args.drift_rotate_every, rotate_frac=0.25),
+        seed=args.seed + f) for f, v in enumerate(cfg.vocab_sizes)]
+    rng = np.random.default_rng(args.seed)
+
+    def one_request(rid):
+        sparse = dlrm_drifting_batch(traces, 1, mh)[0]
+        return {"dense": rng.standard_normal(cfg.n_dense).astype(np.float32),
+                "sparse": sparse}
+
+    mb = MicroBatcher(args.batch, one_request(-1), observer=observe)
+    verify: dict = {}
+    state = {"warm_compiles": None}
+
+    def check_swap(event) -> None:
+        """First-swap invariant: the swapped-in state is bit-identical to a
+        from-scratch rebuild of the whole cache path at the same plan."""
+        rows = unpacked_rows(runtime.table)
+        p = runtime.plan
+        fresh = np.zeros_like(np.asarray(runtime.table.packed))
+        fresh[p.bank_of_row.astype(np.int64) * cap + p.slot_of_row] = rows
+        emt_ok = (np.asarray(runtime.table.packed) == fresh).all()
+        fresh_cache = build_cache_table_fixed(rows, runtime.cache_plan,
+                                              dtype=fresh.dtype)
+        ct = runtime.cache_table
+        cache_ok = ((np.asarray(ct.packed)
+                     == np.asarray(fresh_cache.packed)).all()
+                    and (np.asarray(ct.remap_bank)
+                         == np.asarray(fresh_cache.remap_bank)).all()
+                    and (np.asarray(ct.remap_slot)
+                         == np.asarray(fresh_cache.remap_slot)).all())
+        verify.update(arrays_ok=bool(emt_ok and cache_ok),
+                      fresh_cache=fresh_cache, version=runtime.rewriter.version)
+        print(f"  [swap parity] EMT {'OK' if emt_ok else 'MISMATCH'}  "
+              f"cache {'OK' if cache_ok else 'MISMATCH'} "
+              f"(version {verify['version']})")
+
+    def run_batch():
+        reqs, feats = mb.next_batch()
+        rb = runtime.rewrite(union_rect(feats))          # host pipeline, v
+        event = runtime.end_batch()                      # may swap to v+1
+        if event is not None:
+            hits = int((rb.cache_idx >= 0).sum())
+            print(f"  [swap @batch {event.batch}] {event.update.report} "
+                  f"imbalance {event.old_imbalance:.3f} -> "
+                  f"{event.new_imbalance:.3f}  cache v{event.cache_version} "
+                  f"entries {event.cache_entries} "
+                  f"(dropped {event.cache_dropped}, in-flight hits {hits})")
+            if "arrays_ok" not in verify:
+                check_swap(event)
+                verify["feats"] = feats                  # output-parity probe
+                verify["rb"] = runtime.rewrite(union_rect(feats))
+                verify["table"] = runtime.cache_table    # the swapped-in one
+        # the in-flight batch resolves against ITS version's cache table,
+        # even when the swap above just retired it from "current"
+        batch_c = {"dense": feats["dense"],
+                   "cache_idx": jnp.asarray(rb.cache_idx),
+                   "residual_idx": jnp.asarray(rb.residual_idx)}
+        p = {**params, "emb_packed": runtime.table.packed}
+        scores = serve(p, runtime.table.remap_bank, runtime.table.remap_slot,
+                       runtime.cache_table_for(rb.version), batch_c)
+        jax.block_until_ready(scores)
+        if state["warm_compiles"] is None:
+            state["warm_compiles"] = probe.compiles      # post-first-compile
+        mb.complete(reqs)
+
+    for rid in range(args.requests):
+        mb.submit(Request(rid=rid, features=one_request(rid)))
+        if len(mb.queue) >= args.batch:
+            run_batch()
+    while mb.ready():
+        run_batch()
+
+    # -- post-run invariants -------------------------------------------------
+    n_swaps = len(runtime.swaps)
+    executables = serve._cache_size()       # 1 == zero serve-step recompiles
+    other_compiles = probe.compiles - (state["warm_compiles"]
+                                       or probe.compiles)
+    out_ok = True
+    if verify:
+        rb = verify["rb"]
+        batch_c = {"dense": verify["feats"]["dense"],
+                   "cache_idx": jnp.asarray(rb.cache_idx),
+                   "residual_idx": jnp.asarray(rb.residual_idx)}
+        p = {**params, "emb_packed": runtime.table.packed}
+        swapped = serve(p, runtime.table.remap_bank, runtime.table.remap_slot,
+                        verify["table"], batch_c)
+        fresh = serve(p, runtime.table.remap_bank, runtime.table.remap_slot,
+                      verify["fresh_cache"], batch_c)
+        out_ok = bool((np.asarray(swapped) == np.asarray(fresh)).all())
+
+    lat = sorted(mb.latencies)
+    p50 = lat[len(lat) // 2] * 1e3
+    print(f"served {len(lat)} requests  p50={p50:.2f}ms "
+          f"p99={mb.p99() * 1e3:.2f}ms  replans={runtime.replanner.n_replans} "
+          f"swaps={n_swaps}  cache entries={runtime.cache_plan.n_entries}")
+    print(f"compile probe: {executables} serve executable(s) across "
+          f"{n_swaps} swap(s) — "
+          f"{'ZERO serve recompiles' if executables == 1 else 'RECOMPILED'} "
+          f"({other_compiles} host-side compiles outside the serve step, "
+          f"migration collectives included); swap parity: "
+          f"arrays {'OK' if verify.get('arrays_ok') else 'n/a'}, "
+          f"outputs {'OK' if out_ok else 'MISMATCH'}")
+    if args.min_swaps > 0:
+        ok = (n_swaps >= args.min_swaps and executables == 1 and out_ok
+              and verify.get("arrays_ok", False))
+        if not ok:
+            raise SystemExit(
+                f"serve-smoke contract violated: swaps={n_swaps} "
+                f"(need >= {args.min_swaps}), serve executables="
+                f"{executables} (need 1), "
+                f"parity={verify.get('arrays_ok')}/{out_ok}")
 
 
 def _one(spec, cfg, rng, rid):

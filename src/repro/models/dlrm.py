@@ -185,13 +185,24 @@ def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
 def forward_cached(cfg: DLRMConfig, params: dict, statics: dict,
                    cache_table: BankedTable, batch: dict,
                    dist: DistCtx | None = None, *, backend: str = "auto",
-                   bwd_backend: str = "auto") -> Array:
+                   bwd_backend: str = "auto",
+                   remap_bank: Array | None = None,
+                   remap_slot: Array | None = None) -> Array:
     """Cache-aware path (Fig. 7): batch carries rewritten multi-hot bags:
     ``cache_idx`` (B, T, Lc) entries into the partial-sum cache table and
     ``residual_idx`` (B, T, Lr) union-vocab rows. Bag sum = cache partials +
     residual rows — ONE fused stage-2 pass over both tables (one psum), then
-    identical CTR compute."""
+    identical CTR compute.
+
+    ``remap_bank`` / ``remap_slot`` override the EMT remap vectors in
+    ``statics``. The adaptive serve loop passes them (and ``cache_table``) as
+    jit ARGUMENTS so a live plan/cache swap feeds new same-shape arrays to
+    the already-compiled step — zero recompiles (launch/serve.py
+    --adaptive --partition cache_aware)."""
     dense = batch["dense"]
+    if remap_bank is not None:
+        statics = {**statics, "remap_bank": remap_bank,
+                   "remap_slot": remap_slot}
     t = _banked(params, statics)
     emb = banked_cache_residual_bag(t, cache_table, batch["cache_idx"],
                                     batch["residual_idx"], dist,

@@ -44,6 +44,26 @@ def build_recsys_serve_cached(family_mod, cfg, statics, cache_table,
     return serve
 
 
+def build_recsys_serve_cached_adaptive(family_mod, cfg, statics, dist=None,
+                                       backend: str | None = None):
+    """Cache-aware CTR scoring under the ADAPTIVE runtime: everything a live
+    swap replaces — the EMT remap vectors AND the GRACE cache table — enters
+    as an argument of the returned ``serve(params, remap_bank, remap_slot,
+    cache_table, batch)``, never as a closure constant. Table shapes are
+    pinned (fixed ``rows_per_bank`` on the EMT, fixed ``cache_rows_per_bank``
+    on the cache side), so one jit compilation serves every plan version:
+    a swap is a pure argument change.
+    """
+    kw = {} if backend is None else {"backend": backend}
+
+    def serve(params, remap_bank, remap_slot, cache_table, batch):
+        logits = family_mod.forward_cached(
+            cfg, params, statics, cache_table, batch, dist,
+            remap_bank=remap_bank, remap_slot=remap_slot, **kw)
+        return jax.nn.sigmoid(logits)
+    return serve
+
+
 def build_retrieval_serve(family_mod, cfg, statics, dist=None, top_k: int = 128):
     """1 query x N candidates -> (top-k scores, top-k ids)."""
     def serve(params, batch):

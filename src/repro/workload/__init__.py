@@ -11,17 +11,23 @@ from repro.workload.telemetry import (CountMinSketch, DriftDetector,
 from repro.workload.trace import (DriftConfig, DriftingZipfTrace,
                                   dlrm_drifting_batch, read_criteo_tsv)
 from repro.workload.replanner import PlanUpdate, ReplanConfig, Replanner
+from repro.core.cache_runtime import (FixedCachePlan, RewrittenBatch,
+                                      VersionedCacheRewriter)
 from repro.workload.migrate import (migrate_packed_leaves,
                                     migrate_rowwise_state, migrate_table,
                                     permute_packed_rows)
-from repro.workload.runtime import AdaptiveEmbeddingRuntime, SwapEvent
+from repro.workload.runtime import (AdaptiveEmbeddingRuntime, SwapEvent,
+                                    unpacked_rows)
+from repro.workload.trace import write_criteo_tsv
 
 __all__ = [
     "AdaptiveEmbeddingRuntime", "CountMinSketch", "DriftConfig",
-    "DriftDetector", "DriftReport", "DriftingZipfTrace", "PlanUpdate",
-    "ReplanConfig", "Replanner", "SwapEvent", "TableTelemetry", "TopKCounter",
+    "DriftDetector", "DriftReport", "DriftingZipfTrace", "FixedCachePlan",
+    "PlanUpdate",
+    "ReplanConfig", "Replanner", "RewrittenBatch", "SwapEvent",
+    "TableTelemetry", "TopKCounter", "VersionedCacheRewriter",
     "dlrm_drifting_batch", "migrate_packed_leaves", "migrate_rowwise_state",
     "migrate_table",
     "permute_packed_rows", "read_criteo_tsv", "rows_from_sparse",
-    "topk_jaccard", "weighted_l1",
+    "topk_jaccard", "unpacked_rows", "weighted_l1", "write_criteo_tsv",
 ]

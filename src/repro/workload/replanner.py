@@ -25,6 +25,8 @@ from collections import deque
 
 import numpy as np
 
+from repro.core.cache_runtime import (FixedCachePlan, cap_cache_plan,
+                                      entry_banks)
 from repro.core.grace import CachePlan, mine_cooccurrence
 from repro.core.partitioning import (PartitionPlan, cache_aware_partition,
                                      non_uniform_partition)
@@ -41,11 +43,27 @@ class ReplanConfig:
     min_jaccard: float = 0.5
     max_weighted_l1: float = 0.5
     min_observations: int = 2000
+    # past this vocab the drift check runs on the top-K UNION instead of
+    # materializing a (vocab,) estimate per check (telemetry.DriftDetector)
+    drift_sparse_above: int = 10_000_000
+    # telemetry exponential window (TableTelemetry): < 1.0 multiplies all
+    # counters by ``telemetry_decay`` every ``telemetry_decay_every`` observed
+    # ids. Without it the freq estimate is CUMULATIVE since process start, so
+    # a long-lived server's detector goes blind to late drift (the reference
+    # rebases onto an average the new regime barely moves) and replans keep
+    # re-installing history's plan. Serving loops should set it.
+    telemetry_decay: float = 1.0
+    telemetry_decay_every: int = 100_000
     # cache-aware only: GRACE re-mining window + knobs
     mine_window: int = 512                 # recent bags kept for re-mining
     mine_top_items: int = 2048
     mine_max_groups: int = 256
     mine_min_support: int = 3
+    # cache-aware serving: fixed per-bank cache-entry budget. When set, every
+    # PlanUpdate carries ``cache_fixed`` — the re-mined plan padded/truncated
+    # to n_banks * cache_rows_per_bank entry positions, so the swapped-in
+    # cache table always has the shape the serve jit was compiled for.
+    cache_rows_per_bank: int | None = None
 
     @classmethod
     def for_vocab(cls, vocab: int, n_banks: int, **overrides) -> "ReplanConfig":
@@ -66,6 +84,9 @@ class PlanUpdate:
     freq: np.ndarray                       # frequencies the plan was built on
     report: DriftReport
     cache_plan: CachePlan | None = None    # cache-aware: remined groups
+    # remined plan at the FIXED serving capacity (cache_rows_per_bank set):
+    # what the runtime actually swaps into the rewriter + cache table
+    cache_fixed: FixedCachePlan | None = None
 
 
 class Replanner:
@@ -77,13 +98,16 @@ class Replanner:
                  telemetry: TableTelemetry | None = None):
         self.cfg = cfg
         self.vocab = vocab
-        self.telemetry = telemetry or TableTelemetry(vocab)
+        self.telemetry = telemetry or TableTelemetry(
+            vocab, decay=cfg.telemetry_decay,
+            decay_every=cfg.telemetry_decay_every)
         if init_freq is None:
             init_freq = np.ones(vocab, dtype=np.float64)
         self.detector = DriftDetector(
             init_freq, k=cfg.topk, min_jaccard=cfg.min_jaccard,
             max_weighted_l1=cfg.max_weighted_l1,
-            min_observations=cfg.min_observations)
+            min_observations=cfg.min_observations,
+            sparse_above=cfg.drift_sparse_above)
         self._recent_bags: deque[np.ndarray] = deque(maxlen=cfg.mine_window)
         self._batches = 0
         self.n_replans = 0
@@ -131,8 +155,15 @@ class Replanner:
             report = self.detector.check(self.telemetry)
         self.detector.rebase(freq)
         self.n_replans += 1
+        cache_fixed = None
+        if cache_plan is not None and self.cfg.cache_rows_per_bank is not None:
+            cache_fixed = cap_cache_plan(
+                cache_plan,
+                entry_banks(cache_plan, plan.bank_of_row,
+                            plan.cache_bank_of_entry),
+                self.cfg.n_banks, self.cfg.cache_rows_per_bank)
         return PlanUpdate(plan=plan, freq=freq, report=report,
-                          cache_plan=cache_plan)
+                          cache_plan=cache_plan, cache_fixed=cache_fixed)
 
     def end_batch(self) -> PlanUpdate | None:
         """Advance the batch clock; on cadence, drift-check and (only if

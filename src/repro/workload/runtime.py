@@ -13,6 +13,17 @@ all three references at once. Shapes never change — the table keeps its
 initial ``rows_per_bank`` capacity across plans — so a swap costs zero
 recompiles.
 
+With ``cache_rows_per_bank`` set, the GRACE cache side swaps under the same
+contract: a cache-aware replan carries its re-mined plan at the FIXED entry
+capacity (``PlanUpdate.cache_fixed``), the runtime re-sums the surviving
+entries from the migrated table's CURRENT row values into a fixed-shape
+banked cache table, and publishes (rewrite plan, cache table) atomically
+through a ``VersionedCacheRewriter`` — the serve loop rewrites each batch
+against the current plan and resolves it against the table version it was
+rewritten for, so batches in flight across a swap never mix entry numberings.
+The swapped state is bit-identical to tearing the cache path down and
+rebuilding it from scratch at the same plan (tests/test_workload.py).
+
 For training, ``migrate_aux`` applies the same row permutation to any
 packed-row-aligned extra (the row-wise Adagrad accumulator), keeping the
 optimizer's per-row history attached to its row through a migration.
@@ -25,10 +36,22 @@ from typing import Callable
 import numpy as np
 
 from repro.core.embedding import BankedTable, DistCtx, pack_table
-from repro.core.cache_runtime import build_cache_table
+from repro.core.cache_runtime import (FixedCachePlan, RewrittenBatch,
+                                      VersionedCacheRewriter,
+                                      build_cache_table,
+                                      build_cache_table_fixed, cap_cache_plan,
+                                      empty_cache_plan, entry_member_union)
 from repro.core.partitioning import PartitionPlan
 from repro.workload.migrate import migrate_rowwise_state, migrate_table
 from repro.workload.replanner import PlanUpdate, ReplanConfig, Replanner
+
+
+def unpacked_rows(t: BankedTable) -> np.ndarray:
+    """(vocab, dim) row values in union-vocab order, gathered host-side from
+    the packed layout (the source for cache-entry re-summing)."""
+    flat = (np.asarray(t.remap_bank, np.int64) * t.rows_per_bank
+            + np.asarray(t.remap_slot))
+    return np.asarray(t.packed)[flat]
 
 
 @dataclasses.dataclass
@@ -39,13 +62,19 @@ class SwapEvent:
     update: PlanUpdate
     old_imbalance: float
     new_imbalance: float
+    cache_version: int | None = None    # rewriter version installed (if any)
+    cache_entries: int = 0              # live entries in the swapped table
+    cache_dropped: int = 0              # mined entries truncated to residual
 
 
 class AdaptiveEmbeddingRuntime:
     def __init__(self, table: BankedTable, plan: PartitionPlan,
                  cfg: ReplanConfig, *, dist: DistCtx | None = None,
                  init_freq: np.ndarray | None = None,
-                 on_swap: Callable[[SwapEvent], None] | None = None):
+                 on_swap: Callable[[SwapEvent], None] | None = None,
+                 max_cache_per_bag: int = 4,
+                 max_residual_per_bag: int = 16,
+                 cache_keep: int = 2):
         if cfg.capacity_rows is not None \
                 and cfg.capacity_rows != table.rows_per_bank:
             raise ValueError(
@@ -58,6 +87,36 @@ class AdaptiveEmbeddingRuntime:
         self.replanner = Replanner(cfg, table.vocab, init_freq=init_freq)
         self.swaps: list[SwapEvent] = []
         self._batch = 0
+        # cache-aware serving: a versioned rewriter starts at version 0 with
+        # an EMPTY plan (all-residual) at the fixed capacity, so the serve
+        # step compiles once against the final shapes before any swap
+        self.rewriter: VersionedCacheRewriter | None = None
+        if cfg.cache_rows_per_bank is not None:
+            self.rewriter = VersionedCacheRewriter(
+                max_cache_per_bag=max_cache_per_bag,
+                max_residual_per_bag=max_residual_per_bag, keep=cache_keep)
+            self._install_cache(self._empty_cache_fixed())
+
+    def _empty_cache_fixed(self) -> FixedCachePlan:
+        cfg = self.replanner.cfg
+        empty = empty_cache_plan()
+        return cap_cache_plan(empty, np.zeros(0, np.int32), cfg.n_banks,
+                              cfg.cache_rows_per_bank)
+
+    def _install_cache(self, fcp: FixedCachePlan) -> int:
+        # re-sum from ONLY the entry-member rows (a device gather of a few
+        # hundred rows) — never the (vocab, dim) unpack, which at full scale
+        # would be a multi-GB host copy between micro-batches
+        import jax.numpy as jnp
+        t = self.table
+        members = entry_member_union(fcp)
+        flat = (self.plan.bank_of_row.astype(np.int64)[members]
+                * t.rows_per_bank
+                + self.plan.slot_of_row[members])
+        rows = np.asarray(jnp.take(t.packed, jnp.asarray(flat), axis=0))
+        table = build_cache_table_fixed(rows, fcp, dtype=rows.dtype,
+                                        row_ids=members)
+        return self.rewriter.install(fcp, table)
 
     # -- per-batch hooks ----------------------------------------------------
 
@@ -90,10 +149,43 @@ class AdaptiveEmbeddingRuntime:
         # micro-batch picks up the new ones
         self.table = new_table
         self.plan = update.plan
+        if self.rewriter is not None:
+            # cache lane of the same swap: re-sum the surviving entries from
+            # the migrated table's row values and publish (rewrite plan,
+            # cache table) as one new version. Non-cache-aware replans (or a
+            # mined plan that fit nothing) install the empty plan — stale
+            # entry sums must never outlive the plan they were mined under.
+            fcp = update.cache_fixed if update.cache_fixed is not None \
+                else self._empty_cache_fixed()
+            event.cache_version = self._install_cache(fcp)
+            event.cache_entries = fcp.n_entries
+            event.cache_dropped = fcp.n_dropped
         self.swaps.append(event)
         if self.on_swap is not None:
             self.on_swap(event)
         return event
+
+    # -- cache-aware serving hooks (rewriter passthroughs) ------------------
+
+    def rewrite(self, union_idx: np.ndarray) -> RewrittenBatch:
+        """Host pipeline stage: rewrite a (..., L) union-vocab id batch
+        against the CURRENT cache plan; the result is version-tagged."""
+        if self.rewriter is None:
+            raise ValueError("cache side disabled: set "
+                             "ReplanConfig.cache_rows_per_bank")
+        return self.rewriter.rewrite_rect(union_idx)
+
+    def cache_table_for(self, version: int) -> BankedTable:
+        """The cache table a version-tagged batch must be served against."""
+        return self.rewriter.table_for(version)
+
+    @property
+    def cache_table(self) -> BankedTable:
+        return self.rewriter.current[1]
+
+    @property
+    def cache_plan(self) -> FixedCachePlan:
+        return self.rewriter.current[0]
 
     def migrate_aux(self, arr, update_or_plan) -> "np.ndarray":
         """Permute a packed-row-aligned array (optimizer state) to match a
@@ -111,15 +203,10 @@ class AdaptiveEmbeddingRuntime:
         the banks Algorithm 1 chose)."""
         if update.cache_plan is None:
             return None
-        import jax.numpy as jnp
         # unpack current rows host-side (the cache table is tiny; its source
         # rows are a gather over the members only)
         t = self.table
-        flat = (np.asarray(t.remap_bank, np.int64) * t.rows_per_bank
-                + np.asarray(t.remap_slot))
-        packed = np.asarray(t.packed)
-        rows = packed[flat]                                   # (V, D)
-        cache_np = build_cache_table(rows, update.cache_plan)
+        cache_np = build_cache_table(unpacked_rows(t), update.cache_plan)
         plan = update.plan
         if plan.cache_bank_of_entry is None:
             from repro.core.partitioning import uniform_partition

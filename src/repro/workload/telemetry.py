@@ -215,6 +215,20 @@ class TableTelemetry:
     def topk(self, k: int) -> np.ndarray:
         return self.head.topk(k)
 
+    def freq_on(self, ids: np.ndarray) -> np.ndarray:
+        """Estimated frequencies for just ``ids`` — the sparse counterpart of
+        ``freq_vector`` (same estimator: exact head counts override the
+        sketch), costing O(len(ids)) instead of O(vocab)."""
+        ids = np.asarray(ids, np.int64)
+        est = self.sketch.query(ids)
+        if self.head.counts:
+            flat = est.reshape(-1)
+            for j, i in enumerate(ids.reshape(-1).tolist()):
+                cnt = self.head.counts.get(int(i))
+                if cnt is not None:
+                    flat[j] = cnt
+        return est
+
     def freq_vector(self) -> np.ndarray:
         """(vocab,) estimated access frequencies: exact head counts override
         the sketch's (over-)estimate; never-seen rows keep the sketch floor
@@ -263,6 +277,19 @@ class DriftDetector:
 
     ``reference`` is the freq vector the ACTIVE PartitionPlan was built from
     (not last check's snapshot — slow cumulative drift must still trip).
+
+    Past ``sparse_above`` rows the dense path's per-check cost becomes the
+    problem it is meant to prevent (a (vocab,) sketch materialization + an
+    O(vocab log vocab) argsort on the serve host, every ``check_every``
+    batches): the check switches to the TOP-K-UNION form — the live hot set
+    comes straight from the space-saving head (no argsort over the vocab),
+    and the weighted L1 runs on the union of the reference and live top-K,
+    both renormalized over that union. On a fully-observed vocab with
+    ``k >= vocab`` the two paths are numerically identical
+    (tests/test_workload.py pins it); on a power-law trace the union carries
+    almost all the mass, so the thresholds keep their meaning. Replans
+    themselves still materialize (vocab,) — they are drift-gated and rare,
+    the checks are the steady-state cost.
     """
 
     reference: np.ndarray
@@ -270,6 +297,7 @@ class DriftDetector:
     min_jaccard: float = 0.5
     max_weighted_l1: float = 0.5
     min_observations: int = 1000
+    sparse_above: int = 10_000_000
 
     def __post_init__(self):
         self.reference = np.asarray(self.reference, np.float64)
@@ -285,12 +313,27 @@ class DriftDetector:
         self._ref_topk = self._topk_of(self.reference)
 
     def check(self, telemetry: TableTelemetry) -> DriftReport:
-        cur = telemetry.freq_vector()
-        jac = topk_jaccard(self._ref_topk, self._topk_of(cur))
-        wl1 = weighted_l1(self.reference, cur)
+        if telemetry.vocab > self.sparse_above:
+            jac, wl1 = self._check_sparse(telemetry)
+        else:
+            cur = telemetry.freq_vector()
+            jac = topk_jaccard(self._ref_topk, self._topk_of(cur))
+            wl1 = weighted_l1(self.reference, cur)
         enough = telemetry.n_observed >= self.min_observations
         drifted = enough and (jac < self.min_jaccard
                               or wl1 > self.max_weighted_l1)
         return DriftReport(topk_jaccard=jac, weighted_l1=wl1,
                            drifted=bool(drifted),
                            n_observed=telemetry.n_observed)
+
+    def _check_sparse(self, telemetry: TableTelemetry) -> tuple[float, float]:
+        # the head counter can hold out-of-range ids (observe() filters only
+        # negatives) — drop them like freq_vector's keep-guard does, or one
+        # corrupt log row would crash every later check via reference[union]
+        vocab = self.reference.shape[0]
+        cur_topk = telemetry.topk(self.k)
+        cur_topk = cur_topk[cur_topk < vocab]
+        jac = topk_jaccard(self._ref_topk, cur_topk)
+        union = np.union1d(self._ref_topk, cur_topk)
+        wl1 = weighted_l1(self.reference[union], telemetry.freq_on(union))
+        return jac, wl1

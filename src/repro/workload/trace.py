@@ -197,6 +197,32 @@ def read_criteo_tsv(path: str, *, n_dense: int = 13, n_sparse: int = 26,
     }
 
 
+def write_criteo_tsv(path: str, n_rows: int, *, n_fields: int = 26,
+                     vocab_per_field: int = 1000, n_dense: int = 13,
+                     drift: DriftConfig | None = None, seed: int = 0) -> None:
+    """Synthesize a DRIFTING trace in Criteo TSV format (label \\t dense*13 \\t
+    hex-categorical*26) — the fixture that lets the real-trace replay path
+    (``read_criteo_tsv`` -> ``criteo_row_stream``) run in CI without shipping
+    production logs. Field f draws from its own ``DriftingZipfTrace`` (shared
+    drift schedule, per-field seed), so the replayed stream exhibits the same
+    hot-set rotation the synthetic benchmarks use. ``n_fields`` < 26 leaves
+    the remaining categorical columns empty (-1 after parsing), matching real
+    Criteo's missing fields.
+    """
+    if drift is None:
+        drift = DriftConfig(n_items=vocab_per_field, zipf_a=1.1, avg_bag=1.0)
+    drift = dataclasses.replace(drift, n_items=vocab_per_field, avg_bag=1.0)
+    traces = [DriftingZipfTrace(drift, seed=seed + f) for f in range(n_fields)]
+    rng = np.random.default_rng((seed, 0xC21E0))
+    with open(path, "w") as fh:
+        for i in range(n_rows):
+            label = int(rng.random() < 0.25)
+            dense = [f"{x:.3f}" for x in rng.standard_normal(n_dense)]
+            cats = [f"{int(tr.bag(i)[0]):x}" for tr in traces]
+            cats += [""] * (26 - n_fields)
+            fh.write("\t".join([str(label), *dense, *cats]) + "\n")
+
+
 def criteo_row_stream(table: dict, field_offsets: np.ndarray):
     """Yield per-example union-vocab row-id bags from a read_criteo_tsv dict —
     the telemetry/replanner feed for real-trace replay."""

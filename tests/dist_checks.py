@@ -272,6 +272,75 @@ def check_migration_sharded():
           (np.asarray(t_same.packed) == np.asarray(t_a.packed)).all())
 
 
+def check_cache_swap_sharded():
+    """Live cache-path swap ON THE MESH: shard_map-migrated EMT + re-summed
+    fixed-capacity GRACE table serve bit-identically (via the fused
+    cache+residual lookup with its psum combine) to a from-scratch
+    single-device rebuild at the same plan — the serve-side contract of
+    launch/serve.py --adaptive --partition cache_aware."""
+    import dataclasses as dc
+    from repro.core.cache_runtime import (build_cache_table_fixed,
+                                          cap_cache_plan, entry_banks)
+    from repro.core.embedding import banked_cache_residual_bag
+    from repro.core.grace import mine_cooccurrence
+    from repro.workload import migrate_table, unpacked_rows
+    from repro.workload.migrate import permute_packed_rows
+
+    rng = np.random.default_rng(29)
+    V, D, banks, cap, crpb = 96, 8, 2, (96 // 2) + 12, 8
+    table = rng.standard_normal((V, D)).astype(np.float32)
+    plan_a = non_uniform_partition(rng.random(V) + 0.1, banks,
+                                   capacity_rows=cap)
+    plan_b = non_uniform_partition(np.roll(rng.random(V) + 0.1, 31), banks,
+                                   capacity_rows=cap)
+    t_a = pack_table(table, plan_a)
+    t_a = dc.replace(
+        t_a,
+        packed=permute_packed_rows(
+            jnp.asarray(table), np.arange(V, dtype=np.int32),
+            (plan_a.bank_of_row.astype(np.int64) * cap
+             + plan_a.slot_of_row).astype(np.int32), banks * cap),
+        rows_per_bank=cap)
+    mesh = mesh42()
+    dist = DistCtx(mesh=mesh, dp_axes=("data",))
+
+    # the swap, sharded: migrate the EMT on the mesh, re-sum the cache side
+    t_mig = migrate_table(t_a, plan_b, dist, rows_per_bank=cap)
+    bags = [rng.choice(24, rng.integers(2, 7)) for _ in range(300)]
+    cp = mine_cooccurrence(bags, top_items=48, max_groups=16, min_support=2)
+    fcp = cap_cache_plan(cp, entry_banks(cp, plan_b.bank_of_row, None),
+                         banks, crpb)
+    ct = build_cache_table_fixed(unpacked_rows(t_mig), fcp, dtype=np.float32)
+
+    # from-scratch single-device rebuild at the same plan
+    t_fresh = dc.replace(
+        pack_table(table, plan_b),
+        packed=permute_packed_rows(
+            jnp.asarray(table), np.arange(V, dtype=np.int32),
+            (plan_b.bank_of_row.astype(np.int64) * cap
+             + plan_b.slot_of_row).astype(np.int32), banks * cap),
+        rows_per_bank=cap)
+    ct_fresh = build_cache_table_fixed(table, fcp, dtype=np.float32)
+    check("cache_swap_sharded_tables",
+          (np.asarray(t_mig.packed) == np.asarray(t_fresh.packed)).all()
+          and (np.asarray(ct.packed) == np.asarray(ct_fresh.packed)).all())
+
+    ci = jnp.asarray(rng.integers(-1, fcp.n_entries or 1, (8, 3)), jnp.int32)
+    ri = jnp.asarray(rng.integers(-1, V, (8, 6)), jnp.int32)
+    fused = jax.jit(lambda t, c: banked_cache_residual_bag(
+        t, c, ci, ri, dist, backend="jnp"))
+    got = fused(t_mig, ct)
+    # swapped vs fresh through the SAME sharded serve step: bit-identical
+    # (the tables are; psum order is fixed). vs the single-device reference:
+    # numerically equal (the psum's combine order differs in the last ulp).
+    check("cache_swap_sharded_serve_bitexact",
+          (np.asarray(got) == np.asarray(fused(t_fresh, ct_fresh))).all())
+    want = banked_cache_residual_bag(t_fresh, ct_fresh, ci, ri, None,
+                                     backend="jnp")
+    check("cache_swap_sharded_serve_vs_local",
+          np.allclose(got, want, atol=1e-5))
+
+
 def check_pallas_backward_sharded():
     """The sorted-run Pallas scatter backward INSIDE the shard_map matches
     the XLA scatter fallback and the local jnp gradient, on all three
@@ -371,6 +440,7 @@ if __name__ == "__main__":
     check_dp_compressed_step()
     check_csr_sharded_lookup()
     check_migration_sharded()
+    check_cache_swap_sharded()
     check_pallas_backward_sharded()
     check_lm_gspmd_matches_local()
     if FAILED:

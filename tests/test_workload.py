@@ -6,16 +6,21 @@ import pytest
 jax = pytest.importorskip("jax")
 import jax.numpy as jnp
 
+from repro.core.cache_runtime import (build_cache_table,
+                                      build_cache_table_fixed, cap_cache_plan,
+                                      entry_banks, rewrite_bag)
 from repro.core.embedding import (BankedTable, balanced_csr_shards,
                                   banked_cache_residual_bag,
                                   banked_embedding_bag, pack_table,
                                   shard_csr_batch)
+from repro.core.grace import mine_cooccurrence
 from repro.core.partitioning import non_uniform_partition
 from repro.workload import (AdaptiveEmbeddingRuntime, CountMinSketch,
                             DriftConfig, DriftDetector, DriftingZipfTrace,
                             ReplanConfig, Replanner, TableTelemetry,
                             TopKCounter, migrate_packed_leaves,
-                            migrate_table, read_criteo_tsv)
+                            migrate_table, read_criteo_tsv, unpacked_rows,
+                            write_criteo_tsv)
 from repro.workload.migrate import permute_packed_rows
 
 
@@ -173,6 +178,29 @@ class TestDriftingTrace:
 
 
 class TestCriteoReader:
+    def test_synthesized_drifting_tsv_roundtrip(self, tmp_path):
+        """write_criteo_tsv -> read_criteo_tsv replays cleanly: shapes, the
+        populated/empty field split, determinism in (seed, row index)."""
+        p = tmp_path / "drift.tsv"
+        cfg = DriftConfig(n_items=500, zipf_a=1.2, avg_bag=1.0,
+                          rotate_every=64, rotate_frac=0.3)
+        write_criteo_tsv(str(p), 128, n_fields=5, vocab_per_field=500,
+                         drift=cfg, seed=3)
+        out = read_criteo_tsv(str(p), hash_vocab=500)
+        assert out["sparse"].shape == (128, 26)
+        assert (out["sparse"][:, :5] >= 0).all()
+        assert (out["sparse"][:, 5:] == -1).all()        # unpopulated fields
+        assert ((out["sparse"][:, :5] < 500)).all()
+        p2 = tmp_path / "drift2.tsv"
+        write_criteo_tsv(str(p2), 128, n_fields=5, vocab_per_field=500,
+                         drift=cfg, seed=3)
+        out2 = read_criteo_tsv(str(p2), hash_vocab=500)
+        np.testing.assert_array_equal(out["sparse"], out2["sparse"])
+        # the hot set actually rotates across the file
+        top_a = set(np.unique(out["sparse"][:32, 0]).tolist())
+        top_b = set(np.unique(out["sparse"][96:, 0]).tolist())
+        assert top_a != top_b
+
     def test_roundtrip(self, tmp_path):
         rows = ["1\t" + "\t".join(str(i) for i in range(13)) + "\t"
                 + "\t".join(f"{i:x}" for i in range(26)),
@@ -379,6 +407,256 @@ class TestAdaptiveLoop:
         for e, entry in enumerate(cp.entries):
             want = table[list(entry.members)].sum(axis=0)
             np.testing.assert_allclose(packed[cflat[e]], want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cache-aware serving under the adaptive runtime: fixed-capacity GRACE swaps
+# ---------------------------------------------------------------------------
+
+class TestCacheSwap:
+    V, BANKS, D, CRPB = 600, 4, 8, 16
+
+    def _runtime(self, seed=0, **overrides):
+        V, banks = self.V, self.BANKS
+        cap = V // banks + 40
+        rng = np.random.default_rng(seed)
+        table = rng.standard_normal((V, self.D)).astype(np.float32)
+        plan0 = non_uniform_partition(np.ones(V), banks, capacity_rows=cap)
+        t0 = _capacity_table(table, plan0, cap)
+        kw = dict(partitioner="cache_aware", check_every=2,
+                  mine_min_support=2, min_observations=256,
+                  cache_rows_per_bank=self.CRPB)
+        kw.update(overrides)
+        rcfg = ReplanConfig.for_vocab(V, banks, capacity_rows=cap, **kw)
+        rt = AdaptiveEmbeddingRuntime(t0, plan0, rcfg, init_freq=np.ones(V),
+                                      max_cache_per_bag=4,
+                                      max_residual_per_bag=12)
+        return rt, table
+
+    def _drive_to_swap(self, rt, seed=2):
+        tr = DriftingZipfTrace(
+            DriftConfig(n_items=self.V, zipf_a=1.3, avg_bag=8,
+                        rotate_every=60, rotate_frac=0.4), seed=seed)
+        event = None
+        for _ in range(30):
+            rt.observe_bags(tr.bags(16))
+            event = rt.end_batch() or event
+        assert event is not None, "drift never tripped"
+        return event, tr
+
+    def test_swap_bit_identical_to_fresh_build(self):
+        """Acceptance bar: the swapped-in cache path (migrated EMT + re-summed
+        fixed-capacity cache table) is fp32-EXACT against tearing everything
+        down and rebuilding from scratch at the same plan — arrays AND the
+        served output of the fused lookup."""
+        rt, table = self._runtime()
+        event, tr = self._drive_to_swap(rt)
+        assert event.cache_version is not None and event.cache_entries > 0
+        # row values survived migration exactly
+        rows = unpacked_rows(rt.table)
+        np.testing.assert_array_equal(rows, table)
+        # fresh EMT pack at the same fixed capacity
+        cap = rt.table.rows_per_bank
+        p = rt.plan
+        fresh_emt = np.zeros_like(np.asarray(rt.table.packed))
+        fresh_emt[p.bank_of_row.astype(np.int64) * cap + p.slot_of_row] = rows
+        np.testing.assert_array_equal(np.asarray(rt.table.packed), fresh_emt)
+        # fresh cache build from the same update
+        fresh_ct = build_cache_table_fixed(rows, event.update.cache_fixed,
+                                           dtype=np.float32)
+        ct = rt.cache_table
+        np.testing.assert_array_equal(np.asarray(ct.packed),
+                                      np.asarray(fresh_ct.packed))
+        np.testing.assert_array_equal(np.asarray(ct.remap_bank),
+                                      np.asarray(fresh_ct.remap_bank))
+        np.testing.assert_array_equal(np.asarray(ct.remap_slot),
+                                      np.asarray(fresh_ct.remap_slot))
+        # end-to-end: serve a rewritten batch through both — bit-equal
+        rb = rt.rewrite(tr.rect(8, 10)[:, None, :])
+        got = banked_cache_residual_bag(
+            rt.table, ct, jnp.asarray(rb.cache_idx),
+            jnp.asarray(rb.residual_idx), None, backend="jnp")
+        t_fresh = _capacity_table(rows, p, cap)
+        want = banked_cache_residual_bag(
+            t_fresh, fresh_ct, jnp.asarray(rb.cache_idx),
+            jnp.asarray(rb.residual_idx), None, backend="jnp")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_inflight_batch_resolves_its_own_version(self):
+        """A batch rewritten just before a swap carries OLD entry numbering;
+        table_for(batch.version) must return the retired table, and serving
+        with it must bit-match serving fully pre-swap."""
+        rt, _ = self._runtime()
+        # install a first mined plan so version 1 has live entries
+        event, tr = self._drive_to_swap(rt)
+        v_old = rt.rewriter.version
+        rb = rt.rewrite(tr.rect(8, 10)[:, None, :])      # in-flight batch
+        assert rb.version == v_old
+        t_old, ct_old = rt.table, rt.cache_table
+        pre = banked_cache_residual_bag(
+            t_old, ct_old, jnp.asarray(rb.cache_idx),
+            jnp.asarray(rb.residual_idx), None, backend="jnp")
+        # force a second swap while rb is in flight
+        rt.observe_bags(tr.bags(64))
+        event2 = rt.apply(rt.replanner.force_replan())
+        assert rt.rewriter.version == v_old + 1
+        assert rt.cache_table is not ct_old
+        # the in-flight batch resolves against ITS version...
+        assert rt.cache_table_for(rb.version) is ct_old
+        post = banked_cache_residual_bag(
+            rt.table, rt.cache_table_for(rb.version),
+            jnp.asarray(rb.cache_idx), jnp.asarray(rb.residual_idx), None,
+            backend="jnp")
+        # ...and the served output is unchanged by the swap (fp32 exact:
+        # migration preserves row values bit-wise)
+        np.testing.assert_array_equal(np.asarray(pre), np.asarray(post))
+        # a batch rewritten AFTER the swap is tagged with the new version
+        rb2 = rt.rewrite(tr.rect(4, 10)[:, None, :])
+        assert rb2.version == v_old + 1
+
+    def test_retired_version_raises(self):
+        rt, _ = self._runtime()
+        event, tr = self._drive_to_swap(rt)
+        rt.observe_bags(tr.bags(64))
+        rt.apply(rt.replanner.force_replan())
+        rt.observe_bags(tr.bags(64))
+        rt.apply(rt.replanner.force_replan())            # retires v, v+1
+        with pytest.raises(KeyError, match="retired"):
+            rt.cache_table_for(0)
+
+    def test_fixed_capacity_pad_truncate_roundtrip(self):
+        """cap_cache_plan at a TIGHT capacity: kept entries keep their exact
+        partial sums at in-range positions, overflow entries leave
+        entry_of_subset (degrading to residual), pad positions are zero and
+        unique — and the packed shape never depends on what was mined."""
+        rng = np.random.default_rng(7)
+        V, banks, crpb = 300, 4, 3                       # tight: 12 entries
+        table = rng.standard_normal((V, 8)).astype(np.float32)
+        bags = [rng.choice(40, rng.integers(2, 8)) for _ in range(400)]
+        cp = mine_cooccurrence(bags, top_items=64, max_groups=32,
+                               min_support=2)
+        assert cp.n_entries > banks * crpb               # mining overflows
+        plan = non_uniform_partition(np.ones(V) + 0.1, banks)
+        fcp = cap_cache_plan(
+            cp, entry_banks(cp, plan.bank_of_row, None), banks, crpb)
+        cap_total = banks * crpb
+        assert fcp.capacity == cap_total
+        assert fcp.n_entries + fcp.n_dropped == cp.n_entries
+        assert fcp.n_entries <= cap_total
+        assert fcp.entry_bank.shape == (cap_total,)
+        # every (bank, slot) position used exactly once, all in range
+        flat = fcp.entry_bank.astype(np.int64) * crpb + fcp.entry_slot
+        assert np.unique(flat).shape[0] == cap_total
+        assert fcp.entry_bank.min() >= 0 and fcp.entry_bank.max() < banks
+        assert fcp.entry_slot.min() >= 0 and fcp.entry_slot.max() < crpb
+        # kept entries: exact sums at their positions; pads: zero
+        ct = build_cache_table_fixed(table, fcp)
+        packed = np.asarray(ct.packed)
+        full = build_cache_table(table, fcp.plan)
+        for e in range(fcp.n_entries):
+            np.testing.assert_array_equal(packed[flat[e]], full[e])
+        for e in range(fcp.n_entries, cap_total):
+            np.testing.assert_array_equal(packed[flat[e]], 0.0)
+        # capped rewrite never emits a dropped entry id
+        kept_ids = set(fcp.plan.entry_of_subset.values())
+        assert all(0 <= i < fcp.n_entries for i in kept_ids)
+        for bag in bags[:50]:
+            c, r = rewrite_bag(bag, fcp.plan)
+            assert all(0 <= eid < fcp.n_entries for eid in c)
+        # a roomier capacity keeps EVERYTHING (pad-only round trip)
+        fcp2 = cap_cache_plan(
+            cp, entry_banks(cp, plan.bank_of_row, None), banks,
+            cp.n_entries)                                # >= one bank's worth
+        assert fcp2.n_dropped == 0
+        assert fcp2.plan.entry_of_subset == cp.entry_of_subset
+
+    def test_residual_overflow_refuses_instead_of_dropping(self):
+        """Bags longer than the residual budget must raise, not silently
+        drop lookups (the budget exists for static shapes, not sampling)."""
+        rt, _ = self._runtime()
+        too_long = np.zeros((2, 1, 13), np.int32)        # budget is 12
+        with pytest.raises(ValueError, match="residual overflow"):
+            rt.rewrite(too_long)
+
+    def test_non_cache_replan_installs_empty_plan(self):
+        """A cache-enabled runtime fed a non-cache-aware update must not
+        serve stale entry sums: the swap installs the empty plan."""
+        rt, _ = self._runtime()
+        event, tr = self._drive_to_swap(rt)
+        assert rt.cache_plan.n_entries > 0
+        # hand-build a plain update (no cache side)
+        rt.observe_bags(tr.bags(32))
+        from repro.workload import PlanUpdate
+        upd = rt.replanner.force_replan()
+        upd = PlanUpdate(plan=upd.plan, freq=upd.freq, report=upd.report)
+        ev = rt.apply(upd)
+        assert ev.cache_entries == 0
+        assert rt.cache_plan.n_entries == 0
+        rb = rt.rewrite(tr.rect(8, 10)[:, None, :])
+        assert (rb.cache_idx == -1).all()                # pure residual
+
+
+# ---------------------------------------------------------------------------
+# drift checks at scale: top-K-union path == dense path on small vocabs
+# ---------------------------------------------------------------------------
+
+class TestSparseDriftCheck:
+    def test_union_path_matches_dense_on_small_vocab(self):
+        """With k >= vocab and every id observed (head exact), the top-K-union
+        check must be NUMERICALLY IDENTICAL to the dense (vocab,) path."""
+        vocab = 300
+        rng = np.random.default_rng(0)
+        p = np.arange(1, vocab + 1, dtype=np.float64) ** -1.1
+        p /= p.sum()
+        t = TableTelemetry(vocab, topk_budget=vocab)
+        t.observe(np.arange(vocab))                      # all ids seen
+        t.observe(rng.choice(vocab, 20_000, p=p))
+        ref = t.freq_vector()
+        t.observe(np.roll(np.arange(vocab), 100)[
+            rng.choice(vocab, 30_000, p=p)])
+        dense = DriftDetector(ref, k=vocab, min_observations=10)
+        sparse = DriftDetector(ref, k=vocab, min_observations=10,
+                               sparse_above=0)           # force union path
+        rd, rs = dense.check(t), sparse.check(t)
+        assert rd.topk_jaccard == rs.topk_jaccard
+        assert rd.weighted_l1 == pytest.approx(rs.weighted_l1, abs=1e-12)
+        assert rd.drifted == rs.drifted
+
+    def test_union_path_trips_on_rotation_small_k(self):
+        vocab = 300
+        rng = np.random.default_rng(1)
+        p = np.arange(1, vocab + 1, dtype=np.float64) ** -1.2
+        p /= p.sum()
+        t = TableTelemetry(vocab, topk_budget=vocab)
+        t.observe(rng.choice(vocab, 20_000, p=p))
+        det = DriftDetector(t.freq_vector(), k=64, min_observations=10,
+                            sparse_above=0)
+        assert not det.check(t).drifted                  # no drift yet
+        t.observe(np.roll(np.arange(vocab), 150)[
+            rng.choice(vocab, 60_000, p=p)])
+        rep = det.check(t)
+        assert rep.drifted and rep.topk_jaccard < 0.5
+
+    def test_union_path_survives_out_of_range_ids(self):
+        """A corrupt log row can land an id >= vocab in the head counter;
+        the union check must drop it (freq_vector's keep-guard) and keep
+        checking, not die with IndexError forever after."""
+        vocab = 100
+        t = TableTelemetry(vocab, topk_budget=64)
+        t.observe(np.arange(vocab))
+        t.observe(np.full(500, vocab + 7))               # corrupt hot id
+        det = DriftDetector(np.ones(vocab), k=32, min_observations=10,
+                            sparse_above=0)
+        rep = det.check(t)                               # must not raise
+        assert 0.0 <= rep.topk_jaccard <= 1.0
+
+    def test_freq_on_matches_freq_vector(self):
+        vocab = 200
+        rng = np.random.default_rng(2)
+        t = TableTelemetry(vocab, topk_budget=32)        # force head eviction
+        t.observe(rng.integers(0, vocab, 5000))
+        ids = rng.integers(0, vocab, 64)
+        np.testing.assert_array_equal(t.freq_on(ids), t.freq_vector()[ids])
 
 
 # ---------------------------------------------------------------------------
