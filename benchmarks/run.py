@@ -20,10 +20,20 @@ def main() -> None:
                     help="CI smoke: derived rows + reduced measured set, "
                          "writing BENCH_embedding.json / BENCH_workload.json "
                          "(the workflow's uploaded artifacts)")
+    ap.add_argument("--stream-bags", type=int, default=None,
+                    help="override the workload scenarios' stream length "
+                         "(all four: non_uniform, cache_aware, "
+                         "criteo_replay, tiered). An explicit value WINS "
+                         "over --smoke's reduced default, same precedence "
+                         "as bench_workload's own CLI")
     args = ap.parse_args()
     if args.smoke and args.skip_measured:
         ap.error("--smoke and --skip-measured conflict: smoke EXISTS to "
                  "produce the measured BENCH_*.json artifacts")
+    if args.stream_bags is not None and not args.smoke:
+        ap.error("--stream-bags modifies the smoke artifact run: pass it "
+                 "with --smoke (the full measured set uses the scenarios' "
+                 "committed defaults)")
 
     from benchmarks import paper_figs as F
     benches = [
@@ -52,10 +62,18 @@ def main() -> None:
                 yield (f"smoke_embedding_grad_bwd-{r['bwd']}_d{r['dim']}"
                        f"_b{r['batch']}", r["us_per_grad"],
                        f"{r['effective_scatter_gbps']}GB/s")
-            doc_w = bench_workload.write_json(smoke=True)
+            # explicit --stream-bags wins over the smoke default, exactly
+            # like bench_workload's own CLI precedence
+            doc_w = bench_workload.write_json(smoke=True,
+                                              stream_bags=args.stream_bags)
             a = doc_w["adaptive"]
             yield ("smoke_workload_adaptive_p99_model",
                    a["p99_model_latency_us"], f"replans{a['n_replans']}")
+            t = doc_w["tiered"]
+            yield ("smoke_workload_tiered_p99_model",
+                   t["tiered"]["p99_model_latency_us"],
+                   f"bytes_x{t['byte_load_ratio_max_bank']:.2f}"
+                   f"_retiers{t['tiered']['n_retiers']}")
 
         benches.append(smoke_artifacts)
     elif not args.skip_measured:

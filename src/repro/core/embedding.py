@@ -256,6 +256,97 @@ def _pallas_bag_bwd(cfg, res, ct):
 _pallas_bag.defvjp(_pallas_bag_fwd, _pallas_bag_bwd)
 
 
+# ---------------------------------------------------------------------------
+# tiered stage 2: in-kernel dequant forward, straight-through backward
+# ---------------------------------------------------------------------------
+
+def _tiered_partial_scan(payload: Array, scale: Array, tier: Array,
+                         idx: Array, *, remap: Array, bank: Array, my_bank,
+                         off: Array, dim: int, hot_dtype: str) -> Array:
+    """jnp fallback for the tiered stage 2: the ``_bag_partial_scan``
+    dataflow with the quant package's shared fp32 dequant applied to each
+    gathered byte row. Per bag, entries accumulate in the same j-ascending
+    fp32 order as the kernel's walk, so the two backends bit-match."""
+    from repro.quant.quantize import dequant_rows_f32
+    lead, L = idx.shape[:-1], idx.shape[-1]
+    flat = idx.reshape(-1, L)
+    N = flat.shape[0]
+    offs = _field_offsets_per_bag(off, N)
+
+    def body(acc, j):
+        raw = flat[:, j]
+        valid = raw >= 0
+        row = jnp.where(valid, raw + offs, 0)
+        mine = valid & ((my_bank < 0) | (bank[row] == my_bank))
+        src = jnp.where(mine, remap[row], 0)
+        rows = dequant_rows_f32(jnp.take(payload, src, axis=0),
+                                jnp.take(scale, src), jnp.take(tier, src),
+                                dim, hot_dtype)
+        return acc + jnp.where(mine[:, None], rows, 0.0), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((N, dim), jnp.float32),
+                          jnp.arange(L))
+    return acc.reshape(*lead, dim)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _tiered_bag(cfg: tuple, fp_packed: Array, payload: Array,
+                scale_bits: Array, tier: Array, bank: Array, slot: Array,
+                off: Array, my: Array, idx: Array) -> Array:
+    """One bank's tiered stage-2 partial bag sums (fp32).
+
+    cfg = (tile_b, interpret, backend, bwd, dim, hot_dtype). The forward
+    reads ONLY the quantized payload (dequant in-kernel / in-scan);
+    ``fp_packed`` — the fp master table the payload was quantized from — is
+    the STRAIGHT-THROUGH gradient carrier: the backward scatters the bag
+    cotangents onto it exactly like the full-precision lookup's backward,
+    so training through mixed tiers updates fp rows as if the lookup had
+    been full-precision (quantized rows included).
+    """
+    tile_b, interpret, backend, _, dim, hot = cfg
+    if backend == "pallas":
+        from repro.kernels.embedding_bag import tiered_embedding_bag_pallas
+        lead, L = idx.shape[:-1], idx.shape[-1]
+        flat, n = _pad_bags(idx.reshape(-1, L).astype(jnp.int32), tile_b)
+        pay, _ = _pad_lanes(payload, interpret)
+        out = tiered_embedding_bag_pallas(
+            pay, scale_bits, tier, bank, slot, off,
+            my.reshape(1).astype(jnp.int32), flat, dim=dim, hot_dtype=hot,
+            tile_b=tile_b, interpret=interpret)
+        return out[:n].reshape(*lead, dim)
+    scale = jax.lax.bitcast_convert_type(scale_bits, jnp.float32)
+    return _tiered_partial_scan(payload, scale, tier, idx, remap=slot,
+                                bank=bank, my_bank=my, off=off, dim=dim,
+                                hot_dtype=hot)
+
+
+def _tiered_bag_fwd(cfg, fp_packed, payload, scale_bits, tier, bank, slot,
+                    off, my, idx):
+    out = _tiered_bag(cfg, fp_packed, payload, scale_bits, tier, bank, slot,
+                      off, my, idx)
+    return out, (fp_packed, bank, slot, off, my, idx)
+
+
+def _tiered_bag_bwd(cfg, res, ct):
+    tile_b, interpret, _, bwd, _, _ = cfg
+    fp_packed, bank, slot, off, my, idx = res
+    if bwd == "pallas":
+        from repro.kernels.embedding_bag import ct_scatter_bag_pallas
+        L = idx.shape[-1]
+        d_tab = ct_scatter_bag_pallas(
+            ct.reshape(-1, ct.shape[-1]),
+            idx.reshape(-1, L).astype(jnp.int32), bank, slot, off,
+            my.reshape(1).astype(jnp.int32), fp_packed.shape[0],
+            fp_packed.dtype, tile_s=tile_b, interpret=interpret)
+    else:
+        d_tab = _scatter_bag_ct(fp_packed.shape, fp_packed.dtype, bank, slot,
+                                my, idx, ct, off=off)
+    return (d_tab, None, None, None, None, None, None, None, None)
+
+
+_tiered_bag.defvjp(_tiered_bag_fwd, _tiered_bag_bwd)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _pallas_cache_bag(cfg: tuple, emt_packed: Array, cache_packed: Array,
                       e_bank: Array, e_slot: Array, c_bank: Array,
@@ -460,6 +551,66 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
 def banked_gather(t: BankedTable, idx: Array, dist: DistCtx | None) -> Array:
     """Dense per-position lookup (LM token embedding / BERT4Rec item seq)."""
     return banked_embedding_bag(t, idx, dist, reduce_bag=False)
+
+
+def tiered_embedding_bag(fp_packed: Array, tt, idx: Array,
+                         dist: DistCtx | None, *, backend: str = "auto",
+                         bwd_backend: str = "auto",
+                         field_offsets: Array | None = None,
+                         tile_b: int = 8,
+                         interpret: bool | None = None) -> Array:
+    """Stages 1-3 over a TIERED table (repro.quant.TieredTable): the fused
+    lookup path with per-row dequant applied in-kernel (pallas) or in-scan
+    (jnp) — idx (..., L) -> (..., dim) fp32 bag sums.
+
+    ``fp_packed`` is the fp master table the payload was quantized from
+    (same packed layout as ``tt``): the forward never reads its values, but
+    gradients flow straight through onto it (``bwd_backend`` selects the
+    scatter like the full-precision path). Serving can pass the live
+    ``params['emb_packed']`` unchanged. One-hot fields fold in as length-1
+    bags — the dense-gather semantics of ``banked_gather`` at fp32.
+    """
+    backend = _resolve_backend(backend)
+    bwd = _resolve_bwd(bwd_backend, backend)
+    interpret = _default_interpret(interpret)
+    if fp_packed.shape[0] != tt.payload.shape[0]:
+        raise ValueError(
+            f"fp table rows {fp_packed.shape[0]} != tiered payload rows "
+            f"{tt.payload.shape[0]}: the straight-through gradient needs "
+            f"the layout the payload was quantized from")
+    off = jnp.zeros((1,), jnp.int32) if field_offsets is None \
+        else jnp.asarray(field_offsets, jnp.int32)
+    scale_bits = jax.lax.bitcast_convert_type(tt.scale, jnp.int32)
+    cfg = (tile_b, interpret, backend, bwd, tt.dim, tt.hot_dtype)
+
+    if dist is None:
+        return _tiered_bag(cfg, fp_packed, tt.payload, scale_bits, tt.tier,
+                           tt.remap_bank, tt.flat_remap(), off,
+                           jnp.full((), -1, jnp.int32), idx)
+
+    P = jax.sharding.PartitionSpec
+    dp_ok = idx.shape[0] % dist.dp_size() == 0
+    dp = (dist.dp_axes if len(dist.dp_axes) > 1 else dist.dp_axes[0]) \
+        if dp_ok else None
+    bank_ax = dist.bank_axis
+    idx_spec = P(dp, *([None] * (idx.ndim - 1)))
+    out_spec = P(dp, *([None] * (idx.ndim - 1)))
+
+    def fn(fp_local, pay_local, sc_local, tier_local, bank_map, slot_map,
+           off_local, idx_local):
+        my = jax.lax.axis_index(bank_ax)
+        part = _tiered_bag(cfg, fp_local, pay_local, sc_local, tier_local,
+                           bank_map, slot_map, off_local,
+                           my.astype(jnp.int32), idx_local)
+        return jax.lax.psum(part, bank_ax)
+
+    return shard_map(
+        fn, mesh=dist.mesh,
+        in_specs=(P(bank_ax, None), P(bank_ax, None), P(bank_ax),
+                  P(bank_ax), P(), P(), P(), idx_spec),
+        out_specs=out_spec,
+    )(fp_packed, tt.payload, scale_bits, tt.tier, tt.remap_bank,
+      tt.remap_slot, off, idx)
 
 
 def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,

@@ -100,14 +100,28 @@ def non_uniform_partition(
     *,
     capacity_rows: int | None = None,
     batch: int = 1,
+    row_weights: np.ndarray | None = None,
 ) -> PartitionPlan:
     """§3.2: greedy frequency bin-packing with a fixed number of bins.
 
     capacity_rows: per-bank row budget (the 64 MB MRAM constraint / its TPU
     analogue).  batch>1 assigns rows in groups of `batch` (paper's complexity
     note); batch=1 is the exact greedy.
+
+    row_weights: optional per-row cost multiplier — the mixed-precision
+    extension. A tiered table (repro.quant) moves a different byte count per
+    row read, so the load the greedy balances becomes ``freq * row_weights``
+    (bytes moved per bank, Eq. 1's bandwidth term) instead of row reads;
+    ``plan.load_per_bank`` then reports byte-load. Capacity still counts
+    ROWS (the packed arrays stay rectangular at ``rows_per_bank``).
     """
     vocab = freq.shape[0]
+    if row_weights is not None:
+        if row_weights.shape[0] != vocab:
+            raise ValueError(f"row_weights {row_weights.shape} != vocab "
+                             f"{vocab}")
+        freq = np.asarray(freq, np.float64) * np.asarray(row_weights,
+                                                         np.float64)
     if capacity_rows is None:
         capacity_rows = vocab  # uncapped
     if n_banks * capacity_rows < vocab:

@@ -46,11 +46,14 @@ from jax.experimental.pallas import tpu as pltpu
 # double-buffered row-DMA accumulate
 # ---------------------------------------------------------------------------
 
-def _dma_accumulate(acc, table_ref, buf, sem, start, end, src_fn, meta_fn):
+def _dma_accumulate(acc, table_ref, buf, sem, start, end, src_fn, meta_fn,
+                    row_fn=None):
     """Accumulate table rows for entries [start, end) into per-bag sums.
 
     ``src_fn(e)``  -> local table row to fetch (already ownership-clamped)
     ``meta_fn(e)`` -> (bag_local, mine) — accumulator row and validity mask
+    ``row_fn(e, raw)`` -> fp32 accumulator row from the DMA'd raw row
+    (default: a plain fp32 cast; the tiered kernel dequantizes here).
 
     Ping-pong over two (1, D) VMEM slots: the DMA for entry e+1 is started
     before waiting on entry e, so the HBM fetch of the next row overlaps the
@@ -73,7 +76,9 @@ def _dma_accumulate(acc, table_ref, buf, sem, start, end, src_fn, meta_fn):
 
         dma(e, slot).wait()
         bag_local, mine = meta_fn(e)
-        row = jnp.where(mine, buf[slot][0].astype(jnp.float32), 0.0)
+        raw = buf[slot][0]
+        val = raw.astype(jnp.float32) if row_fn is None else row_fn(e, raw)
+        row = jnp.where(mine, val, 0.0)
         return acc.at[bag_local].add(row)
 
     return jax.lax.fori_loop(start, end, body, acc)
@@ -219,6 +224,41 @@ def _fused_cache_bag_kernel(cache_idx_ref, resid_idx_ref, c_len_ref,
                               i * lc + c_len_ref[b0 + i], c_src, c_meta)
         acc = _dma_accumulate(acc, emt_ref, buf, sem, i * lr,
                               i * lr + r_len_ref[b0 + i], r_src, r_meta)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _tiered_bag_kernel(idx_ref, bank_ref, slot_ref, off_ref, my_ref,
+                       tier_ref, scale_ref, payload_ref, out_ref, buf, sem, *,
+                       tile_b: int, bag_len: int, n_fields: int, dim: int,
+                       hot_dtype: str):
+    """Banked bag sums over a TIERED byte payload, dequant in-kernel.
+
+    Identical dataflow to ``_banked_bag_kernel`` except the table is the
+    quant package's ``(R, row_bytes)`` int8 payload: each DMA moves one
+    row's byte slot HBM->VMEM, and the accumulate step dequantizes it to
+    fp32 on the fly using the row's ``tier`` and ``scale`` — both
+    scalar-prefetched alongside the remap stream, so the dequant parameters
+    are known from SMEM before the row's bytes land. The fp32 dequant math
+    is ``quant.quantize.dequant_rows_f32``, the SAME function the jnp
+    fallback runs, which is what makes kernel-vs-fallback parity bit-exact.
+
+    ``scale_ref`` carries fp32 scales BITCAST to int32 (the scalar-prefetch
+    stream stays integer-typed like the remap vectors); the kernel bitcasts
+    each scalar back.
+    """
+    from repro.quant.quantize import dequant_rows_f32
+    b0 = pl.program_id(0) * tile_b
+    src_fn, meta_fn = _entry_fns(idx_ref, bank_ref, slot_ref, off_ref,
+                                 my_ref[0], b0, bag_len, n_fields)
+
+    def row_fn(e, raw):
+        s = src_fn(e)
+        scale = jax.lax.bitcast_convert_type(scale_ref[s], jnp.float32)
+        return dequant_rows_f32(raw, scale, tier_ref[s], dim, hot_dtype)
+
+    acc = jnp.zeros((tile_b, dim), jnp.float32)
+    acc = _dma_accumulate(acc, payload_ref, buf, sem, 0, tile_b * bag_len,
+                          src_fn, meta_fn, row_fn=row_fn)
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
@@ -407,6 +447,41 @@ def banked_embedding_bag_pallas(table: jax.Array, bank: jax.Array,
         out_shape=jax.ShapeDtypeStruct((NB, D), table.dtype),
         interpret=interpret,
     )(idx.reshape(-1), bank, slot, field_offsets, my_bank, table)
+
+
+def tiered_embedding_bag_pallas(payload: jax.Array, scale_bits: jax.Array,
+                                tier: jax.Array, bank: jax.Array,
+                                slot: jax.Array, field_offsets: jax.Array,
+                                my_bank: jax.Array, idx: jax.Array, *,
+                                dim: int, hot_dtype: str = "bf16",
+                                tile_b: int = 8, interpret: bool = False
+                                ) -> jax.Array:
+    """One bank's stage-2 partial bag sums over a TIERED byte payload.
+
+    payload (R, row_bytes) int8 rows in HBM (each DMA slot is sized for the
+    HOT tier's width — quantized rows use a prefix of it, packed int4 a
+    quarter); scale_bits (R,) int32 = fp32 per-row scales bitcast for the
+    scalar-prefetch stream; tier (R,) int32 tier codes; bank/slot (V,) the
+    remap; idx (NB, L) raw per-field ids, -1 padded. -> (NB, dim) fp32.
+    """
+    NB, L = idx.shape
+    assert NB % tile_b == 0, (NB, tile_b)
+    kernel = functools.partial(
+        _tiered_bag_kernel, tile_b=tile_b, bag_len=L,
+        n_fields=field_offsets.shape[0], dim=dim, hot_dtype=hot_dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(NB // tile_b,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((tile_b, dim), lambda b, *_: (b, 0)),
+        scratch_shapes=_scratch(payload.shape[-1], payload.dtype),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((NB, dim), jnp.float32),
+        interpret=interpret,
+    )(idx.reshape(-1), bank, slot, field_offsets, my_bank, tier, scale_bits,
+      payload)
 
 
 def embedding_bag_pallas(table: jax.Array, idx: jax.Array, *,

@@ -83,6 +83,23 @@ def main() -> None:
                          "occurred AND the swap invariants (bit-parity with "
                          "a from-scratch rebuild, zero recompiles) held — "
                          "the CI serve-smoke contract")
+    ap.add_argument("--quant", default="off", choices=("off", "int8", "int4"),
+                    help="tiered-precision embedding storage (repro.quant) "
+                         "on the adaptive serve path: hot head stays bf16, "
+                         "the tail quantizes to int8 (or int8+packed-int4); "
+                         "replans re-tier rows through the same zero-"
+                         "recompile swap (dlrm --adaptive, non_uniform)")
+    ap.add_argument("--quant-byte-budget", type=float, default=None,
+                    help="target average STORED bytes per row (README.md "
+                         "§byte budget); default: int8 tail (--quant int8) "
+                         "or a mostly-int4 mix (--quant int4)")
+    ap.add_argument("--quant-hot-rows", type=int, default=8,
+                    help="hottest rows pinned to the full-precision tier")
+    ap.add_argument("--hysteresis", type=float, default=0.0,
+                    help="skip drifted replans whose candidate plan does "
+                         "not beat the incumbent's projected max-bank share "
+                         "by this relative margin (0 = replan on every "
+                         "drifted check)")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -139,6 +156,9 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
                                 dlrm_drifting_batch, rows_from_sparse)
 
     if args.partition == "cache_aware":
+        assert args.quant == "off", ("--quant rides the non_uniform adaptive "
+                                     "path; the cache+residual tiered "
+                                     "cross-product is a ROADMAP item")
         return _main_adaptive_cached(args, spec, cfg, mod)
 
     banks = args.banks
@@ -149,22 +169,47 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
                                       plan=plan, rows_per_bank=cap)
     offs = np.asarray(statics["field_offsets"])
 
+    quant_on = args.quant != "off"
+    qspec = None
+    if quant_on:
+        from repro.quant import QuantSpec
+        budget = args.quant_byte_budget
+        if budget is None and args.quant == "int4":
+            # mostly-int4 mix: the packed width plus a little int8 headroom
+            budget = cfg.embed_dim // 2 + 2.0
+        qspec = QuantSpec(enable_int4=(args.quant == "int4"),
+                          byte_budget=budget,
+                          min_hot_rows=args.quant_hot_rows)
+    probe = CompileProbe() if quant_on else None
+
     table = BankedTable(packed=params["emb_packed"],
                         remap_bank=statics["remap_bank"],
                         remap_slot=statics["remap_slot"],
                         n_banks=banks, rows_per_bank=cap)
     rcfg = ReplanConfig.for_vocab(V, banks, capacity_rows=cap,
-                                  check_every=args.replan_every)
+                                  check_every=args.replan_every,
+                                  hysteresis=args.hysteresis,
+                                  quant=qspec,
+                                  quant_dim=cfg.embed_dim if quant_on
+                                  else None)
     runtime = AdaptiveEmbeddingRuntime(table, plan, rcfg,
                                        init_freq=np.ones(V))
 
-    # remap vectors enter as ARGUMENTS: a swap feeds new arrays of the same
-    # shape to the same executable — zero recompiles across replans
-    @jax.jit
-    def serve(params, remap_bank, remap_slot, batch):
-        st = {**statics, "remap_bank": remap_bank, "remap_slot": remap_slot}
-        logits = mod.forward(cfg, params, st, batch, backend=args.backend)
-        return jax.nn.sigmoid(logits)
+    # remap vectors (and on --quant the whole TieredTable) enter as
+    # ARGUMENTS: a swap feeds new arrays of the same shape to the same
+    # executable — zero recompiles across replans / re-tiers
+    if quant_on:
+        from repro.serve.serve_step import build_recsys_serve_tiered_adaptive
+        serve_tiered = jax.jit(build_recsys_serve_tiered_adaptive(
+            mod, cfg, statics, backend=args.backend))
+    else:
+        @jax.jit
+        def serve(params, remap_bank, remap_slot, batch):
+            st = {**statics, "remap_bank": remap_bank,
+                  "remap_slot": remap_slot}
+            logits = mod.forward(cfg, params, st, batch,
+                                 backend=args.backend)
+            return jax.nn.sigmoid(logits)
 
     def observe(feats, n_real):
         sp = np.asarray(feats["sparse"])[:n_real]        # (n, F) or (n, F, L)
@@ -185,19 +230,48 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
 
     pad = one_request(-1)
     mb = MicroBatcher(args.batch, pad, observer=observe)
+    verify: dict = {}
+    state = {"warm_compiles": None}
+
+    def check_retier(event) -> None:
+        """First-swap invariant: the incrementally re-tiered table is
+        bit-identical to a from-scratch quantization of the migrated fp
+        table under the same tier map."""
+        from repro.quant import build_tiered_table
+        tt = runtime.tiered
+        fresh = build_tiered_table(runtime.table, tt.tier_of_row(),
+                                   hot_dtype=tt.hot_dtype)
+        ok = ((np.asarray(tt.payload) == np.asarray(fresh.payload)).all()
+              and (np.asarray(tt.scale) == np.asarray(fresh.scale)).all()
+              and (np.asarray(tt.tier) == np.asarray(fresh.tier)).all())
+        verify["tier_ok"] = bool(ok)
+        print(f"  [re-tier parity] {'OK' if ok else 'MISMATCH'} "
+              f"(tier v{event.tier_version})")
 
     def run_batch():
         reqs, feats = mb.next_batch()
         p = {**params, "emb_packed": runtime.table.packed}
-        scores = serve(p, runtime.table.remap_bank, runtime.table.remap_slot,
-                       feats)
+        if quant_on:
+            scores = serve_tiered(p, runtime.tiered, feats)
+        else:
+            scores = serve(p, runtime.table.remap_bank,
+                           runtime.table.remap_slot, feats)
         jax.block_until_ready(scores)
+        if quant_on and state["warm_compiles"] is None:
+            state["warm_compiles"] = probe.compiles
         mb.complete(reqs)
         event = runtime.end_batch()        # drift check -> migrate -> swap
         if event is not None:
-            print(f"  [swap @batch {event.batch}] {event.update.report} "
-                  f"imbalance {event.old_imbalance:.3f} -> "
-                  f"{event.new_imbalance:.3f}")
+            msg = (f"  [swap @batch {event.batch}] {event.update.report} "
+                   f"imbalance {event.old_imbalance:.3f} -> "
+                   f"{event.new_imbalance:.3f}")
+            if event.tier_version is not None:
+                msg += (f"  tiers v{event.tier_version} "
+                        f"+{event.tier_promoted}/-{event.tier_demoted} "
+                        f"(requant {event.tier_requantized})")
+            print(msg)
+            if quant_on and "tier_ok" not in verify:
+                check_retier(event)
 
     for rid in range(args.requests):
         mb.submit(Request(rid=rid, features=one_request(rid)))
@@ -208,8 +282,28 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
 
     lat = sorted(mb.latencies)
     p50 = lat[len(lat) // 2] * 1e3
+    rp = runtime.replanner
     print(f"served {len(lat)} requests  p50={p50:.2f}ms "
-          f"p99={mb.p99() * 1e3:.2f}ms  replans={runtime.replanner.n_replans}")
+          f"p99={mb.p99() * 1e3:.2f}ms  replans={rp.n_replans} "
+          f"skipped={rp.n_skipped_replans}")
+    if quant_on:
+        n_swaps = len(runtime.swaps)
+        executables = serve_tiered._cache_size()
+        other = probe.compiles - (state["warm_compiles"] or probe.compiles)
+        print(f"compile probe: {executables} serve executable(s) across "
+              f"{n_swaps} re-tier swap(s) — "
+              f"{'ZERO serve recompiles' if executables == 1 else 'RECOMPILED'}"
+              f" ({other} host-side compiles outside the serve step); "
+              f"re-tier parity: {verify.get('tier_ok', 'n/a')}")
+        if args.min_swaps > 0:
+            ok = (n_swaps >= args.min_swaps and executables == 1
+                  and verify.get("tier_ok", False))
+            if not ok:
+                raise SystemExit(
+                    f"tiered serve contract violated: swaps={n_swaps} "
+                    f"(need >= {args.min_swaps}), serve executables="
+                    f"{executables} (need 1), "
+                    f"re-tier parity={verify.get('tier_ok')}")
 
 
 def _main_adaptive_cached(args, spec, cfg, mod) -> None:
@@ -247,6 +341,7 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
                                   partitioner="cache_aware",
                                   cache_rows_per_bank=crpb,
                                   mine_min_support=2,
+                                  hysteresis=args.hysteresis,
                                   # exponential window: a long-lived server's
                                   # cumulative estimate goes blind to late
                                   # rotations (bench_workload's p99 spike)
@@ -365,6 +460,7 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
     p50 = lat[len(lat) // 2] * 1e3
     print(f"served {len(lat)} requests  p50={p50:.2f}ms "
           f"p99={mb.p99() * 1e3:.2f}ms  replans={runtime.replanner.n_replans} "
+          f"skipped={runtime.replanner.n_skipped_replans} "
           f"swaps={n_swaps}  cache entries={runtime.cache_plan.n_entries}")
     print(f"compile probe: {executables} serve executable(s) across "
           f"{n_swaps} swap(s) — "

@@ -96,11 +96,32 @@ def main() -> None:
                     help="steps between drift checks (--adaptive)")
     ap.add_argument("--capacity-slack", type=float, default=0.25,
                     help="per-bank row headroom over vocab/banks")
+    ap.add_argument("--partition", default="non_uniform",
+                    choices=("non_uniform", "cache_aware"),
+                    help="adaptive replanner (--adaptive): plain banked "
+                         "(§3.2, remaps re-jitted on migration) or the "
+                         "fused GRACE cache+residual TRAIN path (§3.3): "
+                         "remaps + cache table ride the step as jit "
+                         "ARGUMENTS, so migrations and cache refreshes "
+                         "swap through the VersionedCacheRewriter with "
+                         "ZERO re-jits")
+    ap.add_argument("--cache-entries", type=int, default=128,
+                    help="TOTAL cache-entry capacity across banks "
+                         "(cache_aware; fixed for the life of the run)")
+    ap.add_argument("--cache-refresh-every", type=int, default=25,
+                    help="steps between partial-sum refreshes: trained EMT "
+                         "rows drift away from their cached sums, so the "
+                         "entries are re-summed from CURRENT values and "
+                         "published as a new rewriter version")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
     cfg = spec.config if args.full else spec.reduced
     key = jax.random.key(args.seed)
+
+    if args.adaptive and args.partition == "cache_aware":
+        assert spec.family == "dlrm", "--adaptive drives the banked super-table"
+        return _main_train_cached(args, spec, cfg, key)
 
     statics = None
     replanner = None
@@ -214,6 +235,139 @@ def main() -> None:
     extra = f"; migrations={n_migrations}" if replanner is not None else ""
     print(f"done in {time.time() - t_begin:.1f}s; stragglers={wd.events}"
           + extra)
+
+
+def _main_train_cached(args, spec, cfg, key) -> None:
+    """Cache-aware TRAINING under the adaptive runtime (the PR-4 open item,
+    closed): the fused cache+residual loss takes the EMT remap vectors and
+    the GRACE cache table as step ARGUMENTS, so a drift migration — and the
+    periodic partial-sum refresh that training makes necessary — both swap
+    through the ``VersionedCacheRewriter`` between steps, against ONE jitted
+    executable. The old path rebuilt the cache table and re-jitted the step
+    on every refresh cadence; now a refresh is ``runtime.refresh_cache()``:
+    re-sum the surviving entries from the CURRENT trained row values,
+    publish as version v+1, done. The row-wise Adagrad accumulator still
+    migrates with its rows (``migrate_packed_leaves``) before the runtime
+    adopts the migrated table (``apply_migrated``).
+    """
+    from repro.core.embedding import BankedTable
+    from repro.core.partitioning import non_uniform_partition
+    from repro.workload import (AdaptiveEmbeddingRuntime, ReplanConfig,
+                                migrate_packed_leaves)
+
+    mod = __import__(f"repro.models.{spec.family}", fromlist=["loss_fn"])
+    mh = cfg.multi_hot
+    assert mh >= 2, ("--partition cache_aware needs multi-hot bags "
+                     "(try --arch updlrm-paper); GRACE partial sums fuse "
+                     ">=2 lookups of one bag")
+    banks = args.banks
+    V = cfg.total_vocab
+    cap = int(np.ceil(V / banks) * (1.0 + args.capacity_slack))
+    crpb = max(1, -(-args.cache_entries // banks))
+    plan = non_uniform_partition(np.ones(V), banks, capacity_rows=cap)
+    params, statics = mod.init_params(cfg, key, plan=plan, rows_per_bank=cap)
+    offs = np.asarray(statics["field_offsets"])
+
+    table = BankedTable(packed=params["emb_packed"],
+                        remap_bank=statics["remap_bank"],
+                        remap_slot=statics["remap_slot"],
+                        n_banks=banks, rows_per_bank=cap)
+    rcfg = ReplanConfig.for_vocab(V, banks, capacity_rows=cap,
+                                  check_every=args.replan_every,
+                                  partitioner="cache_aware",
+                                  cache_rows_per_bank=crpb,
+                                  mine_min_support=2,
+                                  telemetry_decay=0.8,
+                                  telemetry_decay_every=4096)
+    runtime = AdaptiveEmbeddingRuntime(
+        table, plan, rcfg, init_freq=np.ones(V),
+        max_cache_per_bag=max(2, mh // 4), max_residual_per_bag=mh)
+
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={args.arch} family={spec.family} params={n_params:,} "
+          f"(cache-aware train, {banks * crpb} entry capacity)")
+
+    kw = {}
+    if args.backend is not None:
+        kw["backend"] = args.backend
+    if args.bwd_backend is not None:
+        kw["bwd_backend"] = args.bwd_backend
+
+    def loss_cached(p, b, **k):
+        batch_c = {"dense": b["dense"], "cache_idx": b["cache_idx"],
+                   "residual_idx": b["residual_idx"]}
+        logits = mod.forward_cached(cfg, p, statics, b["cache_table"],
+                                    batch_c, remap_bank=b["remap_bank"],
+                                    remap_slot=b["remap_slot"], **k)
+        return mod.bce_loss(logits, b["label"])
+
+    opt = default_optimizer(lr=args.lr, emb_lr=args.emb_lr)
+    step_fn = jax.jit(build_train_step(loss_cached, opt,
+                                       compress_grads=args.compress_grads,
+                                       loss_kwargs=kw))
+    state = TrainState.create(params, opt, compress=args.compress_grads)
+
+    batch_fn = make_batch_fn(spec, cfg)
+    wd = StragglerWatchdog()
+    t_begin = time.time()
+    n_migrations = n_refreshes = 0
+    for step in range(args.steps):
+        b = batch_fn(args.batch, args.seed, step)
+        sp = np.asarray(b["sparse"])                       # (B, F, L)
+        union = np.where(sp >= 0, sp + offs[None, :, None], -1)
+        runtime.observe_bags([bag[bag >= 0]
+                              for bag in union.reshape(-1, union.shape[-1])])
+        rb = runtime.rewrite(union)
+        # everything a swap replaces is a step ARGUMENT; the batch resolves
+        # against the cache-table version it was rewritten for
+        batch = {"dense": jnp.asarray(b["dense"]),
+                 "label": jnp.asarray(b["label"]),
+                 "cache_idx": jnp.asarray(rb.cache_idx),
+                 "residual_idx": jnp.asarray(rb.residual_idx),
+                 "remap_bank": runtime.table.remap_bank,
+                 "remap_slot": runtime.table.remap_slot,
+                 "cache_table": runtime.cache_table_for(rb.version)}
+        t0 = time.time()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        wd.observe(step, time.time() - t0)
+        # the trained table: rebind the runtime's view to the new params so
+        # replans/refreshes re-sum from CURRENT values
+        runtime.table = BankedTable(packed=state.params["emb_packed"],
+                                    remap_bank=runtime.table.remap_bank,
+                                    remap_slot=runtime.table.remap_slot,
+                                    n_banks=banks, rows_per_bank=cap)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"({(time.time() - t0) * 1e3:.0f} ms)")
+        update = runtime.replanner.end_batch()
+        if update is not None:
+            # migrate params + row-wise Adagrad state in one pass, then the
+            # runtime adopts the migrated table and swaps the cache lane
+            # versioned — no step re-jit (remaps are arguments)
+            state = migrate_packed_leaves(state, runtime.table, update.plan,
+                                          rows_per_bank=cap)
+            new_table = BankedTable(
+                packed=state.params["emb_packed"],
+                remap_bank=jnp.asarray(update.plan.bank_of_row, jnp.int32),
+                remap_slot=jnp.asarray(update.plan.slot_of_row, jnp.int32),
+                n_banks=banks, rows_per_bank=cap)
+            event = runtime.apply_migrated(update, new_table)
+            n_migrations += 1
+            print(f"  [migrate @step {step}] {update.report} "
+                  f"imbalance -> {update.plan.imbalance():.3f}  "
+                  f"cache v{event.cache_version} "
+                  f"entries {event.cache_entries}")
+        elif (step + 1) % args.cache_refresh_every == 0:
+            version = runtime.refresh_cache()
+            n_refreshes += 1
+            print(f"  [cache refresh @step {step}] re-summed "
+                  f"{runtime.cache_plan.n_entries} entries -> v{version}")
+    executables = step_fn._cache_size()
+    print(f"done in {time.time() - t_begin:.1f}s; stragglers={wd.events}; "
+          f"migrations={n_migrations} refreshes={n_refreshes}; "
+          f"{executables} step executable(s) "
+          f"({'ZERO re-jits' if executables == 1 else 'RE-JITTED'})")
 
 
 def _remaps_path(ckpt_dir: str, step: int) -> str:

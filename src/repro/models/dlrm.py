@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core.embedding import (
     BankedTable, DistCtx, banked_cache_residual_bag, banked_embedding_bag,
-    banked_gather)
+    banked_gather, tiered_embedding_bag)
 from repro.models.common import dense_init, embed_init, shard, dp
 
 Array = jax.Array
@@ -147,7 +147,7 @@ def dot_interaction(z: Array) -> Array:
 
 def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
             dist: DistCtx | None = None, *, backend: str = "auto",
-            bwd_backend: str = "auto") -> Array:
+            bwd_backend: str = "auto", tiered=None) -> Array:
     """batch: dense (B, n_dense) fp; sparse (B, F) int32 (one-hot fields) or
     (B, F, L) multi-hot. Returns logits (B,).
 
@@ -159,11 +159,26 @@ def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
     ``field_offsets`` to ONE fused banked_embedding_bag call — all F fields
     in a single stage-2 pass, and no (B, F, L, D) gathered intermediate on
     either backend.
+
+    ``tiered`` (a repro.quant.TieredTable quantized FROM ``emb_packed``'s
+    layout) reroutes the lookup through the tiered-precision path: values
+    come from the quantized payload (dequant in-kernel), gradients flow
+    straight through onto ``params['emb_packed']``. The adaptive serve loop
+    passes it as a jit ARGUMENT so a live re-tier swap feeds new same-shape
+    arrays to the compiled step — zero recompiles (launch/serve.py --quant).
+    One-hot fields fold into length-1 bags on this path (same semantics as
+    the dense gather).
     """
     dense, sparse = batch["dense"], batch["sparse"]
     B = dense.shape[0]
     t = _banked(params, statics)
-    if sparse.ndim == 2:
+    if tiered is not None:
+        bags = sparse if sparse.ndim == 3 else sparse[..., None]
+        emb = tiered_embedding_bag(                              # (B, F, D)
+            params["emb_packed"], tiered, bags, dist, backend=backend,
+            bwd_backend=bwd_backend,
+            field_offsets=statics["field_offsets"])
+    elif sparse.ndim == 2:
         # one-hot fields: dense gather; per-field ids -> union-vocab rows
         rows = sparse + statics["field_offsets"][None, :]
         rows = jnp.where(sparse >= 0, rows, -1)
@@ -224,9 +239,10 @@ def bce_loss(logits: Array, labels: Array) -> Array:
 
 def loss_fn(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
             dist: DistCtx | None = None, *, backend: str = "auto",
-            bwd_backend: str = "auto") -> Array:
+            bwd_backend: str = "auto", tiered=None) -> Array:
     return bce_loss(forward(cfg, params, statics, batch, dist,
-                            backend=backend, bwd_backend=bwd_backend),
+                            backend=backend, bwd_backend=bwd_backend,
+                            tiered=tiered),
                     batch["label"])
 
 

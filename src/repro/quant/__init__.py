@@ -1,0 +1,23 @@
+"""Tiered-precision embedding storage (README.md §byte budget).
+
+The byte-bandwidth counterpart of the §3 partitioners: telemetry decides
+which rows deserve full precision (the hot head) and which can shrink to
+int8 / packed int4 (the cold tail), `TieredTable` stores the mix in
+fixed-shape banked arrays, and the fused lookup kernels dequantize each
+DMA'd row in-kernel (kernels/README.md §dequant).
+"""
+from repro.quant.quantize import (HOT_DTYPES, QuantSpec, TIER_HOT, TIER_INT4,
+                                  TIER_INT8, bytes_of_tier, dequant_rows_f32,
+                                  quantize_rows, row_bytes, tier_nbytes)
+from repro.quant.tiers import TierAssignment, assign_tiers
+from repro.quant.tiered import (PAD_TIER, TieredTable, build_tiered_table,
+                                modeled_bank_byte_load, packed_tier_map,
+                                retier_tiered)
+
+__all__ = [
+    "HOT_DTYPES", "PAD_TIER", "QuantSpec", "TIER_HOT", "TIER_INT4",
+    "TIER_INT8", "TierAssignment", "TieredTable", "assign_tiers",
+    "build_tiered_table", "bytes_of_tier", "dequant_rows_f32",
+    "modeled_bank_byte_load", "packed_tier_map", "quantize_rows",
+    "retier_tiered", "row_bytes", "tier_nbytes",
+]

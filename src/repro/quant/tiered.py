@@ -1,0 +1,190 @@
+"""TieredTable: a mixed-precision banked embedding table.
+
+Same layout contract as ``core.embedding.BankedTable`` — packed rows at
+``bank * rows_per_bank + slot``, replicated row->(bank, slot) remap vectors,
+fixed per-bank capacity — but the row storage is the tiered byte payload of
+``quant/quantize.py`` plus per-row ``scale`` and ``tier`` vectors. Every
+array shape depends only on (capacity, dim, hot dtype), NEVER on the tier
+mix, so a live re-tier swap feeds same-shape arrays to the compiled serve
+step: zero recompiles, the same contract the EMT and cache lanes obey.
+
+Two builders:
+
+  ``build_tiered_table``  — from scratch: quantize every packed row of an fp
+      BankedTable by its assigned tier (host-side; runs at startup).
+  ``retier_tiered``       — the swap-path incremental: permute the previous
+      payload through the migration's row permutation (stay rows keep their
+      bytes — the fp values they were quantized from migrated bit-exactly),
+      then re-quantize ONLY the rows whose tier changed (hot rows promoted
+      on drift read their fp bytes, demoted rows re-quantize from the
+      CURRENT fp values) plus newly-padded positions. Bit-identical to a
+      from-scratch build at the same (table, tiers) — tests/test_quant.py
+      pins it — because row-wise quantization is deterministic per (fp row,
+      tier).
+
+This module intentionally imports nothing from ``repro.core`` (core's
+embedding layer imports the quant package for the tiered lookup); the fp
+source table is duck-typed on the BankedTable fields it reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.quantize import (TIER_INT8, quantize_rows, row_bytes,
+                                  tier_nbytes)
+
+Array = jax.Array
+
+PAD_TIER = TIER_INT8      # unpopulated slots: int8 zeros, scale 1 (see below)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TieredTable:
+    """Pytree: tiered byte payload + per-row scale/tier + remap vectors."""
+
+    payload: Array      # (n_banks * rows_per_bank, row_bytes) int8
+    scale: Array        # (n_banks * rows_per_bank,) float32
+    tier: Array         # (n_banks * rows_per_bank,) int32
+    remap_bank: Array   # (vocab,) int32, replicated
+    remap_slot: Array   # (vocab,) int32, replicated
+    n_banks: int = dataclasses.field(metadata=dict(static=True))
+    rows_per_bank: int = dataclasses.field(metadata=dict(static=True))
+    dim: int = dataclasses.field(metadata=dict(static=True))
+    hot_dtype: str = dataclasses.field(default="bf16",
+                                       metadata=dict(static=True))
+
+    @property
+    def vocab(self) -> int:
+        return self.remap_bank.shape[0]
+
+    @property
+    def row_bytes(self) -> int:
+        return self.payload.shape[-1]
+
+    def flat_remap(self) -> Array:
+        return (self.remap_bank * self.rows_per_bank
+                + self.remap_slot).astype(jnp.int32)
+
+    def tier_of_row(self) -> np.ndarray:
+        """(vocab,) tier per union-vocab row (the packed map pulled back
+        through the remap) — what a from-scratch rebuild needs."""
+        flat = (np.asarray(self.remap_bank, np.int64) * self.rows_per_bank
+                + np.asarray(self.remap_slot))
+        return np.asarray(self.tier)[flat]
+
+
+def packed_tier_map(table, tier_of_row: np.ndarray) -> np.ndarray:
+    """(capacity,) tier per packed position; pad slots get ``PAD_TIER``."""
+    R = table.n_banks * table.rows_per_bank
+    flat = (np.asarray(table.remap_bank, np.int64) * table.rows_per_bank
+            + np.asarray(table.remap_slot))
+    tier = np.full(R, PAD_TIER, np.int32)
+    tier[flat] = np.asarray(tier_of_row, np.int32)
+    return tier
+
+
+def build_tiered_table(table, tier_of_row: np.ndarray, *,
+                       hot_dtype: str = "bf16") -> TieredTable:
+    """Quantize an fp BankedTable's packed rows into a TieredTable.
+
+    Pad slots (all-zero rows) quantize to zero payload with scale 1 under
+    ``PAD_TIER`` — deterministic, so the incremental retier can reproduce
+    them bit-for-bit.
+    """
+    tier = packed_tier_map(table, tier_of_row)
+    rows = np.asarray(table.packed, np.float32)
+    payload, scale = quantize_rows(rows, tier, hot_dtype=hot_dtype)
+    return TieredTable(
+        payload=jnp.asarray(payload),
+        scale=jnp.asarray(scale),
+        tier=jnp.asarray(tier),
+        remap_bank=table.remap_bank,
+        remap_slot=table.remap_slot,
+        n_banks=table.n_banks,
+        rows_per_bank=table.rows_per_bank,
+        dim=int(table.packed.shape[-1]),
+        hot_dtype=hot_dtype,
+    )
+
+
+def _permute_rows(arr: np.ndarray, old_flat: np.ndarray,
+                  new_flat: np.ndarray, new_len: int) -> np.ndarray:
+    out = np.zeros((new_len,) + arr.shape[1:], arr.dtype)
+    out[new_flat] = arr[old_flat]
+    return out
+
+
+def retier_tiered(prev: TieredTable, table, tier_of_row: np.ndarray
+                  ) -> tuple[TieredTable, dict]:
+    """Incremental rebuild for the swap path: ``table`` is the MIGRATED fp
+    BankedTable (same row values, new layout), ``tier_of_row`` the fresh
+    assignment. Only rows whose tier changed — promotions, demotions — and
+    newly-padded slots are re-quantized (a device gather of just those
+    rows); stay-tier rows carry their bytes through the row permutation.
+
+    Returns ``(tiered, stats)`` with promoted/demoted/requantized counts.
+    Bit-identical to ``build_tiered_table(table, tier_of_row)``.
+    """
+    old_flat = (np.asarray(prev.remap_bank, np.int64) * prev.rows_per_bank
+                + np.asarray(prev.remap_slot))
+    new_flat = (np.asarray(table.remap_bank, np.int64) * table.rows_per_bank
+                + np.asarray(table.remap_slot))
+    R = table.n_banks * table.rows_per_bank
+    payload = _permute_rows(np.asarray(prev.payload), old_flat, new_flat, R)
+    scale = _permute_rows(np.asarray(prev.scale), old_flat, new_flat, R)
+    old_tier_of_row = np.asarray(prev.tier)[old_flat]
+
+    new_tier = packed_tier_map(table, tier_of_row)
+    # pad slots: deterministic zero/scale-1/PAD_TIER, matching quantize_rows
+    # on an all-zero row (the from-scratch build's pad handling)
+    pad = np.ones(R, bool)
+    pad[new_flat] = False
+    payload[pad] = 0
+    scale[pad] = 1.0
+
+    new_row_tier = np.asarray(tier_of_row, np.int32)
+    changed_rows = np.nonzero(new_row_tier != old_tier_of_row)[0]
+    if changed_rows.size:
+        flat = new_flat[changed_rows]
+        rows = np.asarray(jnp.take(table.packed, jnp.asarray(flat), axis=0),
+                          np.float32)
+        pb, sc = quantize_rows(rows, new_row_tier[changed_rows],
+                               hot_dtype=prev.hot_dtype)
+        payload[flat] = pb
+        scale[flat] = sc
+    stats = {
+        "n_requantized": int(changed_rows.size),
+        "n_promoted": int((new_row_tier < old_tier_of_row).sum()),
+        "n_demoted": int((new_row_tier > old_tier_of_row).sum()),
+    }
+    tiered = TieredTable(
+        payload=jnp.asarray(payload),
+        scale=jnp.asarray(scale),
+        tier=jnp.asarray(new_tier),
+        remap_bank=table.remap_bank,
+        remap_slot=table.remap_slot,
+        n_banks=table.n_banks,
+        rows_per_bank=table.rows_per_bank,
+        dim=prev.dim,
+        hot_dtype=prev.hot_dtype,
+    )
+    return tiered, stats
+
+
+def modeled_bank_byte_load(tiered_tier_of_row: np.ndarray,
+                           bank_of_row: np.ndarray, rows: np.ndarray,
+                           dim: int, hot_dtype: str = "bf16",
+                           n_banks: int | None = None) -> np.ndarray:
+    """(n_banks,) bytes moved per bank for one batch's row reads — the
+    byte-bandwidth analogue of bench_workload's row-read counts."""
+    nb = int(bank_of_row.max()) + 1 if n_banks is None else n_banks
+    lut = tier_nbytes(dim, hot_dtype).astype(np.float64)
+    loads = np.zeros(nb)
+    rows = np.asarray(rows)
+    np.add.at(loads, bank_of_row[rows], lut[tiered_tier_of_row[rows]])
+    return loads

@@ -64,6 +64,25 @@ def build_recsys_serve_cached_adaptive(family_mod, cfg, statics, dist=None,
     return serve
 
 
+def build_recsys_serve_tiered_adaptive(family_mod, cfg, statics, dist=None,
+                                       backend: str | None = None):
+    """CTR scoring over TIERED-precision embeddings under the adaptive
+    runtime: the whole TieredTable pytree — quantized payload, per-row
+    scales, tier map, AND the remap vectors — enters as an argument of the
+    returned ``serve(params, tiered, batch)``. Payload/scale/tier shapes
+    depend only on (capacity, dim, hot dtype), never on the tier mix, so a
+    live re-tier swap (hot rows promoted, cold rows demoted on drift) is a
+    pure argument change against one compiled executable.
+    """
+    kw = {} if backend is None else {"backend": backend}
+
+    def serve(params, tiered, batch):
+        logits = family_mod.forward(cfg, params, statics, batch, dist,
+                                    tiered=tiered, **kw)
+        return jax.nn.sigmoid(logits)
+    return serve
+
+
 def build_retrieval_serve(family_mod, cfg, statics, dist=None, top_k: int = 128):
     """1 query x N candidates -> (top-k scores, top-k ids)."""
     def serve(params, batch):

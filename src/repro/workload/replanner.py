@@ -64,6 +64,22 @@ class ReplanConfig:
     # to n_banks * cache_rows_per_bank entry positions, so the swapped-in
     # cache table always has the shape the serve jit was compiled for.
     cache_rows_per_bank: int | None = None
+    # replan hysteresis: a drift-triggered candidate plan must beat the
+    # incumbent's PROJECTED max-bank load share on the recent telemetry
+    # window by this relative margin, or the migration is skipped (counted
+    # in ``Replanner.n_skipped_replans``). Guards against adversarial
+    # rotations where the detector trips but the candidate layout would not
+    # actually serve the current traffic better than what is installed.
+    # 0.0 disables the gate (every drifted check migrates, PR-4 behavior).
+    hysteresis: float = 0.0
+    # tiered-precision lane (repro.quant): when set, every replan re-runs
+    # the tier assigner on the live frequencies and partitions by BYTE load
+    # (freq x bytes-per-row under the new tier map) instead of row load;
+    # PlanUpdate carries ``tier_of_row`` for the runtime to re-quantize
+    # promoted/demoted rows. ``quant_dim`` is the table's embedding dim
+    # (the byte arithmetic needs it). non_uniform partitioner only.
+    quant: "object | None" = None          # repro.quant.QuantSpec
+    quant_dim: int | None = None
 
     @classmethod
     def for_vocab(cls, vocab: int, n_banks: int, **overrides) -> "ReplanConfig":
@@ -87,6 +103,10 @@ class PlanUpdate:
     # remined plan at the FIXED serving capacity (cache_rows_per_bank set):
     # what the runtime actually swaps into the rewriter + cache table
     cache_fixed: FixedCachePlan | None = None
+    # tiered lane (ReplanConfig.quant set): the fresh per-row tier map the
+    # plan's byte-load balance was computed under — the runtime re-quantizes
+    # exactly the rows whose tier changed (quant.retier_tiered)
+    tier_of_row: np.ndarray | None = None
 
 
 class Replanner:
@@ -95,9 +115,22 @@ class Replanner:
 
     def __init__(self, cfg: ReplanConfig, vocab: int, *,
                  init_freq: np.ndarray | None = None,
-                 telemetry: TableTelemetry | None = None):
+                 telemetry: TableTelemetry | None = None,
+                 init_plan: PartitionPlan | None = None):
+        if cfg.quant is not None:
+            if cfg.partitioner != "non_uniform":
+                raise ValueError("ReplanConfig.quant drives byte-load "
+                                 "partitioning on the non_uniform path only")
+            if cfg.quant_dim is None:
+                raise ValueError("ReplanConfig.quant needs quant_dim (the "
+                                 "embedding dim) for the byte arithmetic")
         self.cfg = cfg
         self.vocab = vocab
+        # the INSTALLED plan (+ its capped cache plan, cache_aware), for
+        # hysteresis projection; tracked on every committed replan (the
+        # runtime seeds the plan with the serving one)
+        self.current_plan = init_plan
+        self.current_cache_fixed: FixedCachePlan | None = None
         self.telemetry = telemetry or TableTelemetry(
             vocab, decay=cfg.telemetry_decay,
             decay_every=cfg.telemetry_decay_every)
@@ -111,6 +144,7 @@ class Replanner:
         self._recent_bags: deque[np.ndarray] = deque(maxlen=cfg.mine_window)
         self._batches = 0
         self.n_replans = 0
+        self.n_skipped_replans = 0         # hysteresis: drifted but kept plan
         self.last_report: DriftReport | None = None
 
     # -- feeding ------------------------------------------------------------
@@ -129,11 +163,26 @@ class Replanner:
     # -- planning -----------------------------------------------------------
 
     def build_plan(self, freq: np.ndarray
-                   ) -> tuple[PartitionPlan, CachePlan | None]:
+                   ) -> tuple[PartitionPlan, CachePlan | None,
+                              "np.ndarray | None"]:
+        """(plan, cache_plan, tier_of_row) from a frequency estimate. With
+        ``cfg.quant`` set, tiers come first and the greedy balances BYTE
+        load (freq x bytes-per-row under the fresh tier map)."""
         cfg = self.cfg
         if cfg.partitioner == "non_uniform":
-            return non_uniform_partition(
-                freq, cfg.n_banks, capacity_rows=cfg.capacity_rows), None
+            row_weights = None
+            tiers = None
+            if cfg.quant is not None:
+                from repro.quant import assign_tiers, bytes_of_tier
+                ta = assign_tiers(freq, cfg.quant, cfg.quant_dim)
+                tiers = ta.tier_of_row
+                row_weights = bytes_of_tier(
+                    tiers, cfg.quant_dim, cfg.quant.hot_dtype
+                ).astype(np.float64)
+            plan = non_uniform_partition(
+                freq, cfg.n_banks, capacity_rows=cfg.capacity_rows,
+                row_weights=row_weights)
+            return plan, None, tiers
         if cfg.partitioner == "cache_aware":
             if not self._recent_bags:
                 raise ValueError("cache_aware replanning needs observe_bags() "
@@ -145,29 +194,78 @@ class Replanner:
             plan = cache_aware_partition(
                 freq, cp.groups, cp.benefits, cfg.n_banks,
                 emt_capacity_rows=cfg.capacity_rows)
-            return plan, cp
+            return plan, cp, None
         raise ValueError(f"unknown partitioner {cfg.partitioner!r}")
 
-    def force_replan(self, report: DriftReport | None = None) -> PlanUpdate:
-        freq = self.telemetry.freq_vector()
-        plan, cache_plan = self.build_plan(freq)
-        if report is None:
-            report = self.detector.check(self.telemetry)
+    @staticmethod
+    def projected_max_share(plan: PartitionPlan, freq: np.ndarray) -> float:
+        """Fraction of ``freq``'s row-read mass landing on the hottest bank
+        under ``plan`` — the hysteresis currency: what each layout would
+        cost on the RECENT window, not the window it was built from."""
+        loads = np.zeros(plan.n_banks)
+        np.add.at(loads, plan.bank_of_row, freq)
+        total = loads.sum()
+        return float(loads.max() / total) if total > 0 else 1.0 / plan.n_banks
+
+    @staticmethod
+    def projected_max_share_cached(plan: PartitionPlan, fcp: FixedCachePlan,
+                                   bags: list) -> float:
+        """Cache-aware hysteresis currency: replay the recent-bag window
+        through each (plan, capped cache plan) pair — a cache hit costs ONE
+        read on the entry's bank, residual rows read their own banks (the
+        same cost model bench_workload's cache scenarios score). Raw row
+        share would ignore exactly the reads the cache absorbs, skipping
+        candidates whose whole improvement IS a better cache."""
+        from repro.core.cache_runtime import rewrite_bag
+        loads = np.zeros(plan.n_banks)
+        for bag in bags:
+            c, r = rewrite_bag(np.asarray(bag), fcp.plan)
+            if c:
+                np.add.at(loads, fcp.entry_bank[np.asarray(c)], 1.0)
+            if r:
+                np.add.at(loads, plan.bank_of_row[np.asarray(r)], 1.0)
+        total = loads.sum()
+        return float(loads.max() / total) if total > 0 else 1.0 / plan.n_banks
+
+    def _cap(self, cache_plan: CachePlan | None,
+             plan: PartitionPlan) -> FixedCachePlan | None:
+        if cache_plan is None or self.cfg.cache_rows_per_bank is None:
+            return None
+        return cap_cache_plan(
+            cache_plan,
+            entry_banks(cache_plan, plan.bank_of_row,
+                        plan.cache_bank_of_entry),
+            self.cfg.n_banks, self.cfg.cache_rows_per_bank)
+
+    def _commit(self, freq: np.ndarray, plan: PartitionPlan,
+                cache_plan: CachePlan | None,
+                tier_of_row: "np.ndarray | None", report: DriftReport,
+                cache_fixed: FixedCachePlan | None = None) -> PlanUpdate:
         self.detector.rebase(freq)
         self.n_replans += 1
-        cache_fixed = None
-        if cache_plan is not None and self.cfg.cache_rows_per_bank is not None:
-            cache_fixed = cap_cache_plan(
-                cache_plan,
-                entry_banks(cache_plan, plan.bank_of_row,
-                            plan.cache_bank_of_entry),
-                self.cfg.n_banks, self.cfg.cache_rows_per_bank)
+        self.current_plan = plan
+        if cache_fixed is None:
+            cache_fixed = self._cap(cache_plan, plan)
+        self.current_cache_fixed = cache_fixed
         return PlanUpdate(plan=plan, freq=freq, report=report,
-                          cache_plan=cache_plan, cache_fixed=cache_fixed)
+                          cache_plan=cache_plan, cache_fixed=cache_fixed,
+                          tier_of_row=tier_of_row)
+
+    def force_replan(self, report: DriftReport | None = None) -> PlanUpdate:
+        """Replan unconditionally — no drift gate, no hysteresis."""
+        freq = self.telemetry.freq_vector()
+        plan, cache_plan, tiers = self.build_plan(freq)
+        if report is None:
+            report = self.detector.check(self.telemetry)
+        return self._commit(freq, plan, cache_plan, tiers, report)
 
     def end_batch(self) -> PlanUpdate | None:
         """Advance the batch clock; on cadence, drift-check and (only if
-        drifted) emit a PlanUpdate. Returns None when the plan stands."""
+        drifted) emit a PlanUpdate. Returns None when the plan stands —
+        including when hysteresis judges the drifted candidate no better
+        than the incumbent on the recent window (skips are counted in
+        ``n_skipped_replans``; the detector is NOT rebased on a skip, so a
+        later check that the incumbent really does lose still trips)."""
         self._batches += 1
         if self._batches % self.cfg.check_every != 0:
             return None
@@ -175,4 +273,42 @@ class Replanner:
         self.last_report = report
         if not report.drifted:
             return None
+        if self.cfg.hysteresis > 0.0 and self.current_plan is not None:
+            freq = self.telemetry.freq_vector()
+            plan, cache_plan, tiers = self.build_plan(freq)
+            # project in the planner's own currency, not raw row reads:
+            #   * quant lane      — freq x bytes under the fresh tier map
+            #     (tier is a property of the row, not the plan). Caveat: a
+            #     skip also keeps the incumbent TIER map (tiers ship with a
+            #     committed PlanUpdate) — acceptable, since a skipped
+            #     candidate means the installed byte layout already serves
+            #     the window within the margin.
+            #   * cache_aware     — replay the recent-bag window through
+            #     each (plan, capped cache) pair, so reads the candidate's
+            #     cache would absorb count in its favor (needs BOTH sides'
+            #     capped plans; falls back to row share when the incumbent
+            #     predates the cache lane).
+            cache_fixed = self._cap(cache_plan, plan)
+            inc_fcp = self.current_cache_fixed
+            if cache_fixed is not None and inc_fcp is not None \
+                    and self._recent_bags:
+                bags = list(self._recent_bags)
+                incumbent = self.projected_max_share_cached(
+                    self.current_plan, inc_fcp, bags)
+                candidate = self.projected_max_share_cached(
+                    plan, cache_fixed, bags)
+            else:
+                proj = freq
+                if self.cfg.quant is not None:
+                    from repro.quant import bytes_of_tier
+                    proj = freq * bytes_of_tier(
+                        tiers, self.cfg.quant_dim,
+                        self.cfg.quant.hot_dtype).astype(np.float64)
+                incumbent = self.projected_max_share(self.current_plan, proj)
+                candidate = self.projected_max_share(plan, proj)
+            if candidate > incumbent * (1.0 - self.cfg.hysteresis):
+                self.n_skipped_replans += 1
+                return None
+            return self._commit(freq, plan, cache_plan, tiers, report,
+                                cache_fixed=cache_fixed)
         return self.force_replan(report)

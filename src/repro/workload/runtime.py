@@ -65,6 +65,10 @@ class SwapEvent:
     cache_version: int | None = None    # rewriter version installed (if any)
     cache_entries: int = 0              # live entries in the swapped table
     cache_dropped: int = 0              # mined entries truncated to residual
+    tier_version: int | None = None     # tiered lane: version installed
+    tier_promoted: int = 0              # rows moved to a MORE precise tier
+    tier_demoted: int = 0               # rows moved to a LESS precise tier
+    tier_requantized: int = 0           # rows whose payload was rebuilt
 
 
 class AdaptiveEmbeddingRuntime:
@@ -74,7 +78,7 @@ class AdaptiveEmbeddingRuntime:
                  on_swap: Callable[[SwapEvent], None] | None = None,
                  max_cache_per_bag: int = 4,
                  max_residual_per_bag: int = 16,
-                 cache_keep: int = 2):
+                 cache_keep: int = 2, tier_keep: int = 2):
         if cfg.capacity_rows is not None \
                 and cfg.capacity_rows != table.rows_per_bank:
             raise ValueError(
@@ -84,7 +88,8 @@ class AdaptiveEmbeddingRuntime:
         self.plan = plan
         self.dist = dist
         self.on_swap = on_swap
-        self.replanner = Replanner(cfg, table.vocab, init_freq=init_freq)
+        self.replanner = Replanner(cfg, table.vocab, init_freq=init_freq,
+                                   init_plan=plan)
         self.swaps: list[SwapEvent] = []
         self._batch = 0
         # cache-aware serving: a versioned rewriter starts at version 0 with
@@ -96,6 +101,26 @@ class AdaptiveEmbeddingRuntime:
                 max_cache_per_bag=max_cache_per_bag,
                 max_residual_per_bag=max_residual_per_bag, keep=cache_keep)
             self._install_cache(self._empty_cache_fixed())
+        # tiered-precision lane (repro.quant): version 0 is quantized from
+        # the initial frequencies; every replan re-tiers through the same
+        # swap (promoted/demoted rows re-quantized from CURRENT fp values).
+        # Same fixed-shape contract as the cache lane: payload/scale/tier
+        # shapes depend only on (capacity, dim), so tier swaps feed
+        # same-shape arrays to one compiled serve step.
+        self.tier_version: int | None = None
+        self._tier_keep = int(tier_keep)
+        self._tier_states: dict[int, object] = {}
+        if cfg.quant is not None:
+            if cfg.quant_dim != table.dim:
+                raise ValueError(
+                    f"quant_dim {cfg.quant_dim} != table dim {table.dim}")
+            from repro.quant import assign_tiers, build_tiered_table
+            freq0 = init_freq if init_freq is not None \
+                else np.ones(table.vocab)
+            ta = assign_tiers(freq0, cfg.quant, cfg.quant_dim)
+            self.tier_version = 0
+            self._tier_states[0] = build_tiered_table(
+                table, ta.tier_of_row, hot_dtype=cfg.quant.hot_dtype)
 
     def _empty_cache_fixed(self) -> FixedCachePlan:
         cfg = self.replanner.cfg
@@ -138,9 +163,23 @@ class AdaptiveEmbeddingRuntime:
     # -- migration + swap ---------------------------------------------------
 
     def apply(self, update: PlanUpdate) -> SwapEvent:
-        old_imb = self._realized_imbalance(self.plan, update.freq)
         new_table = migrate_table(self.table, update.plan, self.dist,
                                   rows_per_bank=self.table.rows_per_bank)
+        return self.apply_migrated(update, new_table)
+
+    def apply_migrated(self, update: PlanUpdate,
+                       new_table: BankedTable) -> SwapEvent:
+        """Swap in a table the CALLER already migrated under ``update.plan``
+        (the train loop migrates params + optimizer state together through
+        ``migrate_packed_leaves`` and hands the resulting table here); the
+        cache and tier lanes still swap versioned through this runtime."""
+        old_imb = self._realized_imbalance(self.plan, update.freq)
+        prev_tiered = self._tier_states.get(self.tier_version) \
+            if self.tier_version is not None else None
+        # callers that drive the replanner directly (the cache-aware train
+        # loop) advance its clock but not ours — sync so SwapEvent.batch
+        # records when the swap actually happened in either driving mode
+        self._batch = max(self._batch, self.replanner._batches)
         event = SwapEvent(batch=self._batch, update=update,
                           old_imbalance=old_imb,
                           new_imbalance=update.plan.imbalance())
@@ -149,6 +188,7 @@ class AdaptiveEmbeddingRuntime:
         # micro-batch picks up the new ones
         self.table = new_table
         self.plan = update.plan
+        self.replanner.current_plan = update.plan
         if self.rewriter is not None:
             # cache lane of the same swap: re-sum the surviving entries from
             # the migrated table's row values and publish (rewrite plan,
@@ -160,10 +200,62 @@ class AdaptiveEmbeddingRuntime:
             event.cache_version = self._install_cache(fcp)
             event.cache_entries = fcp.n_entries
             event.cache_dropped = fcp.n_dropped
+        if self.tier_version is not None:
+            # tiered lane: re-tier on the frequencies the plan was built
+            # from — hot rows promoted on drift re-read their fp bytes,
+            # demoted rows re-quantize from the migrated CURRENT values;
+            # stay-tier rows carry their payload through the permutation
+            # (bit-identical to a from-scratch rebuild, tests pin it)
+            from repro.quant import assign_tiers, retier_tiered
+            cfg = self.replanner.cfg
+            tiers = update.tier_of_row
+            if tiers is None:
+                tiers = assign_tiers(update.freq, cfg.quant,
+                                     cfg.quant_dim).tier_of_row
+            tiered, stats = retier_tiered(prev_tiered, self.table, tiers)
+            self.tier_version += 1
+            self._tier_states[self.tier_version] = tiered
+            for v in [v for v in self._tier_states
+                      if v <= self.tier_version - self._tier_keep]:
+                del self._tier_states[v]
+            event.tier_version = self.tier_version
+            event.tier_promoted = stats["n_promoted"]
+            event.tier_demoted = stats["n_demoted"]
+            event.tier_requantized = stats["n_requantized"]
         self.swaps.append(event)
         if self.on_swap is not None:
             self.on_swap(event)
         return event
+
+    # -- tiered-precision lane accessors ------------------------------------
+
+    @property
+    def tiered(self):
+        """The CURRENT TieredTable (quant lane on)."""
+        if self.tier_version is None:
+            raise ValueError("tiered lane disabled: set ReplanConfig.quant")
+        return self._tier_states[self.tier_version]
+
+    def tiered_for(self, version: int):
+        """The TieredTable of a still-retained version (mirrors the cache
+        lane's ``table_for`` for pipelines deeper than one micro-batch)."""
+        try:
+            return self._tier_states[version]
+        except KeyError:
+            raise KeyError(
+                f"tier version {version} retired (retained: "
+                f"{sorted(self._tier_states)}); raise tier_keep="
+            ) from None
+
+    def refresh_cache(self) -> int:
+        """Re-sum the CURRENT cache plan's entries from the table's current
+        row values and publish them as a new rewriter version — the train
+        loop's staleness refresh (trained EMT rows drift away from the
+        partial sums), without a teardown or re-jit."""
+        if self.rewriter is None:
+            raise ValueError("cache side disabled: set "
+                             "ReplanConfig.cache_rows_per_bank")
+        return self._install_cache(self.rewriter.current[0])
 
     # -- cache-aware serving hooks (rewriter passthroughs) ------------------
 

@@ -413,6 +413,39 @@ def check_pallas_backward_sharded():
     check("pallas_bwd_sharded_csr", np.allclose(g_p, g_l, atol=1e-4))
 
 
+def check_tiered_lookup_sharded():
+    """Tiered-precision lookup (repro.quant): shard_map stage 2 with
+    in-kernel dequant matches the local path on both backends, and the
+    straight-through gradient onto the fp master table matches the local
+    full-precision gradient."""
+    from repro.core.embedding import tiered_embedding_bag
+    from repro.quant import QuantSpec, assign_tiers, build_tiered_table
+
+    rng = np.random.default_rng(6)
+    V, D, banks = 200, 16, 2
+    table = (rng.standard_normal((V, D)) * 0.01).astype(np.float32)
+    freq = rng.random(V) + 0.1
+    plan = non_uniform_partition(freq, banks)
+    bt = pack_table(table, plan)
+    tiers = assign_tiers(freq, QuantSpec(byte_budget=12.0, min_hot_rows=4),
+                         D).tier_of_row
+    tt = build_tiered_table(bt, tiers)
+    idx = jnp.array(rng.integers(-1, V, (8, 2, 5)), jnp.int32)
+    mesh = mesh42()
+    dist = DistCtx(mesh=mesh, dp_axes=("data",))
+    loc = tiered_embedding_bag(bt.packed, tt, idx, None, backend="jnp")
+    for be in ("jnp", "pallas"):
+        sh = tiered_embedding_bag(bt.packed, tt, idx, dist, backend=be)
+        check(f"tiered_lookup_sharded_{be}",
+              np.allclose(np.asarray(sh), np.asarray(loc), atol=1e-6))
+    g_loc = jax.grad(lambda p: tiered_embedding_bag(
+        p, tt, idx, None, backend="jnp").sum())(bt.packed)
+    g_sh = jax.grad(lambda p: tiered_embedding_bag(
+        p, tt, idx, dist, backend="pallas").sum())(bt.packed)
+    check("tiered_st_grads_sharded",
+          np.allclose(np.asarray(g_sh), np.asarray(g_loc), atol=1e-6))
+
+
 def check_lm_gspmd_matches_local():
     from repro.configs import get_arch
     from repro.models import transformer as T
@@ -442,6 +475,7 @@ if __name__ == "__main__":
     check_migration_sharded()
     check_cache_swap_sharded()
     check_pallas_backward_sharded()
+    check_tiered_lookup_sharded()
     check_lm_gspmd_matches_local()
     if FAILED:
         print("FAILED:", FAILED)

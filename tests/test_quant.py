@@ -1,0 +1,351 @@
+"""repro.quant: tiered-precision storage (ISSUE 5 tentpole).
+
+Round-trip error bounds (property-tested), in-kernel dequant parity vs the
+jnp fallback (bit-exact — both run the shared fp32 dequant), tier-swap bit
+parity (incremental retier vs a from-scratch build), byte-budget tier
+assignment, byte-weighted partitioning, straight-through gradients through
+mixed tiers, and the adaptive runtime's versioned tier lane.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.core.embedding import (banked_embedding_bag, pack_table,
+                                  tiered_embedding_bag)
+from repro.core.partitioning import non_uniform_partition
+from repro.quant import (PAD_TIER, QuantSpec, TIER_HOT, TIER_INT4, TIER_INT8,
+                         assign_tiers, build_tiered_table, bytes_of_tier,
+                         dequant_rows_f32, quantize_rows, retier_tiered,
+                         row_bytes, tier_nbytes)
+from repro.workload import (AdaptiveEmbeddingRuntime, ReplanConfig,
+                            Replanner, migrate_table)
+
+
+def _roundtrip(rows: np.ndarray, tier: np.ndarray,
+               hot_dtype: str = "bf16") -> tuple[np.ndarray, np.ndarray]:
+    payload, scale = quantize_rows(rows, tier, hot_dtype=hot_dtype)
+    dq = dequant_rows_f32(jnp.asarray(payload), jnp.asarray(scale),
+                          jnp.asarray(tier), rows.shape[1], hot_dtype)
+    return np.asarray(dq), scale
+
+
+# ---------------------------------------------------------------------------
+# quantize/dequant round trips
+# ---------------------------------------------------------------------------
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("hot_dtype", ["bf16", "fp32"])
+    @pytest.mark.parametrize("d", [16, 33, 64])
+    def test_error_bounds(self, hot_dtype, d):
+        """|dequant - x| <= scale/2 elementwise for the quantized tiers;
+        the hot tier reproduces the storage dtype exactly."""
+        rng = np.random.default_rng(d)
+        rows = (rng.standard_normal((48, d)) * rng.uniform(
+            1e-3, 10, (48, 1))).astype(np.float32)
+        tier = np.array([TIER_HOT] * 16 + [TIER_INT8] * 16
+                        + [TIER_INT4] * 16, np.int32)
+        dq, scale = _roundtrip(rows, tier, hot_dtype)
+        if hot_dtype == "fp32":
+            np.testing.assert_array_equal(dq[:16], rows[:16])
+        else:
+            import ml_dtypes
+            np.testing.assert_array_equal(
+                dq[:16], rows[:16].astype(ml_dtypes.bfloat16)
+                .astype(np.float32))
+        for sl in (slice(16, 32), slice(32, 48)):
+            err = np.abs(dq[sl] - rows[sl])
+            bound = 0.5 * scale[sl][:, None] * (1 + 1e-6) + 1e-12
+            assert (err <= bound).all()
+
+    def test_error_bound_property(self):
+        """Hypothesis sweep of the int8/int4 bound over scales and dims."""
+        hypothesis = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=40, deadline=None)
+        @given(st.integers(1, 40), st.integers(0, 2 ** 31 - 1),
+               st.floats(1e-6, 1e6), st.sampled_from([TIER_INT8, TIER_INT4]))
+        def check(d, seed, mag, t):
+            rng = np.random.default_rng(seed)
+            rows = (rng.standard_normal((4, d)) * mag).astype(np.float32)
+            tier = np.full(4, t, np.int32)
+            dq, scale = _roundtrip(rows, tier)
+            err = np.abs(dq - rows)
+            assert (err <= 0.5 * scale[:, None] * (1 + 1e-5) + 1e-30).all()
+
+        check()
+
+    def test_zero_rows_scale_one(self):
+        rows = np.zeros((3, 8), np.float32)
+        dq, scale = _roundtrip(rows, np.array([TIER_HOT, TIER_INT8,
+                                               TIER_INT4]))
+        np.testing.assert_array_equal(dq, 0)
+        np.testing.assert_array_equal(scale, 1.0)
+
+    def test_int4_packing_is_two_per_byte(self):
+        d = 10
+        assert row_bytes(d) == 2 * d
+        assert tuple(tier_nbytes(d)) == (2 * d, d, 5)
+        # a pure int4 row only populates the first ceil(d/2) payload bytes
+        rows = np.ones((1, d), np.float32)
+        payload, _ = quantize_rows(rows, np.array([TIER_INT4]))
+        assert (payload[0, 5:] == 0).all()
+        assert (payload[0, :5] != 0).any()
+
+
+# ---------------------------------------------------------------------------
+# tier assignment from a byte budget
+# ---------------------------------------------------------------------------
+
+class TestAssignTiers:
+    def test_budget_met_and_head_hot(self):
+        rng = np.random.default_rng(0)
+        freq = rng.random(5000) + 0.01
+        spec = QuantSpec(byte_budget=34.0, min_hot_rows=8)
+        ta = assign_tiers(freq, spec, 64)
+        assert ta.avg_bytes_per_row <= 34.0 + 128 / 5000
+        order = np.argsort(-freq, kind="stable")
+        assert (ta.tier_of_row[order[:8]] == TIER_HOT).all()
+        assert ta.n_int4 > 0
+        # the int4 tail is the COLDEST rows
+        assert (ta.tier_of_row[order[-ta.n_int4:]] == TIER_INT4).all()
+
+    def test_generous_budget_promotes_instead(self):
+        freq = np.arange(1000, 0, -1, dtype=float)
+        ta = assign_tiers(freq, QuantSpec(byte_budget=100.0, min_hot_rows=4),
+                          64)
+        assert ta.n_int4 == 0 and ta.n_hot > 4
+        assert ta.avg_bytes_per_row <= 100.0
+
+    def test_int4_disabled_floors_at_int8(self):
+        freq = np.ones(100)
+        ta = assign_tiers(freq, QuantSpec(byte_budget=8.0, min_hot_rows=2,
+                                          enable_int4=False), 64)
+        assert ta.n_int4 == 0
+        assert ta.n_hot == 2 and ta.n_int8 == 98
+
+    def test_byte_weighted_partition_balances_bytes(self):
+        """row_weights turns the §3.2 greedy's load into byte-load: a plan
+        balanced on bytes beats the row-load plan's byte imbalance."""
+        rng = np.random.default_rng(1)
+        vocab, banks, dim = 2000, 8, 64
+        freq = rng.zipf(1.3, vocab).astype(np.float64)
+        tiers = assign_tiers(freq, QuantSpec(byte_budget=34.0,
+                                             min_hot_rows=8), dim)
+        weights = bytes_of_tier(tiers.tier_of_row, dim).astype(np.float64)
+
+        def byte_imbalance(plan):
+            loads = np.zeros(banks)
+            np.add.at(loads, plan.bank_of_row, freq * weights)
+            return loads.max() / loads.mean()
+
+        by_rows = non_uniform_partition(freq, banks)
+        by_bytes = non_uniform_partition(freq, banks, row_weights=weights)
+        assert byte_imbalance(by_bytes) <= byte_imbalance(by_rows) + 1e-9
+        # load_per_bank reports the weighted load it balanced
+        assert np.isclose(by_bytes.load_per_bank.sum(),
+                          (freq * weights).sum())
+
+
+# ---------------------------------------------------------------------------
+# tiered lookup: kernel parity + straight-through gradients
+# ---------------------------------------------------------------------------
+
+def _setup(rng, d=33, banks=4, budget=40.0):
+    vocab_sizes = (40, 30, 30)
+    v = sum(vocab_sizes)
+    offs = np.concatenate([[0], np.cumsum(vocab_sizes)[:-1]]).astype(np.int32)
+    table = (rng.standard_normal((v, d)) * 0.01).astype(np.float32)
+    freq = rng.random(v) + 0.1
+    plan = non_uniform_partition(freq, banks)
+    bt = pack_table(table, plan)
+    ta = assign_tiers(freq, QuantSpec(byte_budget=budget, min_hot_rows=6), d)
+    tt = build_tiered_table(bt, ta.tier_of_row)
+    idx = np.full((9, 3, 5), -1, np.int32)
+    for b in range(9):
+        for f in range(3):
+            n = rng.integers(0, 6)
+            idx[b, f, :n] = rng.integers(0, vocab_sizes[f], n)
+    return bt, tt, jnp.asarray(idx), jnp.asarray(offs), table, plan
+
+
+class TestTieredLookup:
+    @pytest.mark.parametrize("d", [16, 33, 128])
+    def test_pallas_bitmatches_jnp(self, d):
+        """In-kernel dequant vs the jnp fallback: SAME fp32 dequant + same
+        accumulate order => bit-exact, int4 rows included."""
+        rng = np.random.default_rng(d)
+        # budget below the int8 width forces an int4 tail at every dim
+        bt, tt, idx, fo, _, _ = _setup(rng, d=d, budget=0.75 * d)
+        assert int((np.asarray(tt.tier) == TIER_INT4).sum()) > 0
+        got_p = tiered_embedding_bag(bt.packed, tt, idx, None,
+                                     backend="pallas", field_offsets=fo)
+        got_j = tiered_embedding_bag(bt.packed, tt, idx, None,
+                                     backend="jnp", field_offsets=fo)
+        assert got_p.dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(got_p), np.asarray(got_j))
+
+    def test_all_hot_matches_bf16_lookup_exactly(self):
+        """A tier map with every row hot reproduces the plain bf16 lookup
+        bit-for-bit (the fp32-exact side of the parity criterion)."""
+        rng = np.random.default_rng(7)
+        bt, _, idx, fo, table, plan = _setup(rng)
+        tt_hot = build_tiered_table(bt, np.full(bt.vocab, TIER_HOT,
+                                                np.int32))
+        bt16 = pack_table(table, plan, dtype=jnp.bfloat16)
+        want = banked_embedding_bag(bt16, idx, None, backend="jnp",
+                                    field_offsets=fo)
+        got = tiered_embedding_bag(bt.packed, tt_hot, idx, None,
+                                   backend="pallas", field_offsets=fo)
+        np.testing.assert_array_equal(
+            np.asarray(got.astype(jnp.bfloat16)), np.asarray(want))
+
+    def test_quantized_tiers_within_tolerance_of_fp(self):
+        rng = np.random.default_rng(3)
+        bt, tt, idx, fo, _, _ = _setup(rng, budget=25.0)
+        want = np.asarray(banked_embedding_bag(bt, idx, None, backend="jnp",
+                                               field_offsets=fo), np.float32)
+        got = np.asarray(tiered_embedding_bag(bt.packed, tt, idx, None,
+                                              backend="jnp",
+                                              field_offsets=fo))
+        # L entries per bag, each within scale/2 of its fp row
+        bound = idx.shape[-1] * 0.5 * float(np.asarray(tt.scale).max())
+        assert np.abs(got - want).max() <= bound + 1e-6
+
+    def test_one_hot_length1_bags_match_gather(self):
+        """One-hot fields as length-1 bags: the tiered path's rendition of
+        the dense gather (dlrm.forward's tiered one-hot branch)."""
+        rng = np.random.default_rng(5)
+        bt, _, _, fo, table, plan = _setup(rng)
+        tt_hot = build_tiered_table(bt, np.full(bt.vocab, TIER_HOT,
+                                                np.int32))
+        sparse = jnp.asarray(rng.integers(0, 30, (8, 3)).astype(np.int32))
+        got = tiered_embedding_bag(bt.packed, tt_hot, sparse[..., None],
+                                   None, backend="pallas", field_offsets=fo)
+        rows = jnp.where(sparse >= 0, sparse + fo[None, :], -1)
+        from repro.core.embedding import banked_gather
+        want = banked_gather(bt, rows, None)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32),
+                                   atol=1e-2)
+
+    @pytest.mark.parametrize("bwd", ["jnp", "pallas"])
+    def test_straight_through_grads_match_fp_path(self, bwd):
+        """Mixed tiers, quantized rows included: d/d(fp_packed) of the
+        tiered lookup EQUALS the full-precision lookup's gradient (the
+        straight-through contract), on both scatter backends."""
+        rng = np.random.default_rng(11)
+        bt, tt, idx, fo, _, _ = _setup(rng, budget=25.0)
+
+        def loss_tiered(p):
+            return tiered_embedding_bag(p, tt, idx, None, backend="pallas",
+                                        bwd_backend=bwd,
+                                        field_offsets=fo).sum()
+
+        def loss_fp(p):
+            bt2 = dataclasses.replace(bt, packed=p)
+            return banked_embedding_bag(bt2, idx, None, backend="jnp",
+                                        field_offsets=fo).sum()
+
+        g_t = np.asarray(jax.grad(loss_tiered)(bt.packed))
+        g_f = np.asarray(jax.grad(loss_fp)(bt.packed))
+        np.testing.assert_array_equal(g_t, g_f)
+        # quantized rows DO receive gradient (straight-through, not zeroed)
+        q_slots = np.asarray(tt.tier) != TIER_HOT
+        assert (g_t[q_slots] != 0).any()
+
+
+# ---------------------------------------------------------------------------
+# tier swaps: incremental retier == from-scratch build; runtime tier lane
+# ---------------------------------------------------------------------------
+
+class TestTierSwap:
+    def test_retier_bitmatches_fresh_build(self):
+        """Migration + re-tier (promotions, demotions, pad churn) must be
+        bit-identical to quantizing the migrated table from scratch."""
+        rng = np.random.default_rng(0)
+        V, D, B = 300, 16, 4
+        cap = int(np.ceil(V / B) * 1.25)
+        table = (rng.standard_normal((V, D)) * 0.01).astype(np.float32)
+        f0 = rng.random(V) + 0.1
+        plan0 = non_uniform_partition(f0, B, capacity_rows=cap)
+        bt0 = migrate_table(pack_table(table, plan0), plan0,
+                            rows_per_bank=cap)
+        spec = QuantSpec(byte_budget=10.0, min_hot_rows=4)
+        tt0 = build_tiered_table(bt0, assign_tiers(f0, spec, D).tier_of_row)
+
+        f1 = rng.random(V) + 0.1            # rotated frequencies
+        plan1 = non_uniform_partition(f1, B, capacity_rows=cap)
+        bt1 = migrate_table(bt0, plan1, rows_per_bank=cap)
+        tiers1 = assign_tiers(f1, spec, D).tier_of_row
+        got, stats = retier_tiered(tt0, bt1, tiers1)
+        assert stats["n_requantized"] == stats["n_promoted"] \
+            + stats["n_demoted"]
+        want = build_tiered_table(bt1, tiers1)
+        np.testing.assert_array_equal(np.asarray(got.payload),
+                                      np.asarray(want.payload))
+        np.testing.assert_array_equal(np.asarray(got.scale),
+                                      np.asarray(want.scale))
+        np.testing.assert_array_equal(np.asarray(got.tier),
+                                      np.asarray(want.tier))
+        # and the lookup through the swapped table matches the fresh one
+        idx = jnp.asarray(rng.integers(0, V, (8, 1, 6)).astype(np.int32))
+        a = tiered_embedding_bag(bt1.packed, got, idx, None, backend="jnp")
+        b = tiered_embedding_bag(bt1.packed, want, idx, None, backend="jnp")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_runtime_tier_lane_versions_and_parity(self):
+        rng = np.random.default_rng(2)
+        V, D, B = 400, 16, 4
+        cap = int(np.ceil(V / B) * 1.25)
+        table = (rng.standard_normal((V, D)) * 0.01).astype(np.float32)
+        f0 = rng.random(V) + 0.1
+        plan = non_uniform_partition(f0, B, capacity_rows=cap)
+        bt = migrate_table(pack_table(table, plan), plan, rows_per_bank=cap)
+        cfg = ReplanConfig.for_vocab(
+            V, B, capacity_rows=cap, check_every=2,
+            quant=QuantSpec(byte_budget=10.0, min_hot_rows=4), quant_dim=D)
+        rt = AdaptiveEmbeddingRuntime(bt, plan, cfg, init_freq=f0)
+        assert rt.tier_version == 0
+        tt0 = rt.tiered
+        for _ in range(30):                 # rotated hot set -> drift
+            rt.observe_batch(rng.integers(V // 2, V, size=(64,)))
+            rt.end_batch()
+        assert rt.replanner.n_replans >= 1
+        ev = rt.swaps[-1]
+        assert ev.tier_version == rt.tier_version >= 1
+        assert ev.tier_requantized == ev.tier_promoted + ev.tier_demoted > 0
+        # versioned access: current + retired-window semantics
+        assert rt.tiered_for(rt.tier_version) is rt.tiered
+        with pytest.raises(KeyError):
+            rt.tiered_for(-1)
+        # swapped state bit-matches a from-scratch build (the serve CLI's
+        # first-swap probe, in-test)
+        tt = rt.tiered
+        assert tt is not tt0
+        fresh = build_tiered_table(rt.table, tt.tier_of_row())
+        np.testing.assert_array_equal(np.asarray(tt.payload),
+                                      np.asarray(fresh.payload))
+        np.testing.assert_array_equal(np.asarray(tt.tier),
+                                      np.asarray(fresh.tier))
+
+    def test_runtime_rejects_dim_mismatch(self):
+        rng = np.random.default_rng(3)
+        V, D, B = 100, 8, 2
+        cap = V // B
+        plan = non_uniform_partition(np.ones(V), B, capacity_rows=cap)
+        bt = pack_table((rng.standard_normal((V, D)) * 0.01)
+                        .astype(np.float32), plan)
+        cfg = ReplanConfig.for_vocab(
+            V, B, capacity_rows=cap,
+            quant=QuantSpec(byte_budget=8.0), quant_dim=D + 1)
+        with pytest.raises(ValueError, match="quant_dim"):
+            AdaptiveEmbeddingRuntime(bt, plan, cfg)
+
+    def test_quant_requires_non_uniform_partitioner(self):
+        with pytest.raises(ValueError, match="non_uniform"):
+            Replanner(ReplanConfig(n_banks=2, partitioner="cache_aware",
+                                   quant=QuantSpec(), quant_dim=8), 100)

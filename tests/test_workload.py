@@ -360,6 +360,116 @@ class TestAdaptiveLoop:
         # swap preserved capacity: shapes never changed
         assert rt.table.packed.shape == t0.packed.shape
 
+    def test_hysteresis_skips_non_improving_replan(self):
+        """Detector trips (hot set rotated) but the candidate plan would
+        serve the recent window no better than the incumbent — the replan
+        is SKIPPED, counted, and the detector is NOT rebased (a later check
+        can still commit)."""
+        V, banks = 400, 4
+        rng = np.random.default_rng(0)
+        # near-uniform traffic: a candidate beats the incumbent only by
+        # sampling noise, never by 30% — the gate must hold every check
+        cfg = ReplanConfig.for_vocab(V, banks, check_every=2,
+                                     hysteresis=0.3)
+        freq0 = np.ones(V)
+        incumbent = non_uniform_partition(freq0, banks)
+        rp = Replanner(cfg, V, init_freq=freq0, init_plan=incumbent)
+        for _ in range(20):
+            rp.observe_rows(rng.integers(0, V, 200))   # uniform: topk rotates
+            update = rp.end_batch()
+            assert update is None
+        assert rp.last_report.drifted                  # the detector DID trip
+        assert rp.n_skipped_replans >= 2               # skipped every check
+        assert rp.n_replans == 0
+        assert rp.current_plan is incumbent
+
+    def test_hysteresis_commits_genuinely_better_plan(self):
+        """Traffic concentrated on ONE bank's contiguous block: the greedy
+        candidate spreads it, beating the incumbent by far more than the
+        margin — the replan commits despite hysteresis."""
+        from repro.core.partitioning import uniform_partition
+        V, banks = 400, 4
+        rng = np.random.default_rng(1)
+        cfg = ReplanConfig.for_vocab(V, banks, check_every=2,
+                                     hysteresis=0.05)
+        incumbent = uniform_partition(V, banks)        # contiguous blocks
+        rp = Replanner(cfg, V, init_freq=np.ones(V), init_plan=incumbent)
+        for _ in range(20):
+            rp.observe_rows(rng.integers(0, V // banks, 200))  # bank 0 only
+            update = rp.end_batch()
+            if update is not None:
+                break
+        assert update is not None and rp.n_replans == 1
+        assert rp.current_plan is update.plan
+        freq = update.freq
+        assert (Replanner.projected_max_share(update.plan, freq)
+                < Replanner.projected_max_share(incumbent, freq) * 0.95)
+
+    def test_hysteresis_cache_aware_counts_absorbed_reads(self):
+        """The cache-aware projection replays bags through (plan, capped
+        cache): a hit costs ONE read on the ENTRY's bank — raw row share
+        would score the same layout very differently."""
+        from repro.core.grace import CacheEntry, CachePlan
+        plan = non_uniform_partition(np.array([4.0, 3.0, 2.0, 1.0]), 2,
+                                     capacity_rows=2)
+        cp = CachePlan(groups=[np.array([0, 1])], benefits=np.array([2.0]),
+                       entries=[CacheEntry(members=(0, 1), hits=5)],
+                       entry_of_subset={(0, 1): 0})
+        entry_bank = 1 - plan.bank_of_row[2]     # entry away from row 2
+        fcp = cap_cache_plan(cp, np.array([entry_bank]), 2, 1)
+        bags = [np.array([0, 1, 2])] * 4
+        # rewrite: {0,1} -> one entry read on entry_bank, residual {2} on
+        # its own bank -> two reads, one per bank -> perfectly balanced
+        got = Replanner.projected_max_share_cached(plan, fcp, bags)
+        assert got == pytest.approx(0.5)
+        # raw row share of the same traffic is lopsided (rows 0,1 share a
+        # bank under the greedy), which is exactly the miscount the cached
+        # projection exists to avoid
+        freq = np.zeros(4)
+        np.add.at(freq, np.concatenate(bags), 1.0)
+        assert Replanner.projected_max_share(plan, freq) \
+            == pytest.approx(2 / 3)
+
+    def test_hysteresis_cache_aware_tracks_installed_cache(self):
+        """A committed cache-aware replan retains its capped cache plan as
+        the hysteresis incumbent; the loop keeps functioning with the gate
+        on (commits and skips both account)."""
+        rng = np.random.default_rng(3)
+        V, banks = 300, 2
+        cfg = ReplanConfig.for_vocab(
+            V, banks, check_every=2, partitioner="cache_aware",
+            cache_rows_per_bank=4, mine_min_support=2, hysteresis=0.05)
+        rp = Replanner(cfg, V, init_freq=np.ones(V),
+                       init_plan=non_uniform_partition(np.ones(V), banks))
+        assert rp.current_cache_fixed is None
+        rp.observe_bags([np.array([1, 2, 3])] * 8)
+        first = rp.force_replan()
+        assert rp.current_cache_fixed is first.cache_fixed is not None
+        drifted_decisions = 0
+        for i in range(30):
+            hot = 100 + 50 * (i // 10)           # rotating grouped hot set
+            rp.observe_bags([np.array([hot, hot + 1, hot + 2]),
+                             rng.integers(0, V, 4)])
+            update = rp.end_batch()
+            if update is not None:
+                assert rp.current_cache_fixed is update.cache_fixed
+            drifted_decisions = rp.n_replans + rp.n_skipped_replans
+        assert drifted_decisions >= 1            # the gate actually ran
+
+    def test_hysteresis_off_by_default(self):
+        """hysteresis=0.0 reproduces PR-4 behavior: every drifted check
+        replans, nothing is skipped."""
+        V, banks = 400, 4
+        rng = np.random.default_rng(2)
+        cfg = ReplanConfig.for_vocab(V, banks, check_every=2)
+        rp = Replanner(cfg, V, init_freq=np.ones(V),
+                       init_plan=non_uniform_partition(np.ones(V), banks))
+        for _ in range(20):
+            rp.observe_rows(rng.integers(0, V, 200))
+            rp.end_batch()
+        assert rp.n_replans >= 1
+        assert rp.n_skipped_replans == 0
+
     def test_cache_aware_replan_builds_cache_plan(self):
         V, banks = 600, 4
         cap = V // banks + 40
