@@ -557,6 +557,206 @@ def run_tiered(stream_bags: int = STREAM_BAGS, *, seed: int = SEED) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# fault-recovery scenario (repro.dist.bank_fault): degraded serving vs stall
+# ---------------------------------------------------------------------------
+
+# small enough that the REAL jit'd serve step runs every batch in CI seconds;
+# the contract under test (bounded degradation, cadence-bounded recovery, one
+# executable) does not depend on scale, so the batch count is FIXED — smoke
+# and full runs produce identical booleans
+FAULT_VOCAB = 2000
+FAULT_DIM = 16
+FAULT_BATCH = 16            # requests per micro-batch
+FAULT_BAG = 12              # rect bag length (clip + pad -1)
+FAULT_BATCHES = 64
+FAULT_SLACK = 1.25          # per-bank slack: one dead bank is absorbable
+FAULT_CHECK_EVERY = 8       # health-check cadence -> bounded recovery delay
+FAULT_FAIL_AT = 21          # mid-window death: 3 degraded batches to b=24
+
+
+def _rect_bags(bags: list[np.ndarray]) -> np.ndarray:
+    """(B, FAULT_BAG) int32, -1 padded — ONE static shape for the jit."""
+    idx = np.full((len(bags), FAULT_BAG), -1, np.int32)
+    for i, b in enumerate(bags):
+        b = b[:FAULT_BAG]
+        idx[i, :len(b)] = b
+    return idx
+
+
+def run_fault_recovery(*, seed: int = SEED) -> dict:
+    """Serve THROUGH a bank death (bounded-degraded reads + recovery re-pack)
+    vs STALLING until migration completes.
+
+    Both sides run the same drifting stream against the same initial §3.2
+    pack and suffer the same injected death of the hottest bank. The
+    ``degraded`` side is the repro.dist fault lane end-to-end and REAL: one
+    jit'd serve step takes (packed, remaps, bank_live, idx) as arguments,
+    dead-bank reads zero-fill with a per-request ``degraded_read_count``,
+    and the next health check (every FAULT_CHECK_EVERY batches) triggers
+    ``AdaptiveEmbeddingRuntime.on_bank_failure`` — replan off the dead bank,
+    migrate, swap, same executable. The ``stall`` baseline refuses degraded
+    responses: batches arriving between death and recovery wait for the full
+    re-pack, each paying the modeled migration cost (moved rows x read+write
+    at MRAM row latency) on top of its own lookup time. Latencies are the
+    same analytic model as every other scenario; ``recovery_latency_ms`` is
+    the one wall-clock (advisory) number.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.embedding import (BankedTable, banked_embedding_bag,
+                                      degraded_row_counts)
+    from repro.dist.bank_fault import DEAD, BankFaultState, FaultEvent
+    from repro.workload.runtime import AdaptiveEmbeddingRuntime
+
+    vocab, dim = FAULT_VOCAB, FAULT_DIM
+    cap = int(np.ceil(vocab / BANKS) * FAULT_SLACK)
+    drift = DriftConfig(n_items=vocab, zipf_a=1.08, avg_bag=8.0,
+                        rotate_every=10 ** 9)   # failure is the only event
+    trace = DriftingZipfTrace(drift, seed=seed)
+    warm = trace.bags(256)
+    freq0 = np.zeros(vocab)
+    for bag in warm:
+        np.add.at(freq0, bag, 1.0)
+    plan0 = non_uniform_partition(freq0 + 1e-3, BANKS, capacity_rows=cap)
+
+    # pack pinned to the FULL per-bank capacity so the post-failure re-pack
+    # (survivors absorb the dead bank's rows) keeps the compiled shapes
+    rng = np.random.default_rng(seed)
+    table_np = (rng.standard_normal((vocab, dim)) * 0.01).astype(np.float32)
+    packed0 = np.zeros((BANKS * cap, dim), np.float32)
+    packed0[plan0.bank_of_row.astype(np.int64) * cap
+            + plan0.slot_of_row] = table_np
+    table = BankedTable(packed=jnp.asarray(packed0),
+                        remap_bank=jnp.asarray(plan0.bank_of_row, jnp.int32),
+                        remap_slot=jnp.asarray(plan0.slot_of_row, jnp.int32),
+                        n_banks=BANKS, rows_per_bank=cap)
+    orig = (table.packed, table.remap_bank, table.remap_slot)
+
+    rcfg = ReplanConfig.for_vocab(vocab, BANKS, capacity_rows=cap,
+                                  check_every=FAULT_CHECK_EVERY)
+    runtime = AdaptiveEmbeddingRuntime(table, plan0, rcfg,
+                                       init_freq=freq0 + 1e-3)
+
+    victim = int(np.argmax(plan0.load_per_bank))      # kill the hottest bank
+    fault = BankFaultState(BANKS, [FaultEvent(batch=FAULT_FAIL_AT,
+                                              bank=victim, state=DEAD)])
+
+    @jax.jit
+    def serve(packed, remap_bank, remap_slot, bank_live, idx):
+        bt = BankedTable(packed=packed, remap_bank=remap_bank,
+                         remap_slot=remap_slot, n_banks=BANKS,
+                         rows_per_bank=cap)
+        emb = banked_embedding_bag(bt, idx, None, backend="jnp",
+                                   bank_live=bank_live)
+        return emb, degraded_row_counts(remap_bank, bank_live, idx)
+
+    t_row = UPMEMProfile().mram_read_latency(dim * 4)
+    batches = [_rect_bags(trace.bags(FAULT_BATCH))
+               for _ in range(FAULT_BATCHES)]
+
+    lat_deg, lat_stall, deg_per_batch = [], [], []
+    recovered_at = None
+    recovery_ms = None
+    moved_rows = 0
+    max_deg_request = 0
+    finite = True
+    emb_last = None
+    for b, idx in enumerate(batches):
+        fault.advance(b)
+        # health check between micro-batches: the replan lane picks the
+        # failure up at the next cadence boundary, bounding degraded serving
+        # to < FAULT_CHECK_EVERY batches
+        if (fault.dead_banks() and recovered_at is None
+                and b % FAULT_CHECK_EVERY == 0):
+            old_bank = np.asarray(runtime.table.remap_bank).copy()
+            event = runtime.on_bank_failure(fault.live_mask())
+            recovery_ms = event.recovery_s * 1e3
+            moved_rows = int((old_bank
+                              != np.asarray(runtime.table.remap_bank)).sum())
+            recovered_at = b
+        t = runtime.table
+        emb, counts = serve(t.packed, t.remap_bank, t.remap_slot,
+                            jnp.asarray(fault.live_mask()), jnp.asarray(idx))
+        counts = np.asarray(counts)
+        emb_last = np.asarray(emb)
+        finite &= bool(np.isfinite(emb_last).all())
+        deg_per_batch.append(int(counts.sum()))
+        max_deg_request = max(max_deg_request, int(counts.max()))
+        # modeled lookup time: reads per LIVE bank, max bank bounds the batch
+        rows = idx[idx >= 0]
+        reads = np.bincount(np.asarray(t.remap_bank)[rows], minlength=BANKS)
+        reads = reads * np.asarray(fault.live_mask(), dtype=np.int64)
+        lookup_us = float(reads.max() * t_row * 1e6)
+        lat_deg.append(lookup_us)
+        lat_stall.append(lookup_us)
+
+    degraded_batches = int(np.sum(np.asarray(deg_per_batch) > 0))
+    window = list(range(FAULT_FAIL_AT,
+                        recovered_at if recovered_at is not None
+                        else FAULT_BATCHES))
+    # the stall baseline serves bit-exact or not at all: batches arriving
+    # between death and recovery queue behind the SAME re-pack the degraded
+    # side ran (every moved row read from the host master + rewritten at
+    # MRAM row latency) — the degraded side hid that cost behind serving
+    stall_us = float(moved_rows) * 2.0 * t_row * 1e6
+    for b in window:
+        lat_stall[b] += stall_us
+    confined = all((deg > 0) <= (b in window)
+                   for b, deg in enumerate(deg_per_batch))
+    hit_dead = any(deg_per_batch[b] > 0 for b in window)
+    recovered_clean = recovered_at is not None and all(
+        d == 0 for d in deg_per_batch[recovered_at:])
+
+    # post-recovery bit-parity: the SAME executable on the recovered pack
+    # must reproduce the never-failed run (original pack, all-live mask) —
+    # the unsharded bag scan sums in index order whatever the plan
+    all_live = jnp.ones(BANKS, dtype=bool)
+    ref, _ = serve(orig[0], orig[1], orig[2], all_live,
+                   jnp.asarray(batches[-1]))
+    parity = bool(np.array_equal(np.asarray(ref), emb_last))
+
+    return {
+        "config": {
+            "vocab": vocab, "dim": dim, "banks": BANKS,
+            "batch": FAULT_BATCH, "bag": FAULT_BAG,
+            "n_batches": FAULT_BATCHES, "fail_at_batch": FAULT_FAIL_AT,
+            "check_every": FAULT_CHECK_EVERY, "victim_bank": victim,
+            "capacity_slack": FAULT_SLACK, "seed": seed,
+            "latency_model": "max live-bank row reads x UPMEM MRAM read "
+                             "latency; stall adds moved-rows x 2 x row "
+                             "latency migration cost per stalled batch",
+        },
+        "degraded": {
+            "p99_model_latency_us": float(p99(lat_deg)),
+            "mean_model_latency_us": float(np.mean(lat_deg)),
+            "degraded_batches": degraded_batches,
+            "degraded_reads_total": int(np.sum(deg_per_batch)),
+            "max_degraded_reads_per_request": max_deg_request,
+            "recovery_batches": (recovered_at - FAULT_FAIL_AT
+                                 if recovered_at is not None else -1),
+            "recovery_latency_ms": recovery_ms if recovery_ms is not None
+            else -1.0,
+            "moved_rows": moved_rows,
+        },
+        "stall": {
+            "p99_model_latency_us": float(p99(lat_stall)),
+            "mean_model_latency_us": float(np.mean(lat_stall)),
+            "stalled_batches": len(window),
+            "stall_model_us": stall_us,
+        },
+        "adaptive_wins": {
+            "all_responses_finite": finite,
+            "degradation_confined_to_failure_window": confined and hit_dead,
+            "recovered_zero_degraded": recovered_clean,
+            "post_recovery_bit_parity": parity,
+            "one_serve_executable": serve._cache_size() == 1,
+            "lower_p99_than_stall": p99(lat_deg) < p99(lat_stall),
+        },
+    }
+
+
 def workload_drift():
     """benchmarks/run.py hook: (name, us_per_call, derived) rows. A short
     stream keeps the CI run in seconds; the standalone script uses the full
@@ -581,6 +781,11 @@ def workload_drift():
            d["tiered"]["p99_model_latency_us"],
            f"bytes_x{d['byte_load_ratio_max_bank']:.2f}"
            f"_retiers{d['tiered']['n_retiers']}")
+    d = run_fault_recovery()
+    yield ("workload_fault_recovery_p99_model",
+           d["degraded"]["p99_model_latency_us"],
+           f"recov{d['degraded']['recovery_batches']}batches"
+           f"_degreads{d['degraded']['degraded_reads_total']}")
 
 
 def write_json(out: str = "BENCH_workload.json", smoke: bool = False,
@@ -597,6 +802,7 @@ def write_json(out: str = "BENCH_workload.json", smoke: bool = False,
     doc["cache_aware"] = run_cache_aware(stream_bags=n)
     doc["criteo_replay"] = run_criteo_replay(stream_bags=n, path=criteo_path)
     doc["tiered"] = run_tiered(stream_bags=n)
+    doc["fault_recovery"] = run_fault_recovery()
     doc["smoke"] = smoke
     with open(out, "w") as fh:
         json.dump(doc, fh, indent=2)
@@ -633,6 +839,21 @@ def _print_tiered(doc: dict) -> None:
     print(f"  wins={doc['adaptive_wins']}")
 
 
+def _print_fault(doc: dict) -> None:
+    d, s = doc["degraded"], doc["stall"]
+    print("[fault recovery: degraded serving vs stall]")
+    print(f"{'degraded':<10} p99 model us {d['p99_model_latency_us']:>8.1f}   "
+          f"({d['degraded_reads_total']} degraded reads over "
+          f"{d['degraded_batches']} batches, recovery "
+          f"{d['recovery_batches']} batches / "
+          f"{d['recovery_latency_ms']:.1f}ms wall, "
+          f"{d['moved_rows']} rows moved)")
+    print(f"{'stall':<10} p99 model us {s['p99_model_latency_us']:>8.1f}   "
+          f"({s['stalled_batches']} batches blocked on the "
+          f"{s['stall_model_us']:.0f}us re-pack)")
+    print(f"  wins={doc['adaptive_wins']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_workload.json")
@@ -654,11 +875,13 @@ def main() -> None:
     _print_scenario("cache_aware drift", doc["cache_aware"])
     _print_scenario("criteo replay", doc["criteo_replay"])
     _print_tiered(doc["tiered"])
+    _print_fault(doc["fault_recovery"])
     print(f"ideal share {doc['ideal_share']:.4f}; wrote {args.out}")
     ok = (all(doc["adaptive_wins"].values())
           and all(doc["cache_aware"]["adaptive_wins"].values())
           and all(doc["criteo_replay"]["adaptive_wins"].values())
-          and all(doc["tiered"]["adaptive_wins"].values()))
+          and all(doc["tiered"]["adaptive_wins"].values())
+          and all(doc["fault_recovery"]["adaptive_wins"].values()))
     if not ok:
         raise SystemExit(1)
 

@@ -457,6 +457,63 @@ def lookup_unsharded(t: BankedTable, idx: Array, *, reduce_bag: bool,
 
 
 # ---------------------------------------------------------------------------
+# bounded-degraded reads: the per-bank liveness mask
+# ---------------------------------------------------------------------------
+
+def _effective_bank_map(remap_bank: Array, bank_live: Array,
+                        n_banks: int) -> Array:
+    """Rewrite the row->bank map so DEAD banks own nothing: rows homed on a
+    dead bank get bank id ``n_banks``, which no ``axis_index`` ever matches —
+    their contribution to the psum is exactly zero (the zero-fill degraded
+    substitute), with NO kernel or shard_map changes. ``bank_live`` is a
+    (n_banks,) bool jit ARGUMENT, so flipping a bank dead/alive between
+    micro-batches is a pure argument change against one executable (the same
+    zero-recompile contract as the remap vectors)."""
+    return jnp.where(bank_live[remap_bank], remap_bank,
+                     jnp.int32(n_banks)).astype(jnp.int32)
+
+
+def _binary_live_map(remap_bank: Array, bank_live: Array) -> Array:
+    """Unsharded rendition of the same trick: the single-device path owns
+    everything via ``my_bank < 0``, which would bypass a bank-map mask — so
+    degraded single-device lookups pass ``my_bank = 0`` against a binary map
+    (0 = row's bank alive, 1 = dead). Ownership machinery unchanged on both
+    backends."""
+    return jnp.where(bank_live[remap_bank], 0, 1).astype(jnp.int32)
+
+
+def degraded_row_counts(remap_bank: Array, bank_live: Array, rows: Array,
+                        *, per_bag: bool = False) -> Array:
+    """Count of reads that resolved to a dead bank.
+
+    ``rows``: union-vocab row ids of any shape ``(B, ...)`` (negatives =
+    padding). Returns ``(B,)`` int32 by default — the per-request
+    ``degraded_read_count`` surfaced per batch so correctness is *boundedly*
+    degraded, never silently wrong: a request with count 0 is bit-exact, a
+    request with count k is missing exactly k row contributions.
+    ``per_bag=True`` sums only the trailing (bag) axis instead — shape
+    ``rows.shape[:-1]``, the granularity ``degraded_mean_fill`` needs.
+    """
+    valid = rows >= 0
+    safe = jnp.where(valid, rows, 0)
+    dead = valid & ~bank_live[remap_bank[safe]]
+    if per_bag:
+        return dead.sum(axis=-1).astype(jnp.int32)
+    return dead.reshape(rows.shape[0], -1).sum(axis=-1).astype(jnp.int32)
+
+
+def degraded_mean_fill(emb: Array, per_bag_counts: Array,
+                       fallback_row: Array) -> Array:
+    """Optional mean-fill substitute: add ``fallback_row`` (e.g. the table's
+    mean row) once per dead read instead of the implicit zero row.
+    ``per_bag_counts`` has ``emb``'s leading shape (``degraded_row_counts``
+    with ``per_bag=True``). Applied OUTSIDE the bank collective — inside the
+    shard_map every bank would add it and the psum would count it n_banks
+    times."""
+    return emb + per_bag_counts[..., None].astype(emb.dtype) * fallback_row
+
+
+# ---------------------------------------------------------------------------
 # distributed lookup
 # ---------------------------------------------------------------------------
 
@@ -481,7 +538,8 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
                          bwd_backend: str = "auto",
                          field_offsets: Array | None = None,
                          tile_b: int = 8,
-                         interpret: bool | None = None) -> Array:
+                         interpret: bool | None = None,
+                         bank_live: Array | None = None) -> Array:
     """The paper's stages 1-3. idx (..., L) -> (..., dim) [reduce] or
     (..., L, dim).
 
@@ -492,6 +550,12 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
     ``bwd_backend`` selects the pallas forward's gradient scatter ('auto'
     follows ``backend``): 'pallas' keeps the backward's row traffic on the
     near-memory kernel path, 'jnp' is the XLA scatter fallback.
+
+    ``bank_live`` ((n_banks,) bool, optional) is the degraded-serving mask:
+    reads homed on a False bank resolve to the zero row (bounded degradation,
+    see ``degraded_row_counts``). It rides as a jit ARGUMENT — the effective
+    bank map is recomputed per call, so flipping a bank dead/alive never
+    recompiles and needs no kernel changes.
 
     Under a mesh: shard_map over (dp_axes + bank_axis); indices are sharded on
     batch, replicated across banks (stage 1); each bank computes its partial
@@ -508,13 +572,24 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
 
     if dist is None:
         if not reduce_bag:
-            return lookup_unsharded(t, idx, reduce_bag=False)
+            out = lookup_unsharded(t, idx, reduce_bag=False)
+            if bank_live is not None:
+                safe = jnp.where(idx >= 0, idx, 0)
+                out = jnp.where(bank_live[t.remap_bank[safe]][..., None],
+                                out, 0)
+            return out
+        if bank_live is None:
+            bank_map, my = t.remap_bank, jnp.full((), -1, jnp.int32)
+        else:
+            bank_map = _binary_live_map(t.remap_bank, bank_live)
+            my = jnp.zeros((), jnp.int32)
         if backend == "pallas":
             return _pallas_bag((tile_b, interpret, bwd), t.packed,
-                               t.remap_bank, t.flat_remap(), off,
-                               jnp.full((), -1, jnp.int32), idx)
-        return _bag_partial_scan(t.packed, idx, remap=t.flat_remap(),
-                                 bank=None, my_bank=None, off=off)
+                               bank_map, t.flat_remap(), off, my, idx)
+        return _bag_partial_scan(
+            t.packed, idx, remap=t.flat_remap(),
+            bank=None if bank_live is None else bank_map,
+            my_bank=None if bank_live is None else my, off=off)
 
     P = jax.sharding.PartitionSpec
     # batch shards over dp when divisible; tiny/odd batches (retrieval's B=1
@@ -541,16 +616,20 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
                                      my_bank=my, off=off_local)
         return jax.lax.psum(part, bank)
 
+    bank_map = t.remap_bank if bank_live is None \
+        else _effective_bank_map(t.remap_bank, bank_live, t.n_banks)
     return shard_map(
         fn, mesh=dist.mesh,
         in_specs=(P(bank, None), P(), P(), P(), idx_spec),
         out_specs=out_spec,
-    )(t.packed, t.remap_bank, t.remap_slot, off, idx)
+    )(t.packed, bank_map, t.remap_slot, off, idx)
 
 
-def banked_gather(t: BankedTable, idx: Array, dist: DistCtx | None) -> Array:
+def banked_gather(t: BankedTable, idx: Array, dist: DistCtx | None, *,
+                  bank_live: Array | None = None) -> Array:
     """Dense per-position lookup (LM token embedding / BERT4Rec item seq)."""
-    return banked_embedding_bag(t, idx, dist, reduce_bag=False)
+    return banked_embedding_bag(t, idx, dist, reduce_bag=False,
+                                bank_live=bank_live)
 
 
 def tiered_embedding_bag(fp_packed: Array, tt, idx: Array,
@@ -617,7 +696,8 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
                               cache_idx: Array, residual_idx: Array,
                               dist: DistCtx | None, *, backend: str = "auto",
                               bwd_backend: str = "auto", tile_b: int = 8,
-                              interpret: bool | None = None) -> Array:
+                              interpret: bool | None = None,
+                              bank_live: Array | None = None) -> Array:
     """Cache-aware fused lookup (paper Fig. 7): one stage-2 pass computes
     ``Σ cache_partials + Σ residual_rows`` per bag.
 
@@ -626,25 +706,39 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
     same axis; the combined partial takes ONE psum (half the stage-3 traffic
     of two separate lookups). ``bwd_backend='pallas'`` routes the dual
     gradient scatter (EMT + cache table) through the sorted-run kernel.
+
+    ``bank_live`` masks BOTH tables: a dead bank loses its EMT rows and its
+    cache entries alike (they share the physical bank), each resolving to the
+    zero-row degraded substitute. Same zero-recompile argument contract as
+    ``banked_embedding_bag``.
     """
     backend = _resolve_backend(backend)
     bwd = _resolve_bwd(bwd_backend, backend)
     interpret = _default_interpret(interpret)
 
     if dist is None:
+        if bank_live is None:
+            e_bank, c_bank = t.remap_bank, cache.remap_bank
+            my = jnp.full((), -1, jnp.int32)
+        else:
+            e_bank = _binary_live_map(t.remap_bank, bank_live)
+            c_bank = _binary_live_map(cache.remap_bank, bank_live)
+            my = jnp.zeros((), jnp.int32)
         if backend == "pallas":
             return _pallas_cache_bag(
                 (tile_b, interpret, bwd), t.packed, cache.packed,
-                t.remap_bank, t.flat_remap(), cache.remap_bank,
-                cache.flat_remap(), jnp.full((), -1, jnp.int32),
-                cache_idx, residual_idx)
+                e_bank, t.flat_remap(), c_bank,
+                cache.flat_remap(), my, cache_idx, residual_idx)
         zero = jnp.zeros((1,), jnp.int32)
+        scan_bank = None if bank_live is None else e_bank
+        scan_cbank = None if bank_live is None else c_bank
+        scan_my = None if bank_live is None else my
         part = _bag_partial_scan(t.packed, residual_idx,
-                                 remap=t.flat_remap(), bank=None,
-                                 my_bank=None, off=zero)
+                                 remap=t.flat_remap(), bank=scan_bank,
+                                 my_bank=scan_my, off=zero)
         return part + _bag_partial_scan(
-            cache.packed, cache_idx, remap=cache.flat_remap(), bank=None,
-            my_bank=None, off=zero).astype(part.dtype)
+            cache.packed, cache_idx, remap=cache.flat_remap(),
+            bank=scan_cbank, my_bank=scan_my, off=zero).astype(part.dtype)
 
     P = jax.sharding.PartitionSpec
     dp_ok = cache_idx.shape[0] % dist.dp_size() == 0
@@ -672,13 +766,18 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
                 off=zero).astype(part.dtype)
         return jax.lax.psum(part, bank)
 
+    if bank_live is None:
+        e_map, c_map = t.remap_bank, cache.remap_bank
+    else:
+        e_map = _effective_bank_map(t.remap_bank, bank_live, t.n_banks)
+        c_map = _effective_bank_map(cache.remap_bank, bank_live, cache.n_banks)
     return shard_map(
         fn, mesh=dist.mesh,
         in_specs=(P(bank, None), P(bank, None), P(), P(), P(), P(),
                   ci_spec, ri_spec),
         out_specs=out_spec,
-    )(t.packed, cache.packed, t.remap_bank, t.remap_slot,
-      cache.remap_bank, cache.remap_slot, cache_idx, residual_idx)
+    )(t.packed, cache.packed, e_map, t.remap_slot,
+      c_map, cache.remap_slot, cache_idx, residual_idx)
 
 
 # ---------------------------------------------------------------------------

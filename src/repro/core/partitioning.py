@@ -101,6 +101,8 @@ def non_uniform_partition(
     capacity_rows: int | None = None,
     batch: int = 1,
     row_weights: np.ndarray | None = None,
+    bank_capacity_rows: np.ndarray | None = None,
+    bank_cost: np.ndarray | None = None,
 ) -> PartitionPlan:
     """§3.2: greedy frequency bin-packing with a fixed number of bins.
 
@@ -114,6 +116,18 @@ def non_uniform_partition(
     (bytes moved per bank, Eq. 1's bandwidth term) instead of row reads;
     ``plan.load_per_bank`` then reports byte-load. Capacity still counts
     ROWS (the packed arrays stay rectangular at ``rows_per_bank``).
+
+    bank_capacity_rows: optional (n_banks,) per-bank row budgets overriding
+    ``capacity_rows`` — the fault-tolerance hook: a DEAD bank gets capacity
+    0 and is excluded from packing entirely, so the replan re-packs its rows
+    onto the survivors. Raises with a capacity diagnosis when the surviving
+    banks cannot hold the vocab.
+
+    bank_cost: optional (n_banks,) load multiplier per bank — the straggler
+    hook: a bank observed k-times slower ACCOUNTS each accepted row at k x
+    its frequency, so the greedy sheds load off slow banks exactly like it
+    sheds hot rows off loaded ones. ``plan.load_per_bank`` still reports the
+    raw (uncosted) traffic.
     """
     vocab = freq.shape[0]
     if row_weights is not None:
@@ -124,12 +138,31 @@ def non_uniform_partition(
                                                          np.float64)
     if capacity_rows is None:
         capacity_rows = vocab  # uncapped
-    if n_banks * capacity_rows < vocab:
-        raise ValueError(f"{n_banks} banks x {capacity_rows} rows < vocab {vocab}")
+    if bank_capacity_rows is None:
+        cap_of = np.full(n_banks, capacity_rows, dtype=np.int64)
+    else:
+        cap_of = np.asarray(bank_capacity_rows, np.int64)
+        if cap_of.shape != (n_banks,):
+            raise ValueError(f"bank_capacity_rows {cap_of.shape} != "
+                             f"({n_banks},)")
+        cap_of = np.minimum(cap_of, capacity_rows)
+    if cap_of.sum() < vocab:
+        n_live = int((cap_of > 0).sum())
+        raise ValueError(
+            f"capacity exhausted: {n_live}/{n_banks} banks with "
+            f"{int(cap_of.sum())} total rows < vocab {vocab} — increase "
+            f"banks or capacity (after a bank failure: raise the per-bank "
+            f"slack so survivors can absorb the dead bank's rows)")
+    cost_of = np.ones(n_banks, dtype=np.float64) if bank_cost is None \
+        else np.asarray(bank_cost, np.float64)
+    if cost_of.shape != (n_banks,):
+        raise ValueError(f"bank_cost {cost_of.shape} != ({n_banks},)")
     order = np.argsort(-freq, kind="stable")
     bank_of_row = np.full(vocab, -1, dtype=np.int32)
-    # heap of (load, rows_used, bank)
-    heap: list[tuple[float, int, int]] = [(0.0, 0, b) for b in range(n_banks)]
+    # heap of (costed load, rows_used, bank); zero-capacity (dead) banks
+    # never enter it
+    heap: list[tuple[float, int, int]] = [(0.0, 0, b) for b in range(n_banks)
+                                          if cap_of[b] > 0]
     heapq.heapify(heap)
     parked: list[tuple[float, int, int]] = []
     i = 0
@@ -138,18 +171,18 @@ def non_uniform_partition(
         group = order[i:j]
         gload = float(freq[group].sum())
         # pop until a bank with capacity for the whole group appears
-        while heap and heap[0][1] + (j - i) > capacity_rows:
+        while heap and heap[0][1] + (j - i) > cap_of[heap[0][2]]:
             parked.append(heapq.heappop(heap))
         if not heap:
             raise ValueError("capacity exhausted — increase banks or capacity")
         load, used, b = heapq.heappop(heap)
         bank_of_row[group] = b
-        heapq.heappush(heap, (load + gload, used + (j - i), b))
+        heapq.heappush(heap, (load + gload * cost_of[b], used + (j - i), b))
         # full banks stay parked (they can never take more rows)
-        keep = [p for p in parked if p[1] < capacity_rows]
+        keep = [p for p in parked if p[1] < cap_of[p[2]]]
         for p in keep:
             heapq.heappush(heap, p)
-        parked = [p for p in parked if p[1] >= capacity_rows]
+        parked = [p for p in parked if p[1] >= cap_of[p[2]]]
         i = j
     return _plan_from_banks(n_banks, bank_of_row, freq)
 

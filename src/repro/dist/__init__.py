@@ -1,10 +1,14 @@
 """Distribution substrate: collectives, sharding policies, fault tolerance.
 
-Three thin modules so model code imports only what it needs:
+Thin modules so model code imports only what it needs:
 
   * ``collectives``  — shard_map'd communication patterns (flash-decode
                        partial-softmax combine, all-axes spreading)
   * ``sharding``     — NamedSharding policies per model family (dry-run cells
                        and device_put of real params)
   * ``fault``        — failure injection, straggler watchdog, restart loop
+                       (exponential backoff + retryable-exception filter)
+  * ``bank_fault``   — per-bank health model (healthy / degraded-slow /
+                       dead) on a deterministic seeded injection schedule,
+                       driving the serve loop's bounded-degraded reads
 """

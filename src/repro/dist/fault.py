@@ -7,6 +7,7 @@ the compiled step, so they compose with any family's step function.
 from __future__ import annotations
 
 import statistics
+import time
 from collections import deque
 from typing import Callable
 
@@ -62,18 +63,40 @@ class StragglerWatchdog:
         return straggler
 
 
+def backoff_schedule(max_restarts: int, *, base: float = 0.05,
+                     factor: float = 2.0, cap: float = 5.0) -> list[float]:
+    """The deterministic (jitterless) delay before each restart:
+    ``min(base * factor**n, cap)`` for restart n — testable by inspection."""
+    return [min(base * factor ** n, cap) for n in range(max_restarts)]
+
+
 def run_with_restarts(loop: Callable[[int], int], *,
                       restore_step: Callable[[], int],
-                      max_restarts: int = 8) -> int:
+                      max_restarts: int = 8,
+                      retryable: tuple = (Exception,),
+                      base_backoff: float = 0.05,
+                      backoff_factor: float = 2.0,
+                      max_backoff: float = 5.0,
+                      sleep: Callable[[float], None] = time.sleep) -> int:
     """Run ``loop(start_step)`` to completion, restarting from
     ``restore_step()`` (the latest durable checkpoint) after each crash.
-    Returns the loop's final return value; re-raises once the restart budget
-    is exhausted."""
+
+    Only exceptions matching ``retryable`` are retried — anything else
+    (assertion failures, keyboard interrupts, OOMs you have classified as
+    fatal) re-raises immediately, so a deterministic bug is never retried
+    into the restart budget. Each restart waits a deterministic exponential
+    backoff (``min(base * factor**n, cap)``, no jitter — replayable in
+    tests; ``sleep`` is injectable for the same reason). Returns the loop's
+    final return value; re-raises once the restart budget is exhausted.
+    """
+    delays = backoff_schedule(max_restarts, base=base_backoff,
+                              factor=backoff_factor, cap=max_backoff)
     attempt = 0
     while True:
         try:
             return loop(restore_step())
-        except Exception:
+        except retryable:
             attempt += 1
             if attempt > max_restarts:
                 raise
+            sleep(delays[attempt - 1])

@@ -100,6 +100,28 @@ def main() -> None:
                          "not beat the incumbent's projected max-bank share "
                          "by this relative margin (0 = replan on every "
                          "drifted check)")
+    ap.add_argument("--inject-bank-failure", action="append", default=[],
+                    metavar="BATCH:BANK[:STATE[:FACTOR]]",
+                    help="fault-tolerant serving lane (dlrm --adaptive, "
+                         "non_uniform): kill bank BANK at micro-batch BATCH "
+                         "(state 'dead', the default), slow it (state "
+                         "'degraded', FACTOR x), or revive it ('healthy'). "
+                         "Repeatable. Serving continues through the failure "
+                         "with bounded-degraded reads; recovery re-packs the "
+                         "dead bank's rows onto survivors via the replan "
+                         "lane")
+    ap.add_argument("--straggler-factor", type=float, default=3.0,
+                    help="StragglerWatchdog threshold: a micro-batch whose "
+                         "modeled bank time exceeds this multiple of the "
+                         "running median flags its slowest bank, feeding a "
+                         "latency penalty into the planner's load model")
+    ap.add_argument("--min-recoveries", type=int, default=0,
+                    help="exit nonzero unless at least this many "
+                         "bank-failure recoveries completed AND the fault "
+                         "contracts held (degradation confined to dead-bank "
+                         "rows, post-recovery bit-parity with a never-failed "
+                         "run, one serve executable) — the CI "
+                         "failure-injection contract")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -155,6 +177,13 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
                                 DriftingZipfTrace, ReplanConfig,
                                 dlrm_drifting_batch, rows_from_sparse)
 
+    if args.inject_bank_failure:
+        assert args.partition == "non_uniform", (
+            "--inject-bank-failure rides the non_uniform adaptive path "
+            "(cache_aware recovery packing is a ROADMAP item)")
+        assert args.quant == "off", ("--inject-bank-failure serves the "
+                                     "full-precision path")
+        return _main_adaptive_fault(args, spec, cfg, mod)
     if args.partition == "cache_aware":
         assert args.quant == "off", ("--quant rides the non_uniform adaptive "
                                      "path; the cache+residual tiered "
@@ -304,6 +333,204 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
                     f"(need >= {args.min_swaps}), serve executables="
                     f"{executables} (need 1), "
                     f"re-tier parity={verify.get('tier_ok')}")
+
+
+def _main_adaptive_fault(args, spec, cfg, mod) -> None:
+    """Fault-tolerant serving: the adaptive loop with an injected per-bank
+    fault schedule. The serve step takes a ``bank_live`` mask as one more
+    swap-style ARGUMENT and returns (scores, degraded_read_count); a bank
+    death triggers the recovery replan (rows re-packed onto survivors
+    through the versioned migrate/swap lane), and degraded-slow banks are
+    caught by the StragglerWatchdog and shed load via planner penalties.
+
+    Contracts (hard exit with --min-recoveries): degradation confined to
+    dead-bank rows (count==0 requests bit-match a never-failed run even
+    MID-FAILURE), post-recovery batches fully bit-match a never-failed run
+    with zero degraded reads, and the whole failure -> replan -> recovery
+    cycle uses ONE serve executable. The never-failed reference is the same
+    executable evaluated against the ORIGINAL pack + all-live mask — the
+    unsharded bag scan sums bag entries in index order whatever the plan, so
+    cross-plan bit-parity is exact, not approximate.
+    """
+    from repro.core.embedding import BankedTable
+    from repro.core.partitioning import non_uniform_partition
+    from repro.dist.bank_fault import BankFaultState
+    from repro.dist.fault import StragglerWatchdog
+    from repro.serve.serve_step import (MicroBatcher, Request,
+                                        build_recsys_serve_degraded_adaptive)
+    from repro.workload import (AdaptiveEmbeddingRuntime, DriftConfig,
+                                DriftingZipfTrace, ReplanConfig,
+                                dlrm_drifting_batch, rows_from_sparse)
+
+    banks = args.banks
+    V = cfg.total_vocab
+    cap = int(np.ceil(V / banks) * (1.0 + args.capacity_slack))
+    plan = non_uniform_partition(np.ones(V), banks, capacity_rows=cap)
+    params, statics = mod.init_params(cfg, jax.random.key(args.seed),
+                                      plan=plan, rows_per_bank=cap)
+    offs = np.asarray(statics["field_offsets"])
+    fault = BankFaultState.from_specs(banks, args.inject_bank_failure)
+    probe = CompileProbe()
+
+    table = BankedTable(packed=params["emb_packed"],
+                        remap_bank=statics["remap_bank"],
+                        remap_slot=statics["remap_slot"],
+                        n_banks=banks, rows_per_bank=cap)
+    rcfg = ReplanConfig.for_vocab(V, banks, capacity_rows=cap,
+                                  check_every=args.replan_every,
+                                  hysteresis=args.hysteresis)
+    runtime = AdaptiveEmbeddingRuntime(table, plan, rcfg,
+                                       init_freq=np.ones(V))
+    watchdog = StragglerWatchdog(factor=args.straggler_factor)
+
+    serve = jax.jit(build_recsys_serve_degraded_adaptive(
+        mod, cfg, statics, backend=args.backend))
+    all_live = jnp.ones(banks, dtype=bool)
+    # the never-failed reference pack: same executable, original arrays
+    orig = (params["emb_packed"], statics["remap_bank"],
+            statics["remap_slot"])
+
+    def observe(feats, n_real):
+        sp = np.asarray(feats["sparse"])[:n_real]
+        runtime.observe_batch(rows_from_sparse(sp, offs))
+
+    mh = max(cfg.multi_hot, 1)
+    traces = [DriftingZipfTrace(
+        DriftConfig(n_items=v, zipf_a=1.05, avg_bag=float(mh),
+                    rotate_every=args.drift_rotate_every, rotate_frac=0.25),
+        seed=args.seed + f) for f, v in enumerate(cfg.vocab_sizes)]
+    rng = np.random.default_rng(args.seed)
+
+    def one_request(rid):
+        sparse = dlrm_drifting_batch(traces, 1, cfg.multi_hot)[0]
+        return {"dense": rng.standard_normal(cfg.n_dense).astype(np.float32),
+                "sparse": sparse}
+
+    mb = MicroBatcher(args.batch, one_request(-1), observer=observe)
+    st = {"batch": 0, "handled_dead": frozenset(), "penalized": False,
+          "fail_batch": None, "recover_batch": None,
+          "confine_ok": True, "confine_checked": 0,
+          "recover_parity": None, "degraded_reads": 0, "degraded_batches": 0}
+    recoveries: list = []
+
+    def never_failed(feats):
+        p0 = {**params, "emb_packed": orig[0]}
+        ref, _ = serve(p0, orig[1], orig[2], all_live, feats)
+        return np.asarray(ref)
+
+    def run_batch():
+        b = st["batch"]
+        st["batch"] += 1
+        for e in fault.advance(b):
+            print(f"  [fault @batch {b}] {e}")
+            if st["fail_batch"] is None and fault.dead_banks():
+                st["fail_batch"] = b
+        live = fault.live_mask()
+        reqs, feats = mb.next_batch()
+        p = {**params, "emb_packed": runtime.table.packed}
+        scores, counts = serve(p, runtime.table.remap_bank,
+                               runtime.table.remap_slot,
+                               jnp.asarray(live), feats)
+        jax.block_until_ready(scores)
+        counts = np.asarray(counts)
+        n_deg = int(counts.sum())
+        st["degraded_reads"] += n_deg
+        if n_deg > 0:
+            st["degraded_batches"] += 1
+            # confinement: requests that touched NO dead-bank row must be
+            # bit-exact vs the never-failed run, mid-failure included
+            if st["confine_checked"] < 2:
+                st["confine_checked"] += 1
+                ref = never_failed(feats)
+                exact = np.asarray(scores)[counts == 0] == ref[counts == 0]
+                ok = bool(exact.all()) and (counts > 0).any()
+                st["confine_ok"] = st["confine_ok"] and ok
+                print(f"  [degraded @batch {b}] {n_deg} degraded reads, "
+                      f"{int((counts > 0).sum())}/{len(counts)} requests; "
+                      f"clean requests bit-exact: {ok}")
+        elif st["recover_batch"] is None and st["fail_batch"] is not None \
+                and st["handled_dead"]:
+            # first clean batch after the recovery swap: full bit-parity
+            st["recover_batch"] = b
+            ref = never_failed(feats)
+            st["recover_parity"] = bool(
+                (np.asarray(scores) == ref).all())
+            print(f"  [recovered @batch {b}] 0 degraded reads "
+                  f"({b - st['fail_batch']} batches after failure); "
+                  f"bit-parity with never-failed run: "
+                  f"{st['recover_parity']}")
+        mb.complete(reqs)
+
+        # recovery lane: any not-yet-handled bank death replans NOW
+        dead = frozenset(fault.dead_banks())
+        if dead != st["handled_dead"]:
+            event = runtime.on_bank_failure(live)
+            st["handled_dead"] = dead
+            recoveries.append(event)
+            print(f"  [recovery replan @batch {b}] dead={sorted(dead)} "
+                  f"reason={event.reason} "
+                  f"recovery={event.recovery_s * 1e3:.1f}ms "
+                  f"imbalance {event.old_imbalance:.3f} -> "
+                  f"{event.new_imbalance:.3f}")
+            return
+        # straggler lane: modeled per-bank batch time (reads x slow factor;
+        # banks run in parallel, so the batch takes the slowest bank's
+        # time). The watchdog sees EVERY batch — healthy batches build the
+        # median baseline a degraded bank must then exceed.
+        sf = fault.slow_factor()
+        rows = rows_from_sparse(np.asarray(feats["sparse"]), offs)
+        rows = rows[rows >= 0]
+        reads = np.bincount(
+            np.asarray(runtime.plan.bank_of_row)[rows], minlength=banks)
+        t_bank = reads.astype(np.float64) * sf
+        if watchdog.observe(b, float(t_bank.max())) and not st["penalized"]:
+            slow = int(np.argmax(t_bank))
+            pen = np.ones(banks)
+            pen[slow] = float(max(sf[slow], 1.0))
+            event = runtime.on_straggler(pen)
+            st["penalized"] = True
+            print(f"  [straggler @batch {b}] bank {slow} flagged "
+                  f"(x{pen[slow]:g}); penalty replan "
+                  f"imbalance {event.old_imbalance:.3f} -> "
+                  f"{event.new_imbalance:.3f}")
+            return
+        event = runtime.end_batch()            # ordinary drift lane
+        if event is not None:
+            print(f"  [swap @batch {event.batch}] {event.update.report} "
+                  f"imbalance {event.old_imbalance:.3f} -> "
+                  f"{event.new_imbalance:.3f}")
+
+    for rid in range(args.requests):
+        mb.submit(Request(rid=rid, features=one_request(rid)))
+        if len(mb.queue) >= args.batch:
+            run_batch()
+    while mb.ready():
+        run_batch()
+
+    lat = sorted(mb.latencies)
+    p50 = lat[len(lat) // 2] * 1e3
+    rp = runtime.replanner
+    executables = serve._cache_size()
+    n_rec = len([e for e in recoveries if e.reason == "bank_failure"])
+    print(f"served {len(lat)} requests  p50={p50:.2f}ms "
+          f"p99={mb.p99() * 1e3:.2f}ms  replans={rp.n_replans} "
+          f"skipped={rp.n_skipped_replans}")
+    print(f"fault lane: {len(fault.fired)} fault(s) fired, "
+          f"{st['degraded_reads']} degraded reads over "
+          f"{st['degraded_batches']} batch(es), {n_rec} recovery replan(s), "
+          f"{len(watchdog.events)} straggler event(s); "
+          f"confinement {'OK' if st['confine_ok'] else 'VIOLATED'}, "
+          f"recovery parity {st['recover_parity']}, "
+          f"{executables} serve executable(s)")
+    if args.min_recoveries > 0:
+        ok = (n_rec >= args.min_recoveries and executables == 1
+              and st["confine_ok"] and st["recover_parity"] is True)
+        if not ok:
+            raise SystemExit(
+                f"fault-serve contract violated: recoveries={n_rec} "
+                f"(need >= {args.min_recoveries}), serve executables="
+                f"{executables} (need 1), confinement={st['confine_ok']}, "
+                f"recovery parity={st['recover_parity']}")
 
 
 def _main_adaptive_cached(args, spec, cfg, mod) -> None:

@@ -147,7 +147,8 @@ def dot_interaction(z: Array) -> Array:
 
 def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
             dist: DistCtx | None = None, *, backend: str = "auto",
-            bwd_backend: str = "auto", tiered=None) -> Array:
+            bwd_backend: str = "auto", tiered=None,
+            bank_live: Array | None = None) -> Array:
     """batch: dense (B, n_dense) fp; sparse (B, F) int32 (one-hot fields) or
     (B, F, L) multi-hot. Returns logits (B,).
 
@@ -168,11 +169,19 @@ def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
     arrays to the compiled step — zero recompiles (launch/serve.py --quant).
     One-hot fields fold into length-1 bags on this path (same semantics as
     the dense gather).
+
+    ``bank_live`` ((n_banks,) bool jit argument) enables bounded-degraded
+    serving through a bank failure: reads homed on dead banks resolve to the
+    zero row (core/embedding.py). Not supported with ``tiered`` — the fault
+    lane runs the full-precision path.
     """
     dense, sparse = batch["dense"], batch["sparse"]
     B = dense.shape[0]
     t = _banked(params, statics)
     if tiered is not None:
+        if bank_live is not None:
+            raise ValueError("bank_live degraded serving is not wired into "
+                             "the tiered lookup path")
         bags = sparse if sparse.ndim == 3 else sparse[..., None]
         emb = tiered_embedding_bag(                              # (B, F, D)
             params["emb_packed"], tiered, bags, dist, backend=backend,
@@ -182,11 +191,11 @@ def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
         # one-hot fields: dense gather; per-field ids -> union-vocab rows
         rows = sparse + statics["field_offsets"][None, :]
         rows = jnp.where(sparse >= 0, rows, -1)
-        emb = banked_gather(t, rows, dist)                       # (B, F, D)
+        emb = banked_gather(t, rows, dist, bank_live=bank_live)  # (B, F, D)
     else:
         emb = banked_embedding_bag(                              # (B, F, D)
             t, sparse, dist, backend=backend, bwd_backend=bwd_backend,
-            field_offsets=statics["field_offsets"])
+            field_offsets=statics["field_offsets"], bank_live=bank_live)
     emb = shard(emb, dist, dp(dist), None, None).astype(cfg.dtype)
 
     x = mlp_apply(params["bot"], dense.astype(cfg.dtype))        # (B, D)
@@ -202,7 +211,8 @@ def forward_cached(cfg: DLRMConfig, params: dict, statics: dict,
                    dist: DistCtx | None = None, *, backend: str = "auto",
                    bwd_backend: str = "auto",
                    remap_bank: Array | None = None,
-                   remap_slot: Array | None = None) -> Array:
+                   remap_slot: Array | None = None,
+                   bank_live: Array | None = None) -> Array:
     """Cache-aware path (Fig. 7): batch carries rewritten multi-hot bags:
     ``cache_idx`` (B, T, Lc) entries into the partial-sum cache table and
     ``residual_idx`` (B, T, Lr) union-vocab rows. Bag sum = cache partials +
@@ -222,7 +232,8 @@ def forward_cached(cfg: DLRMConfig, params: dict, statics: dict,
     emb = banked_cache_residual_bag(t, cache_table, batch["cache_idx"],
                                     batch["residual_idx"], dist,
                                     backend=backend,
-                                    bwd_backend=bwd_backend)
+                                    bwd_backend=bwd_backend,
+                                    bank_live=bank_live)
     x = mlp_apply(params["bot"], dense.astype(cfg.dtype))
     z = jnp.concatenate([x[:, None], emb], axis=1)
     inter = dot_interaction(z)

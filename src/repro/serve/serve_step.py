@@ -64,6 +64,34 @@ def build_recsys_serve_cached_adaptive(family_mod, cfg, statics, dist=None,
     return serve
 
 
+def build_recsys_serve_degraded_adaptive(family_mod, cfg, statics, dist=None,
+                                         backend: str | None = None):
+    """CTR scoring that stays up through bank failures: the returned
+    ``serve(params, remap_bank, remap_slot, bank_live, batch)`` takes the
+    per-bank liveness mask as ONE MORE swap-style argument next to the remap
+    vectors — reads homed on a dead bank resolve to the zero row
+    (core/embedding.py's bounded-degradation contract), and the step returns
+    ``(scores, degraded_read_count)`` so every response carries exactly how
+    many row contributions it is missing (0 = bit-exact). All-live serving
+    through this step is bit-identical to the non-degraded step — the fault
+    lane compiles ONE executable and flips the mask argument.
+    """
+    from repro.core.embedding import degraded_row_counts
+    kw = {} if backend is None else {"backend": backend}
+
+    def serve(params, remap_bank, remap_slot, bank_live, batch):
+        st = {**statics, "remap_bank": remap_bank, "remap_slot": remap_slot}
+        logits = family_mod.forward(cfg, params, st, batch, dist,
+                                    bank_live=bank_live, **kw)
+        sparse = batch["sparse"]
+        offs = st["field_offsets"]
+        offs = offs[None, :] if sparse.ndim == 2 else offs[None, :, None]
+        rows = jnp.where(sparse >= 0, sparse + offs, -1)
+        counts = degraded_row_counts(remap_bank, bank_live, rows)
+        return jax.nn.sigmoid(logits), counts
+    return serve
+
+
 def build_recsys_serve_tiered_adaptive(family_mod, cfg, statics, dist=None,
                                        backend: str | None = None):
     """CTR scoring over TIERED-precision embeddings under the adaptive

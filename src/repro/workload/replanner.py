@@ -146,6 +146,39 @@ class Replanner:
         self.n_replans = 0
         self.n_skipped_replans = 0         # hysteresis: drifted but kept plan
         self.last_report: DriftReport | None = None
+        # fault-tolerance state (all-healthy defaults are exactly the legacy
+        # planner: no per-bank caps, unit costs — bit-identical plans)
+        self.bank_live = np.ones(cfg.n_banks, dtype=bool)
+        self.bank_penalty = np.ones(cfg.n_banks, dtype=np.float64)
+        # realized-hit-rate feed (cache_aware): what the serve loop actually
+        # saved vs what the miner predicted at the last commit
+        self._pred_saved_per_bag: float | None = None
+        self._realized_saved = 0.0
+        self._realized_bags = 0
+
+    # -- fault state ---------------------------------------------------------
+
+    def set_bank_health(self, live_mask: np.ndarray) -> None:
+        """(n_banks,) bool — False marks a DEAD bank. Every subsequent
+        ``build_plan`` treats dead banks as zero-capacity so their rows
+        re-pack onto the survivors (the recovery half of bounded-degraded
+        serving; the runtime's ``on_bank_failure`` drives this)."""
+        live = np.asarray(live_mask, dtype=bool)
+        if live.shape != (self.cfg.n_banks,):
+            raise ValueError(f"live_mask {live.shape} != ({self.cfg.n_banks},)")
+        self.bank_live = live.copy()
+
+    def set_bank_penalty(self, penalty: np.ndarray) -> None:
+        """(n_banks,) latency multipliers (1.0 = nominal). A bank observed
+        k-times slower accounts each accepted row at k x its frequency, so
+        the greedy sheds load off stragglers like it sheds hot rows off
+        loaded banks (StragglerWatchdog feedback)."""
+        pen = np.asarray(penalty, dtype=np.float64)
+        if pen.shape != (self.cfg.n_banks,):
+            raise ValueError(f"penalty {pen.shape} != ({self.cfg.n_banks},)")
+        if (pen <= 0).any():
+            raise ValueError("bank penalties must be positive multipliers")
+        self.bank_penalty = pen.copy()
 
     # -- feeding ------------------------------------------------------------
 
@@ -160,6 +193,25 @@ class Replanner:
             self.telemetry.observe(bag)
             self._recent_bags.append(np.asarray(bag))
 
+    def observe_cache_hits(self, saved_reads: float, n_bags: int) -> None:
+        """Cache-aware serving feedback: ``saved_reads`` row reads were
+        actually absorbed by the installed cache over ``n_bags`` bags (a bag
+        rewritten to c entries + r residuals saves ``len(bag) - c - r``).
+        Accumulated until the next commit; see ``realized_hit_rate``."""
+        self._realized_saved += float(saved_reads)
+        self._realized_bags += int(n_bags)
+
+    def realized_hit_rate(self) -> float:
+        """REALIZED / PREDICTED saved-reads-per-bag for the installed cache,
+        clipped to [0, 1]. 1.0 until both sides exist (no feedback, or no
+        committed prediction) — the discount only ever shrinks benefits, and
+        only once there is evidence the miner over-promised."""
+        if self._pred_saved_per_bag is None or self._pred_saved_per_bag <= 0 \
+                or self._realized_bags == 0:
+            return 1.0
+        realized = self._realized_saved / self._realized_bags
+        return float(np.clip(realized / self._pred_saved_per_bag, 0.0, 1.0))
+
     # -- planning -----------------------------------------------------------
 
     def build_plan(self, freq: np.ndarray
@@ -169,6 +221,11 @@ class Replanner:
         ``cfg.quant`` set, tiers come first and the greedy balances BYTE
         load (freq x bytes-per-row under the fresh tier map)."""
         cfg = self.cfg
+        # fault/straggler state folds into every plan — but ONLY when
+        # non-trivial, so all-healthy serving stays bit-identical to the
+        # legacy planner
+        all_live = bool(self.bank_live.all())
+        unit_cost = bool((self.bank_penalty == 1.0).all())
         if cfg.partitioner == "non_uniform":
             row_weights = None
             tiers = None
@@ -179,11 +236,23 @@ class Replanner:
                 row_weights = bytes_of_tier(
                     tiers, cfg.quant_dim, cfg.quant.hot_dtype
                 ).astype(np.float64)
+            bank_caps = None
+            if not all_live:
+                per_bank = cfg.capacity_rows if cfg.capacity_rows is not None \
+                    else self.vocab
+                bank_caps = np.where(self.bank_live, per_bank, 0)
             plan = non_uniform_partition(
                 freq, cfg.n_banks, capacity_rows=cfg.capacity_rows,
-                row_weights=row_weights)
+                row_weights=row_weights, bank_capacity_rows=bank_caps,
+                bank_cost=None if unit_cost else self.bank_penalty)
             return plan, None, tiers
         if cfg.partitioner == "cache_aware":
+            if not all_live:
+                raise ValueError(
+                    "cache_aware replanning cannot exclude dead banks yet — "
+                    "Algorithm 1's joint cache/EMT packing has no per-bank "
+                    "capacity mask; serve fault recovery runs on the "
+                    "non_uniform partitioner")
             if not self._recent_bags:
                 raise ValueError("cache_aware replanning needs observe_bags() "
                                  "traffic to re-mine co-occurrence groups")
@@ -191,8 +260,14 @@ class Replanner:
                 list(self._recent_bags), top_items=cfg.mine_top_items,
                 max_groups=cfg.mine_max_groups,
                 min_support=cfg.mine_min_support)
+            # discount the miner's predicted benefits by the hit rate the
+            # SERVED traffic realized on the incumbent cache — an
+            # over-promising miner stops distorting the bank packing
+            rate = self.realized_hit_rate()
+            benefits = cp.benefits if rate >= 1.0 \
+                else np.asarray(cp.benefits, np.float64) * rate
             plan = cache_aware_partition(
-                freq, cp.groups, cp.benefits, cfg.n_banks,
+                freq, cp.groups, benefits, cfg.n_banks,
                 emt_capacity_rows=cfg.capacity_rows)
             return plan, cp, None
         raise ValueError(f"unknown partitioner {cfg.partitioner!r}")
@@ -247,6 +322,21 @@ class Replanner:
         if cache_fixed is None:
             cache_fixed = self._cap(cache_plan, plan)
         self.current_cache_fixed = cache_fixed
+        # rebase the realized-hit-rate baseline: predict what the FRESH cache
+        # should save per bag on the recent window, reset the realized feed
+        self._pred_saved_per_bag = None
+        self._realized_saved = 0.0
+        self._realized_bags = 0
+        if cache_fixed is not None and self._recent_bags:
+            from repro.core.cache_runtime import rewrite_bag
+            saved = 0
+            bags = list(self._recent_bags)
+            for bag in bags:
+                b = np.asarray(bag)
+                b = b[b >= 0]
+                c, r = rewrite_bag(b, cache_fixed.plan)
+                saved += len(b) - len(c) - len(r)
+            self._pred_saved_per_bag = saved / max(len(bags), 1)
         return PlanUpdate(plan=plan, freq=freq, report=report,
                           cache_plan=cache_plan, cache_fixed=cache_fixed,
                           tier_of_row=tier_of_row)

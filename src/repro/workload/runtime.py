@@ -69,6 +69,12 @@ class SwapEvent:
     tier_promoted: int = 0              # rows moved to a MORE precise tier
     tier_demoted: int = 0               # rows moved to a LESS precise tier
     tier_requantized: int = 0           # rows whose payload was rebuilt
+    # what triggered the swap: "drift" (detector cadence), "bank_failure"
+    # (recovery re-pack off dead banks), "straggler" (penalty-driven shed)
+    reason: str = "drift"
+    # bank_failure only: wall-clock seconds from failure handling entry to
+    # the recovered table being live (replan + migrate + swap)
+    recovery_s: float | None = None
 
 
 class AdaptiveEmbeddingRuntime:
@@ -162,13 +168,13 @@ class AdaptiveEmbeddingRuntime:
 
     # -- migration + swap ---------------------------------------------------
 
-    def apply(self, update: PlanUpdate) -> SwapEvent:
+    def apply(self, update: PlanUpdate, *, reason: str = "drift") -> SwapEvent:
         new_table = migrate_table(self.table, update.plan, self.dist,
                                   rows_per_bank=self.table.rows_per_bank)
-        return self.apply_migrated(update, new_table)
+        return self.apply_migrated(update, new_table, reason=reason)
 
-    def apply_migrated(self, update: PlanUpdate,
-                       new_table: BankedTable) -> SwapEvent:
+    def apply_migrated(self, update: PlanUpdate, new_table: BankedTable, *,
+                       reason: str = "drift") -> SwapEvent:
         """Swap in a table the CALLER already migrated under ``update.plan``
         (the train loop migrates params + optimizer state together through
         ``migrate_packed_leaves`` and hands the resulting table here); the
@@ -182,7 +188,8 @@ class AdaptiveEmbeddingRuntime:
         self._batch = max(self._batch, self.replanner._batches)
         event = SwapEvent(batch=self._batch, update=update,
                           old_imbalance=old_imb,
-                          new_imbalance=update.plan.imbalance())
+                          new_imbalance=update.plan.imbalance(),
+                          reason=reason)
         # the swap: one host-side rebind of all plan-coupled references —
         # in-flight micro-batches already captured the old arrays, the next
         # micro-batch picks up the new ones
@@ -227,6 +234,38 @@ class AdaptiveEmbeddingRuntime:
             self.on_swap(event)
         return event
 
+    # -- fault recovery ------------------------------------------------------
+
+    def on_bank_failure(self, live_mask: np.ndarray) -> SwapEvent:
+        """Recovery lane: a bank (or banks) died — re-pack their rows onto
+        the survivors NOW, through the ordinary versioned migrate/swap
+        machinery (no drift gate, no hysteresis). The migration gathers every
+        row from the OLD table's positions — in simulation those bytes are
+        still addressable, standing in for the host master table a real
+        deployment would re-pack from (the dead bank's MRAM contents are
+        gone; its rows' authoritative values are not).
+
+        Call AFTER the serve loop has switched to the degraded ``bank_live``
+        argument (reads stay boundedly degraded while this runs). Returns the
+        SwapEvent with ``reason="bank_failure"`` and the measured
+        ``recovery_s`` (failure handled -> recovered table live).
+        """
+        import time
+        t0 = time.monotonic()
+        self.replanner.set_bank_health(live_mask)
+        update = self.replanner.force_replan()
+        event = self.apply(update, reason="bank_failure")
+        event.recovery_s = time.monotonic() - t0
+        return event
+
+    def on_straggler(self, penalty: np.ndarray) -> SwapEvent:
+        """Straggler lane: feed per-bank latency penalties (1.0 = nominal,
+        k = observed k-times slower) into the planner's load model and
+        re-pack immediately — slow banks shed load like hot ones do."""
+        self.replanner.set_bank_penalty(penalty)
+        update = self.replanner.force_replan()
+        return self.apply(update, reason="straggler")
+
     # -- tiered-precision lane accessors ------------------------------------
 
     @property
@@ -261,11 +300,22 @@ class AdaptiveEmbeddingRuntime:
 
     def rewrite(self, union_idx: np.ndarray) -> RewrittenBatch:
         """Host pipeline stage: rewrite a (..., L) union-vocab id batch
-        against the CURRENT cache plan; the result is version-tagged."""
+        against the CURRENT cache plan; the result is version-tagged.
+
+        Also feeds the replanner's realized-hit-rate estimate: a bag of u
+        unique rows rewritten to c entries + r residuals saved ``u - c - r``
+        reads — the next re-mine discounts the miner's predicted benefits
+        by realized/predicted, so an over-promising cache stops distorting
+        the bank packing."""
         if self.rewriter is None:
             raise ValueError("cache side disabled: set "
                              "ReplanConfig.cache_rows_per_bank")
-        return self.rewriter.rewrite_rect(union_idx)
+        rb = self.rewriter.rewrite_rect(union_idx)
+        flat = np.asarray(union_idx).reshape(-1, union_idx.shape[-1])
+        uniq = sum(len(np.unique(row[row >= 0])) for row in flat)
+        used = int((rb.cache_idx >= 0).sum() + (rb.residual_idx >= 0).sum())
+        self.replanner.observe_cache_hits(uniq - used, flat.shape[0])
+        return rb
 
     def cache_table_for(self, version: int) -> BankedTable:
         """The cache table a version-tagged batch must be served against."""

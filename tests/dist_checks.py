@@ -446,6 +446,81 @@ def check_tiered_lookup_sharded():
           np.allclose(np.asarray(g_sh), np.asarray(g_loc), atol=1e-6))
 
 
+def check_degraded_serve_through_failure():
+    """Fault-tolerant serving ON THE MESH: a bank dies mid-stream and the
+    sharded lookup (a) stays bit-identical to the healthy path for requests
+    not touching the dead bank, (b) zero-fills exactly the dead-bank rows
+    (== the healthy path with those ids masked out), then (c) after the
+    recovery replan + sharded migration, bit-matches a fresh pack — the
+    serve-side contract of launch/serve.py --inject-bank-failure."""
+    import dataclasses as dc
+    from repro.core.compat import make_mesh
+    from repro.core.embedding import degraded_row_counts
+    from repro.workload import migrate_table
+    from repro.workload.migrate import permute_packed_rows
+
+    rng = np.random.default_rng(31)
+    V, D, banks = 256, 8, 8
+    cap = 40                         # 1.25x slack: one death is absorbable
+    table = rng.standard_normal((V, D)).astype(np.float32)
+    freq = rng.random(V) + 0.1
+    plan = non_uniform_partition(freq, banks, capacity_rows=cap)
+    t = dc.replace(
+        pack_table(table, plan),
+        packed=permute_packed_rows(
+            jnp.asarray(table), np.arange(V, dtype=np.int32),
+            (plan.bank_of_row.astype(np.int64) * cap
+             + plan.slot_of_row).astype(np.int32), banks * cap),
+        rows_per_bank=cap)
+    mesh = make_mesh((1, banks), ("data", "model"))
+    dist = DistCtx(mesh=mesh, dp_axes=("data",))
+    idx = jnp.asarray(rng.integers(-1, V, (8, 6)), jnp.int32)
+    all_live = jnp.ones(banks, dtype=bool)
+
+    # healthy: the mask argument is a no-op bit-for-bit
+    healthy = banked_embedding_bag(t, idx, dist)
+    with_mask = banked_embedding_bag(t, idx, dist, bank_live=all_live)
+    check("degraded_serve_healthy_mask_noop",
+          (np.asarray(healthy) == np.asarray(with_mask)).all())
+
+    # kill the most-loaded bank: degraded == healthy with dead ids masked
+    dead = int(np.argmax(plan.load_per_bank))
+    live = np.ones(banks, dtype=bool)
+    live[dead] = False
+    got = banked_embedding_bag(t, idx, dist, bank_live=jnp.asarray(live))
+    idx_np = np.asarray(idx)
+    on_dead = (idx_np >= 0) \
+        & (plan.bank_of_row[np.where(idx_np >= 0, idx_np, 0)] == dead)
+    masked = jnp.asarray(np.where(on_dead, -1, idx_np))
+    want = banked_embedding_bag(t, masked, dist)
+    check("degraded_serve_bounded",
+          (np.asarray(got) == np.asarray(want)).all() and on_dead.any())
+    counts = np.asarray(degraded_row_counts(t.remap_bank,
+                                            jnp.asarray(live), idx))
+    check("degraded_serve_counts_confined",
+          (counts == on_dead.sum(axis=-1)).all())
+
+    # recovery: replan off the dead bank, migrate ON THE MESH, bit-match a
+    # fresh pack; the recovered table serves clean (zero degraded reads)
+    plan2 = non_uniform_partition(freq, banks, capacity_rows=cap,
+                                  bank_capacity_rows=np.where(live, cap, 0))
+    t2 = migrate_table(t, plan2, dist, rows_per_bank=cap)
+    fresh = np.zeros((banks * cap, D), np.float32)
+    fresh[plan2.bank_of_row.astype(np.int64) * cap + plan2.slot_of_row] \
+        = table
+    check("degraded_recovery_migration_bitexact",
+          (np.asarray(t2.packed) == fresh).all()
+          and (np.asarray(t2.remap_bank) != dead).all())
+    recovered = banked_embedding_bag(t2, idx, dist,
+                                     bank_live=jnp.asarray(live))
+    counts2 = np.asarray(degraded_row_counts(t2.remap_bank,
+                                             jnp.asarray(live), idx))
+    check("degraded_recovery_serves_clean",
+          (counts2 == 0).all()
+          and np.allclose(np.asarray(recovered), np.asarray(healthy),
+                          atol=1e-6))
+
+
 def check_lm_gspmd_matches_local():
     from repro.configs import get_arch
     from repro.models import transformer as T
@@ -476,6 +551,7 @@ if __name__ == "__main__":
     check_cache_swap_sharded()
     check_pallas_backward_sharded()
     check_tiered_lookup_sharded()
+    check_degraded_serve_through_failure()
     check_lm_gspmd_matches_local()
     if FAILED:
         print("FAILED:", FAILED)

@@ -1,0 +1,359 @@
+"""Fault-tolerant serving: injection schedule, restart backoff, degraded
+reads, masked partitioning, and the replanner/runtime recovery lane."""
+import numpy as np
+import pytest
+
+from repro.core.partitioning import non_uniform_partition
+from repro.dist.bank_fault import (DEAD, DEGRADED, HEALTHY, BankFaultState,
+                                   FaultEvent, parse_fault_spec)
+from repro.dist.fault import (StragglerWatchdog, backoff_schedule,
+                              run_with_restarts)
+
+
+# ---------------------------------------------------------------------------
+# restart driver: deterministic exponential backoff + retryable filter
+# ---------------------------------------------------------------------------
+
+class _Boom(RuntimeError):
+    pass
+
+
+class TestRunWithRestarts:
+    def test_backoff_schedule_values(self):
+        assert backoff_schedule(4, base=0.1, factor=2.0, cap=0.5) \
+            == [0.1, 0.2, 0.4, 0.5]
+
+    def test_restarts_sleep_the_schedule(self):
+        slept = []
+        calls = []
+
+        def loop(start):
+            calls.append(start)
+            if len(calls) < 3:
+                raise _Boom("transient")
+            return 99
+
+        out = run_with_restarts(loop, restore_step=lambda: 7,
+                                retryable=(_Boom,), base_backoff=0.1,
+                                backoff_factor=2.0, sleep=slept.append)
+        assert out == 99
+        assert calls == [7, 7, 7]
+        assert slept == [0.1, 0.2]
+
+    def test_non_retryable_raises_immediately(self):
+        calls = []
+
+        def loop(start):
+            calls.append(start)
+            raise ValueError("deterministic bug")
+
+        with pytest.raises(ValueError):
+            run_with_restarts(loop, restore_step=lambda: 0,
+                              retryable=(_Boom,), sleep=lambda s: None)
+        assert len(calls) == 1          # never retried into the budget
+
+    def test_budget_exhaustion_reraises(self):
+        slept = []
+
+        def loop(start):
+            raise _Boom("always")
+
+        with pytest.raises(_Boom):
+            run_with_restarts(loop, restore_step=lambda: 0, max_restarts=3,
+                              retryable=(_Boom,), base_backoff=0.1,
+                              max_backoff=0.15, sleep=slept.append)
+        assert slept == [0.1, 0.15, 0.15]       # capped, one per restart
+
+
+class TestStragglerWatchdog:
+    def test_flags_and_excludes_stragglers(self):
+        wd = StragglerWatchdog(factor=3.0, min_history=3)
+        for step in range(3):
+            assert not wd.observe(step, 1.0)
+        assert wd.observe(3, 10.0)              # 10 > 3 x median(1.0)
+        # the straggler time was EXCLUDED from history: the baseline median
+        # is still 1.0, so a second slow step still trips
+        assert wd.observe(4, 10.0)
+        assert wd.events == [3, 4]
+
+    def test_min_history_gate(self):
+        wd = StragglerWatchdog(factor=3.0, min_history=5)
+        for step in range(4):
+            assert not wd.observe(step, 1.0)
+        # 4 < min_history: even an egregious time cannot trip yet (it joins
+        # the history instead)
+        assert not wd.observe(4, 100.0)
+        assert wd.observe(5, 1000.0)
+
+
+# ---------------------------------------------------------------------------
+# fault model: specs, schedule determinism, advance/revive
+# ---------------------------------------------------------------------------
+
+class TestBankFaultState:
+    def test_parse_fault_spec(self):
+        e = parse_fault_spec("12:3")
+        assert (e.batch, e.bank, e.state) == (12, 3, DEAD)
+        e = parse_fault_spec("12:3:degraded:4.0")
+        assert (e.state, e.factor) == (DEGRADED, 4.0)
+        assert parse_fault_spec("20:3:healthy").state == HEALTHY
+        with pytest.raises(ValueError):
+            parse_fault_spec("12")
+        with pytest.raises(ValueError):
+            parse_fault_spec("12:3:zombie")
+
+    def test_bank_range_validated(self):
+        with pytest.raises(ValueError):
+            BankFaultState(4, [FaultEvent(batch=1, bank=4)])
+
+    def test_advance_fires_in_order_and_revives(self):
+        st = BankFaultState(4, [
+            FaultEvent(batch=2, bank=1, state=DEAD),
+            FaultEvent(batch=5, bank=2, state=DEGRADED, factor=6.0),
+            FaultEvent(batch=8, bank=1, state=HEALTHY),
+        ])
+        assert st.advance(1) == []
+        assert not st.any_fault()
+        fired = st.advance(2)
+        assert [e.bank for e in fired] == [1]
+        assert st.dead_banks() == [1]
+        assert list(st.live_mask()) == [True, False, True, True]
+        st.advance(6)
+        assert st.degraded_banks() == [2]
+        np.testing.assert_allclose(st.slow_factor(), [1.0, 1.0, 6.0, 1.0])
+        st.advance(8)                       # revival
+        assert st.dead_banks() == []
+        assert not st.any_fault() or st.degraded_banks() == [2]
+        assert list(st.live_mask()) == [True, True, True, True]
+
+    def test_advance_catches_up_past_events(self):
+        st = BankFaultState(2, [FaultEvent(batch=3, bank=0)])
+        # a loop that skips batches still fires everything scheduled earlier
+        assert [e.batch for e in st.advance(10)] == [3]
+
+    def test_random_schedule_deterministic(self):
+        a = BankFaultState.random_schedule(8, 100, seed=42, n_failures=3,
+                                           p_degraded=0.5)
+        b = BankFaultState.random_schedule(8, 100, seed=42, n_failures=3,
+                                           p_degraded=0.5)
+        assert a.schedule == b.schedule
+        c = BankFaultState.random_schedule(8, 100, seed=43, n_failures=3,
+                                           p_degraded=0.5)
+        assert a.schedule != c.schedule
+
+    def test_random_schedule_keeps_a_survivor(self):
+        st = BankFaultState.random_schedule(4, 50, seed=0, n_failures=99)
+        assert len(st.schedule) == 3        # capped at n_banks - 1
+
+
+# ---------------------------------------------------------------------------
+# bounded-degraded reads (core/embedding.py bank_live mask)
+# ---------------------------------------------------------------------------
+
+V, D, BANKS = 256, 8, 4
+
+
+def _setup(seed=0):
+    from repro.core.embedding import pack_table
+    rng = np.random.default_rng(seed)
+    freq = rng.random(V) + 0.1
+    plan = non_uniform_partition(freq, BANKS)
+    table = (rng.standard_normal((V, D)) * 0.1).astype(np.float32)
+    t = pack_table(table, plan)
+    idx = rng.integers(0, V, size=(8, 16)).astype(np.int32)
+    idx[rng.random(idx.shape) < 0.2] = -1
+    return t, plan, idx
+
+
+class TestDegradedReads:
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_dead_bank_equals_masked_indices(self, backend):
+        """The degradation contract: serving with bank b dead is BIT-equal
+        (same backend) to serving with b's rows masked out of the batch."""
+        import jax.numpy as jnp
+
+        from repro.core.embedding import banked_embedding_bag
+        t, plan, idx = _setup()
+        dead = 1
+        live = np.ones(BANKS, dtype=bool)
+        live[dead] = False
+        kw = dict(backend=backend)
+        if backend == "pallas":
+            kw["interpret"] = True
+        out = banked_embedding_bag(t, jnp.asarray(idx), None,
+                                   bank_live=jnp.asarray(live), **kw)
+        masked = np.where((idx >= 0) & (plan.bank_of_row[np.where(
+            idx >= 0, idx, 0)] == dead), -1, idx)
+        ref = banked_embedding_bag(t, jnp.asarray(masked), None, **kw)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_all_live_bitmatches_no_mask(self, backend):
+        import jax.numpy as jnp
+
+        from repro.core.embedding import banked_embedding_bag
+        t, _, idx = _setup()
+        kw = dict(backend=backend)
+        if backend == "pallas":
+            kw["interpret"] = True
+        out = banked_embedding_bag(
+            t, jnp.asarray(idx), None,
+            bank_live=jnp.ones(BANKS, dtype=bool), **kw)
+        ref = banked_embedding_bag(t, jnp.asarray(idx), None, **kw)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_degraded_row_counts(self):
+        import jax.numpy as jnp
+
+        from repro.core.embedding import degraded_row_counts
+        t, plan, idx = _setup()
+        dead = 2
+        live = np.ones(BANKS, dtype=bool)
+        live[dead] = False
+        counts = np.asarray(degraded_row_counts(
+            t.remap_bank, jnp.asarray(live), jnp.asarray(idx)))
+        expect = ((idx >= 0)
+                  & (plan.bank_of_row[np.where(idx >= 0, idx, 0)] == dead)
+                  ).sum(axis=-1)
+        np.testing.assert_array_equal(counts, expect)
+        all_live = np.asarray(degraded_row_counts(
+            t.remap_bank, jnp.ones(BANKS, dtype=bool), jnp.asarray(idx)))
+        assert (all_live == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# masked partitioner (bank_capacity_rows / bank_cost)
+# ---------------------------------------------------------------------------
+
+class TestMaskedPartitioner:
+    def test_dead_bank_gets_no_rows(self):
+        freq = np.random.default_rng(0).random(V) + 0.1
+        caps = np.array([0, V, V, V])
+        plan = non_uniform_partition(freq, BANKS, bank_capacity_rows=caps)
+        assert (plan.bank_of_row != 0).all()
+
+    def test_capacity_exhausted_raises(self):
+        freq = np.ones(V)
+        caps = np.array([0, 0, 0, 100])     # 100 < 256 rows
+        with pytest.raises(ValueError, match="capacity exhausted"):
+            non_uniform_partition(freq, BANKS, bank_capacity_rows=caps)
+
+    def test_bank_cost_sheds_load(self):
+        freq = np.random.default_rng(1).random(V) + 0.1
+        cost = np.array([8.0, 1.0, 1.0, 1.0])
+        plan = non_uniform_partition(freq, BANKS, bank_cost=cost)
+        base = non_uniform_partition(freq, BANKS)
+        assert plan.load_per_bank[0] < base.load_per_bank[0]
+
+
+# ---------------------------------------------------------------------------
+# replanner fault state + realized-hit-rate discount
+# ---------------------------------------------------------------------------
+
+class TestReplannerFaultState:
+    def _rp(self, **over):
+        from repro.workload import ReplanConfig, Replanner
+        cfg = ReplanConfig.for_vocab(V, BANKS, capacity_rows=V, **over)
+        return Replanner(cfg, V, init_freq=np.ones(V))
+
+    def test_set_bank_health_validates_shape(self):
+        rp = self._rp()
+        with pytest.raises(ValueError):
+            rp.set_bank_health(np.ones(BANKS + 1, dtype=bool))
+
+    def test_set_bank_penalty_validates(self):
+        rp = self._rp()
+        with pytest.raises(ValueError):
+            rp.set_bank_penalty(np.ones(BANKS + 1))
+        with pytest.raises(ValueError):
+            rp.set_bank_penalty(np.array([1.0, 0.0, 1.0, 1.0]))
+
+    def test_all_live_plans_bit_identical_to_legacy(self):
+        """The trivially-off contract: healthy serving must produce EXACTLY
+        the legacy planner's output (no caps array, no cost array)."""
+        rp = self._rp()
+        freq = np.random.default_rng(2).random(V) + 0.1
+        plan, _, _ = rp.build_plan(freq)
+        legacy = non_uniform_partition(freq, BANKS, capacity_rows=V)
+        np.testing.assert_array_equal(plan.bank_of_row, legacy.bank_of_row)
+        np.testing.assert_array_equal(plan.slot_of_row, legacy.slot_of_row)
+
+    def test_dead_bank_excluded_after_set_bank_health(self):
+        rp = self._rp()
+        live = np.ones(BANKS, dtype=bool)
+        live[1] = False
+        rp.set_bank_health(live)
+        freq = np.random.default_rng(3).random(V) + 0.1
+        plan, _, _ = rp.build_plan(freq)
+        assert (plan.bank_of_row != 1).all()
+        # persistent: a LATER replan still avoids the dead bank
+        plan2, _, _ = rp.build_plan(freq * 2)
+        assert (plan2.bank_of_row != 1).all()
+
+    def test_cache_aware_with_dead_bank_raises(self):
+        from repro.workload import ReplanConfig, Replanner
+        cfg = ReplanConfig.for_vocab(V, BANKS, capacity_rows=V,
+                                     partitioner="cache_aware")
+        rp = Replanner(cfg, V, init_freq=np.ones(V))
+        rp.observe_bags([np.arange(4)])
+        live = np.ones(BANKS, dtype=bool)
+        live[0] = False
+        rp.set_bank_health(live)
+        with pytest.raises(ValueError, match="non_uniform"):
+            rp.build_plan(np.ones(V))
+
+    def test_realized_hit_rate_defaults_and_clips(self):
+        rp = self._rp()
+        assert rp.realized_hit_rate() == 1.0        # no committed prediction
+        rp._pred_saved_per_bag = 2.0
+        assert rp.realized_hit_rate() == 1.0        # no realized feed yet
+        rp.observe_cache_hits(10.0, 10)             # 1.0 saved/bag vs 2.0
+        assert rp.realized_hit_rate() == pytest.approx(0.5)
+        rp.observe_cache_hits(1000.0, 10)           # over-delivery clips
+        assert rp.realized_hit_rate() == 1.0
+
+
+# ---------------------------------------------------------------------------
+# runtime recovery lane (on_bank_failure / on_straggler)
+# ---------------------------------------------------------------------------
+
+class TestRuntimeRecovery:
+    def _runtime(self):
+        from repro.core.embedding import pack_table
+        from repro.workload import ReplanConfig, Replanner
+        from repro.workload.runtime import AdaptiveEmbeddingRuntime
+        rng = np.random.default_rng(0)
+        freq = rng.random(V) + 0.1
+        cap = int(np.ceil(V / BANKS) * 1.5)
+        plan = non_uniform_partition(freq, BANKS, capacity_rows=cap)
+        table = (rng.standard_normal((V, D)) * 0.1).astype(np.float32)
+        t = pack_table(table, plan)
+        # pin the packed shape to the full capacity for shape-stable swaps
+        from repro.workload.migrate import migrate_table
+        t = migrate_table(t, plan, rows_per_bank=cap)
+        cfg = ReplanConfig.for_vocab(V, BANKS, capacity_rows=cap)
+        return AdaptiveEmbeddingRuntime(t, plan, cfg, init_freq=freq), table
+
+    def test_on_bank_failure_repacks_and_stamps_event(self):
+        runtime, table = self._runtime()
+        live = np.ones(BANKS, dtype=bool)
+        live[2] = False
+        event = runtime.on_bank_failure(live)
+        assert event.reason == "bank_failure"
+        assert event.recovery_s is not None and event.recovery_s >= 0.0
+        assert (np.asarray(runtime.table.remap_bank) != 2).all()
+        # row values survive the emergency migration
+        flat = (np.asarray(runtime.table.remap_bank, np.int64)
+                * runtime.table.rows_per_bank
+                + np.asarray(runtime.table.remap_slot))
+        np.testing.assert_array_equal(
+            np.asarray(runtime.table.packed)[flat], table)
+
+    def test_on_straggler_sheds_load(self):
+        runtime, _ = self._runtime()
+        before = runtime.plan.load_per_bank.copy()
+        pen = np.ones(BANKS)
+        pen[0] = 8.0
+        event = runtime.on_straggler(pen)
+        assert event.reason == "straggler"
+        assert runtime.plan.load_per_bank[0] < before[0]
