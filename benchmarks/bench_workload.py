@@ -51,6 +51,7 @@ from repro.core.cache_runtime import cap_cache_plan, entry_banks, rewrite_bag
 from repro.core.grace import mine_cooccurrence
 from repro.core.hwmodel import UPMEMProfile
 from repro.core.partitioning import cache_aware_partition, non_uniform_partition
+from repro.obs import MetricRegistry, empirical_p99
 from repro.workload import (DriftConfig, DriftingZipfTrace, ReplanConfig,
                             Replanner, read_criteo_tsv, write_criteo_tsv)
 from repro.workload.trace import criteo_row_stream
@@ -83,9 +84,11 @@ def _batch_stats(bags: list[np.ndarray], plan) -> tuple[float, float]:
 
 
 def p99(xs):
-    """Empirical p99 (the index convention every scenario gates on)."""
-    s = sorted(xs)
-    return s[min(len(s) - 1, int(0.99 * len(s)))]
+    """Empirical p99 — delegates to the ONE home of the index convention
+    every scenario gates on (repro.obs.empirical_percentile), so the serve
+    loop's latency report and the committed BENCH baselines can never drift
+    apart on percentile math."""
+    return empirical_p99(xs)
 
 
 def run(stream_bags: int = STREAM_BAGS, *, seed: int = SEED) -> dict:
@@ -235,10 +238,17 @@ def _run_cached(warm_bags: list[np.ndarray], stream, vocab: int, *,
     rp = Replanner(rcfg, vocab, init_freq=freq0 + 1e-3)
     a_plan, a_fcp = static_plan, static_fcp
 
+    # gate numbers accumulate in (and are read back from) a local metrics
+    # registry — the same Counter/Gauge types the serve CLI exports, so the
+    # bench's committed numbers and the runtime's observability share one
+    # accounting path (values are exact ints carried as floats)
+    reg = MetricRegistry()
+    m_reads = {n: reg.gauge(f"bench.{n}.reads_total")
+               for n in ("static", "adaptive")}
+    m_saved = {n: reg.gauge(f"bench.{n}.saved_reads_total")
+               for n in ("static", "adaptive")}
     shares = {"static": [], "adaptive": []}
     lats = {"static": [], "adaptive": []}
-    reads = {"static": 0, "adaptive": 0}
-    saved = {"static": 0, "adaptive": 0}
     n_batches = 0
     for bags in stream:
         n_batches += 1
@@ -247,18 +257,24 @@ def _run_cached(warm_bags: list[np.ndarray], stream, vocab: int, *,
             sh, lat, rd, sv = _batch_stats_cached(bags, p, f)
             shares[name].append(sh)
             lats[name].append(lat)
-            reads[name] += rd
-            saved[name] += sv
+            m_reads[name].inc(rd)
+            m_saved[name].inc(sv)
         rp.observe_bags(bags)             # feed AFTER scoring, as above
         update = rp.end_batch()
         if update is not None:
             a_plan, a_fcp = update.plan, update.cache_fixed
 
+    saved = {n: m_saved[n].value for n in ("static", "adaptive")}
+    reads = {n: m_reads[n].value for n in ("static", "adaptive")}
+    for name in ("static", "adaptive"):
+        reg.gauge(f"bench.{name}.p99_model_latency_us").set(p99(lats[name]))
+
     def side(name, extra=None):
         d = {
             "mean_max_bank_load_share": float(np.mean(shares[name])),
             "p99_max_bank_load_share": float(p99(shares[name])),
-            "p99_model_latency_us": float(p99(lats[name])),
+            "p99_model_latency_us":
+                reg.get(f"bench.{name}.p99_model_latency_us").value,
             "mean_model_latency_us": float(np.mean(lats[name])),
             "cache_hit_saved_reads_frac":
                 float(saved[name] / max(reads[name] + saved[name], 1)),
@@ -634,10 +650,19 @@ def run_fault_recovery(*, seed: int = SEED) -> dict:
                         n_banks=BANKS, rows_per_bank=cap)
     orig = (table.packed, table.remap_bank, table.remap_slot)
 
+    # gate numbers flow through the same metrics registry the serve CLI
+    # exports — the runtime's swap/recovery counters land here too
+    reg = MetricRegistry()
+    m_deg_reads = reg.counter("bench.degraded_reads_total")
+    m_deg_batches = reg.counter("bench.degraded_batches_total")
+    g_recovery_batches = reg.gauge("bench.recovery_batches")
+    g_recovery_batches.set(-1)
+    g_moved = reg.gauge("bench.moved_rows")
+
     rcfg = ReplanConfig.for_vocab(vocab, BANKS, capacity_rows=cap,
                                   check_every=FAULT_CHECK_EVERY)
     runtime = AdaptiveEmbeddingRuntime(table, plan0, rcfg,
-                                       init_freq=freq0 + 1e-3)
+                                       init_freq=freq0 + 1e-3, metrics=reg)
 
     victim = int(np.argmax(plan0.load_per_bank))      # kill the hottest bank
     fault = BankFaultState(BANKS, [FaultEvent(batch=FAULT_FAIL_AT,
@@ -676,13 +701,19 @@ def run_fault_recovery(*, seed: int = SEED) -> dict:
             moved_rows = int((old_bank
                               != np.asarray(runtime.table.remap_bank)).sum())
             recovered_at = b
+            g_moved.set(moved_rows)
+            g_recovery_batches.set(b - FAULT_FAIL_AT)
         t = runtime.table
         emb, counts = serve(t.packed, t.remap_bank, t.remap_slot,
                             jnp.asarray(fault.live_mask()), jnp.asarray(idx))
         counts = np.asarray(counts)
         emb_last = np.asarray(emb)
         finite &= bool(np.isfinite(emb_last).all())
-        deg_per_batch.append(int(counts.sum()))
+        n_deg = int(counts.sum())
+        deg_per_batch.append(n_deg)
+        m_deg_reads.inc(n_deg)
+        if n_deg > 0:
+            m_deg_batches.inc()
         max_deg_request = max(max_deg_request, int(counts.max()))
         # modeled lookup time: reads per LIVE bank, max bank bounds the batch
         rows = idx[idx >= 0]
@@ -692,7 +723,7 @@ def run_fault_recovery(*, seed: int = SEED) -> dict:
         lat_deg.append(lookup_us)
         lat_stall.append(lookup_us)
 
-    degraded_batches = int(np.sum(np.asarray(deg_per_batch) > 0))
+    degraded_batches = int(m_deg_batches.value)
     window = list(range(FAULT_FAIL_AT,
                         recovered_at if recovered_at is not None
                         else FAULT_BATCHES))
@@ -732,13 +763,12 @@ def run_fault_recovery(*, seed: int = SEED) -> dict:
             "p99_model_latency_us": float(p99(lat_deg)),
             "mean_model_latency_us": float(np.mean(lat_deg)),
             "degraded_batches": degraded_batches,
-            "degraded_reads_total": int(np.sum(deg_per_batch)),
+            "degraded_reads_total": int(m_deg_reads.value),
             "max_degraded_reads_per_request": max_deg_request,
-            "recovery_batches": (recovered_at - FAULT_FAIL_AT
-                                 if recovered_at is not None else -1),
+            "recovery_batches": int(g_recovery_batches.value),
             "recovery_latency_ms": recovery_ms if recovery_ms is not None
             else -1.0,
-            "moved_rows": moved_rows,
+            "moved_rows": int(g_moved.value),
         },
         "stall": {
             "p99_model_latency_us": float(p99(lat_stall)),

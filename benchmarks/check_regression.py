@@ -23,6 +23,14 @@ What the gate certifies (and what it deliberately does not):
 
     python benchmarks/check_regression.py --baseline-dir .ci-baselines \
         [--candidate-dir .]
+
+Metrics-snapshot mode (``--metrics-baseline`` + ``--metrics-candidate``):
+the same key-path schema check applied to ONE pair of ``repro.obs``
+metrics-snapshot JSONs (the serve CLI's ``--metrics-out``). Values are
+run-dependent (latencies, counts) so only the structure is gated — the obs
+layer pre-registers every metric up front precisely so a run where an event
+never fires still exports the full key set. Both modes compose: pass all
+four flags to gate bench artifacts AND the metrics schema in one call.
 """
 from __future__ import annotations
 
@@ -93,35 +101,92 @@ def check_pair(baseline: dict, candidate: dict, name: str
     return errors, warnings
 
 
+def check_metrics_schema(baseline_path: str, candidate_path: str
+                         ) -> tuple[list[str], list[str]]:
+    """Key-path schema gate for one metrics-snapshot pair.
+
+    Metric VALUES are run-dependent, so the scalar parity/timing checks of
+    ``check_pair`` would be noise here — only the key structure is compared.
+    ``meta.schema`` is the one value that IS gated: a version bump means the
+    committed baseline must be regenerated deliberately.
+    """
+    name = os.path.basename(candidate_path)
+    with open(baseline_path) as fh:
+        baseline = json.load(fh)
+    with open(candidate_path) as fh:
+        candidate = json.load(fh)
+    errors = []
+    bp, cp = key_paths(baseline), key_paths(candidate)
+    for missing in sorted(bp - cp):
+        errors.append(f"{name}: metrics schema drift — baseline key lost: "
+                      f"{missing}")
+    for extra in sorted(cp - bp):
+        errors.append(f"{name}: metrics schema drift — new key not in "
+                      f"committed baseline (regenerate it): {extra}")
+    bschema = baseline.get("meta", {}).get("schema")
+    cschema = candidate.get("meta", {}).get("schema")
+    if bschema != cschema:
+        errors.append(f"{name}: metrics snapshot schema version changed — "
+                      f"baseline {bschema} vs candidate {cschema}")
+    return errors, []
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline-dir", required=True,
+    ap.add_argument("--baseline-dir",
                     help="directory holding the COMMITTED BENCH_*.json "
                          "(stash them before the smoke run overwrites)")
     ap.add_argument("--candidate-dir", default=".",
                     help="directory the smoke run wrote its BENCH_*.json to")
+    ap.add_argument("--metrics-baseline",
+                    help="committed metrics-snapshot JSON (schema-only gate)")
+    ap.add_argument("--metrics-candidate",
+                    help="metrics snapshot written by the smoke run "
+                         "(--metrics-out)")
     args = ap.parse_args()
 
-    baselines = sorted(glob.glob(os.path.join(args.baseline_dir,
-                                              "BENCH_*.json")))
-    if not baselines:
-        sys.exit(f"no BENCH_*.json baselines under {args.baseline_dir}")
+    metrics_mode = bool(args.metrics_baseline or args.metrics_candidate)
+    if metrics_mode and not (args.metrics_baseline and args.metrics_candidate):
+        ap.error("--metrics-baseline and --metrics-candidate go together")
+    if not metrics_mode and not args.baseline_dir:
+        ap.error("--baseline-dir is required unless only gating a metrics "
+                 "snapshot pair")
+
     errors, warnings = [], []
-    for bpath in baselines:
-        name = os.path.basename(bpath)
-        cpath = os.path.join(args.candidate_dir, name)
-        if not os.path.exists(cpath):
-            errors.append(f"{name}: smoke run produced no artifact "
-                          f"({cpath} missing)")
-            continue
-        with open(bpath) as fh:
-            baseline = json.load(fh)
-        with open(cpath) as fh:
-            candidate = json.load(fh)
-        e, w = check_pair(baseline, candidate, name)
-        errors += e
-        warnings += w
-        print(f"checked {name}: {len(e)} fatal, {len(w)} advisory")
+    n_artifacts = 0
+    if args.baseline_dir:
+        baselines = sorted(glob.glob(os.path.join(args.baseline_dir,
+                                                  "BENCH_*.json")))
+        if not baselines:
+            sys.exit(f"no BENCH_*.json baselines under {args.baseline_dir}")
+        n_artifacts += len(baselines)
+        for bpath in baselines:
+            name = os.path.basename(bpath)
+            cpath = os.path.join(args.candidate_dir, name)
+            if not os.path.exists(cpath):
+                errors.append(f"{name}: smoke run produced no artifact "
+                              f"({cpath} missing)")
+                continue
+            with open(bpath) as fh:
+                baseline = json.load(fh)
+            with open(cpath) as fh:
+                candidate = json.load(fh)
+            e, w = check_pair(baseline, candidate, name)
+            errors += e
+            warnings += w
+            print(f"checked {name}: {len(e)} fatal, {len(w)} advisory")
+    if metrics_mode:
+        n_artifacts += 1
+        if not os.path.exists(args.metrics_candidate):
+            errors.append(f"smoke run produced no metrics snapshot "
+                          f"({args.metrics_candidate} missing)")
+        else:
+            e, w = check_metrics_schema(args.metrics_baseline,
+                                        args.metrics_candidate)
+            errors += e
+            warnings += w
+            print(f"checked {os.path.basename(args.metrics_candidate)} "
+                  f"(metrics schema): {len(e)} fatal, {len(w)} advisory")
     for w in warnings:
         print(f"WARN  {w}")
     for e in errors:
@@ -130,7 +195,7 @@ def main() -> None:
         sys.exit(f"bench regression gate FAILED: {len(errors)} schema/parity "
                  f"drift(s)")
     print(f"bench regression gate PASSED "
-          f"({len(baselines)} artifacts, {len(warnings)} advisory warnings)")
+          f"({n_artifacts} artifacts, {len(warnings)} advisory warnings)")
 
 
 if __name__ == "__main__":

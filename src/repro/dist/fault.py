@@ -42,12 +42,18 @@ class StragglerWatchdog:
 
     def __init__(self, factor: float = 3.0, window: int = 64,
                  min_history: int = 5,
-                 on_straggler: Callable[[int, float, float], None] | None = None):
+                 on_straggler: Callable[[int, float, float], None] | None = None,
+                 metrics=None):
         self.factor = factor
         self.min_history = min_history
         self.on_straggler = on_straggler
         self.history: deque[float] = deque(maxlen=window)
         self.events: list[int] = []
+        if metrics is None:
+            from repro.obs import MetricRegistry
+            metrics = MetricRegistry()
+        self._m_events = metrics.counter("fault.straggler_events_total",
+                                         "steps flagged as stragglers")
 
     def observe(self, step: int, seconds: float) -> bool:
         straggler = False
@@ -56,6 +62,7 @@ class StragglerWatchdog:
             if seconds > self.factor * med:
                 straggler = True
                 self.events.append(step)
+                self._m_events.inc()
                 if self.on_straggler is not None:
                     self.on_straggler(step, seconds, med)
         if not straggler:

@@ -33,6 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
+from repro.obs.cli import add_obs_args as _add_obs_args
+from repro.obs.cli import finalize_obs as _finalize_obs
+from repro.obs.cli import setup_obs as _setup_obs
 from repro.serve.serve_step import MicroBatcher, Request
 
 
@@ -41,13 +44,19 @@ class CompileProbe:
     assertion for live swaps (each jit compilation emits one
     '/jax/…compile…' event; cache hits emit none)."""
 
-    def __init__(self):
+    def __init__(self, metrics=None):
         self.compiles = 0
+        if metrics is None:
+            from repro.obs import MetricRegistry
+            metrics = MetricRegistry()
+        self._m_compiles = metrics.counter("jax.compiles_total",
+                                           "XLA compilations (monitoring)")
         jax.monitoring.register_event_listener(self._on_event)
 
     def _on_event(self, name: str, **kw) -> None:
         if "compile" in name:
             self.compiles += 1
+            self._m_compiles.inc()
 
 
 def main() -> None:
@@ -122,6 +131,7 @@ def main() -> None:
                          "rows, post-recovery bit-parity with a never-failed "
                          "run, one serve executable) — the CI "
                          "failure-injection contract")
+    _add_obs_args(ap)
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -149,24 +159,35 @@ def main() -> None:
     proto.pop("label", None)
     pad = {k: v[0] for k, v in proto.items()}
 
-    mb = MicroBatcher(args.batch, pad)
+    tracer, metrics, writer = _setup_obs(args, label=f"serve:{args.arch}")
+    mb = MicroBatcher(args.batch, pad, metrics=metrics)
+    n_batches = 0
+
+    def run_batch():
+        nonlocal n_batches
+        with tracer.span("rewrite"):
+            reqs, feats_b = mb.next_batch()
+        with tracer.span("device_step", batch=n_batches):
+            scores = serve(params, feats_b)
+            jax.block_until_ready(scores)
+        mb.complete(reqs)
+        n_batches += 1
+        if writer is not None:
+            writer.maybe_write(n_batches)
+
     for rid in range(args.requests):
         feats = {k: v[0] for k, v in _one(spec, cfg, rng, rid).items()}
         mb.submit(Request(rid=rid, features=feats))
         if len(mb.queue) >= args.batch:
-            reqs, feats_b = mb.next_batch()
-            scores = serve(params, feats_b)
-            jax.block_until_ready(scores)
-            mb.complete(reqs)
+            run_batch()
     while mb.ready():
-        reqs, feats_b = mb.next_batch()
-        jax.block_until_ready(serve(params, feats_b))
-        mb.complete(reqs)
+        run_batch()
 
     lat = sorted(mb.latencies)
     p50 = lat[len(lat) // 2] * 1e3
     print(f"served {len(lat)} requests  p50={p50:.2f}ms "
           f"p99={mb.p99() * 1e3:.2f}ms")
+    _finalize_obs(args, tracer, metrics, writer, latencies=mb.latencies)
 
 
 def _main_adaptive(args, spec, cfg, mod) -> None:
@@ -209,7 +230,9 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
         qspec = QuantSpec(enable_int4=(args.quant == "int4"),
                           byte_budget=budget,
                           min_hot_rows=args.quant_hot_rows)
-    probe = CompileProbe() if quant_on else None
+    tracer, metrics, writer = _setup_obs(
+        args, label=f"serve-adaptive:{args.arch}:quant={args.quant}")
+    probe = CompileProbe(metrics=metrics) if quant_on else None
 
     table = BankedTable(packed=params["emb_packed"],
                         remap_bank=statics["remap_bank"],
@@ -222,7 +245,8 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
                                   quant_dim=cfg.embed_dim if quant_on
                                   else None)
     runtime = AdaptiveEmbeddingRuntime(table, plan, rcfg,
-                                       init_freq=np.ones(V))
+                                       init_freq=np.ones(V),
+                                       tracer=tracer, metrics=metrics)
 
     # remap vectors (and on --quant the whole TieredTable) enter as
     # ARGUMENTS: a swap feeds new arrays of the same shape to the same
@@ -258,9 +282,9 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
                 "sparse": sparse}
 
     pad = one_request(-1)
-    mb = MicroBatcher(args.batch, pad, observer=observe)
+    mb = MicroBatcher(args.batch, pad, observer=observe, metrics=metrics)
     verify: dict = {}
-    state = {"warm_compiles": None}
+    state = {"warm_compiles": None, "n_batches": 0}
 
     def check_retier(event) -> None:
         """First-swap invariant: the incrementally re-tiered table is
@@ -278,17 +302,22 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
               f"(tier v{event.tier_version})")
 
     def run_batch():
-        reqs, feats = mb.next_batch()
-        p = {**params, "emb_packed": runtime.table.packed}
-        if quant_on:
-            scores = serve_tiered(p, runtime.tiered, feats)
-        else:
-            scores = serve(p, runtime.table.remap_bank,
-                           runtime.table.remap_slot, feats)
-        jax.block_until_ready(scores)
+        with tracer.span("rewrite"):
+            reqs, feats = mb.next_batch()
+        with tracer.span("device_step", batch=state["n_batches"]):
+            p = {**params, "emb_packed": runtime.table.packed}
+            if quant_on:
+                scores = serve_tiered(p, runtime.tiered, feats)
+            else:
+                scores = serve(p, runtime.table.remap_bank,
+                               runtime.table.remap_slot, feats)
+            jax.block_until_ready(scores)
         if quant_on and state["warm_compiles"] is None:
             state["warm_compiles"] = probe.compiles
         mb.complete(reqs)
+        state["n_batches"] += 1
+        if writer is not None:
+            writer.maybe_write(state["n_batches"])
         event = runtime.end_batch()        # drift check -> migrate -> swap
         if event is not None:
             msg = (f"  [swap @batch {event.batch}] {event.update.report} "
@@ -315,6 +344,9 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
     print(f"served {len(lat)} requests  p50={p50:.2f}ms "
           f"p99={mb.p99() * 1e3:.2f}ms  replans={rp.n_replans} "
           f"skipped={rp.n_skipped_replans}")
+    metrics.gauge("jax.serve_executables").set(
+        (serve_tiered if quant_on else serve)._cache_size())
+    _finalize_obs(args, tracer, metrics, writer, latencies=mb.latencies)
     if quant_on:
         n_swaps = len(runtime.swaps)
         executables = serve_tiered._cache_size()
@@ -370,7 +402,17 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
                                       plan=plan, rows_per_bank=cap)
     offs = np.asarray(statics["field_offsets"])
     fault = BankFaultState.from_specs(banks, args.inject_bank_failure)
-    probe = CompileProbe()
+    tracer, metrics, writer = _setup_obs(
+        args, label=f"serve-fault:{args.arch}")
+    probe = CompileProbe(metrics=metrics)
+    # fault-lane counters the final snapshot/summary must always carry,
+    # fired or not (the CI metrics-schema gate keys on them)
+    m_deg_reads = metrics.counter("serve.degraded_reads_total",
+                                  "bounded-degraded row reads served")
+    m_deg_batches = metrics.counter("serve.degraded_batches_total",
+                                    "micro-batches with >0 degraded reads")
+    m_faults = metrics.counter("fault.injected_total",
+                               "bank-fault schedule events fired")
 
     table = BankedTable(packed=params["emb_packed"],
                         remap_bank=statics["remap_bank"],
@@ -380,8 +422,10 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
                                   check_every=args.replan_every,
                                   hysteresis=args.hysteresis)
     runtime = AdaptiveEmbeddingRuntime(table, plan, rcfg,
-                                       init_freq=np.ones(V))
-    watchdog = StragglerWatchdog(factor=args.straggler_factor)
+                                       init_freq=np.ones(V),
+                                       tracer=tracer, metrics=metrics)
+    watchdog = StragglerWatchdog(factor=args.straggler_factor,
+                                 metrics=metrics)
 
     serve = jax.jit(build_recsys_serve_degraded_adaptive(
         mod, cfg, statics, backend=args.backend))
@@ -406,7 +450,8 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
         return {"dense": rng.standard_normal(cfg.n_dense).astype(np.float32),
                 "sparse": sparse}
 
-    mb = MicroBatcher(args.batch, one_request(-1), observer=observe)
+    mb = MicroBatcher(args.batch, one_request(-1), observer=observe,
+                      metrics=metrics)
     st = {"batch": 0, "handled_dead": frozenset(), "penalized": False,
           "fail_batch": None, "recover_batch": None,
           "confine_ok": True, "confine_checked": 0,
@@ -423,20 +468,28 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
         st["batch"] += 1
         for e in fault.advance(b):
             print(f"  [fault @batch {b}] {e}")
+            m_faults.inc()
+            tracer.instant("fault_injected", batch=b, event=str(e))
             if st["fail_batch"] is None and fault.dead_banks():
                 st["fail_batch"] = b
         live = fault.live_mask()
-        reqs, feats = mb.next_batch()
-        p = {**params, "emb_packed": runtime.table.packed}
-        scores, counts = serve(p, runtime.table.remap_bank,
-                               runtime.table.remap_slot,
-                               jnp.asarray(live), feats)
-        jax.block_until_ready(scores)
+        with tracer.span("rewrite"):
+            reqs, feats = mb.next_batch()
+        with tracer.span("device_step", batch=b):
+            p = {**params, "emb_packed": runtime.table.packed}
+            scores, counts = serve(p, runtime.table.remap_bank,
+                                   runtime.table.remap_slot,
+                                   jnp.asarray(live), feats)
+            jax.block_until_ready(scores)
+        if writer is not None:
+            writer.maybe_write(st["batch"])
         counts = np.asarray(counts)
         n_deg = int(counts.sum())
         st["degraded_reads"] += n_deg
+        m_deg_reads.inc(n_deg)
         if n_deg > 0:
             st["degraded_batches"] += 1
+            m_deg_batches.inc()
             # confinement: requests that touched NO dead-bank row must be
             # bit-exact vs the never-failed run, mid-failure included
             if st["confine_checked"] < 2:
@@ -522,6 +575,8 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
           f"confinement {'OK' if st['confine_ok'] else 'VIOLATED'}, "
           f"recovery parity {st['recover_parity']}, "
           f"{executables} serve executable(s)")
+    metrics.gauge("jax.serve_executables").set(executables)
+    _finalize_obs(args, tracer, metrics, writer, latencies=mb.latencies)
     if args.min_recoveries > 0:
         ok = (n_rec >= args.min_recoveries and executables == 1
               and st["confine_ok"] and st["recover_parity"] is True)
@@ -558,7 +613,9 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
                                       plan=plan, rows_per_bank=cap)
     offs = np.asarray(statics["field_offsets"])
 
-    probe = CompileProbe()
+    tracer, metrics, writer = _setup_obs(
+        args, label=f"serve-cached:{args.arch}")
+    probe = CompileProbe(metrics=metrics)
     table = BankedTable(packed=params["emb_packed"],
                         remap_bank=statics["remap_bank"],
                         remap_slot=statics["remap_slot"],
@@ -576,7 +633,8 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
                                   telemetry_decay_every=4096)
     runtime = AdaptiveEmbeddingRuntime(
         table, plan, rcfg, init_freq=np.ones(V),
-        max_cache_per_bag=max(2, mh // 4), max_residual_per_bag=mh)
+        max_cache_per_bag=max(2, mh // 4), max_residual_per_bag=mh,
+        tracer=tracer, metrics=metrics)
 
     serve = jax.jit(build_recsys_serve_cached_adaptive(
         mod, cfg, statics, backend=args.backend))
@@ -602,9 +660,10 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
         return {"dense": rng.standard_normal(cfg.n_dense).astype(np.float32),
                 "sparse": sparse}
 
-    mb = MicroBatcher(args.batch, one_request(-1), observer=observe)
+    mb = MicroBatcher(args.batch, one_request(-1), observer=observe,
+                      metrics=metrics)
     verify: dict = {}
-    state = {"warm_compiles": None}
+    state = {"warm_compiles": None, "n_batches": 0}
 
     def check_swap(event) -> None:
         """First-swap invariant: the swapped-in state is bit-identical to a
@@ -630,8 +689,9 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
               f"(version {verify['version']})")
 
     def run_batch():
-        reqs, feats = mb.next_batch()
-        rb = runtime.rewrite(union_rect(feats))          # host pipeline, v
+        with tracer.span("rewrite"):
+            reqs, feats = mb.next_batch()
+            rb = runtime.rewrite(union_rect(feats))      # host pipeline, v
         event = runtime.end_batch()                      # may swap to v+1
         if event is not None:
             hits = int((rb.cache_idx >= 0).sum())
@@ -647,16 +707,22 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
                 verify["table"] = runtime.cache_table    # the swapped-in one
         # the in-flight batch resolves against ITS version's cache table,
         # even when the swap above just retired it from "current"
-        batch_c = {"dense": feats["dense"],
-                   "cache_idx": jnp.asarray(rb.cache_idx),
-                   "residual_idx": jnp.asarray(rb.residual_idx)}
-        p = {**params, "emb_packed": runtime.table.packed}
-        scores = serve(p, runtime.table.remap_bank, runtime.table.remap_slot,
-                       runtime.cache_table_for(rb.version), batch_c)
-        jax.block_until_ready(scores)
+        with tracer.span("device_step", batch=state["n_batches"],
+                         cache_version=rb.version):
+            batch_c = {"dense": feats["dense"],
+                       "cache_idx": jnp.asarray(rb.cache_idx),
+                       "residual_idx": jnp.asarray(rb.residual_idx)}
+            p = {**params, "emb_packed": runtime.table.packed}
+            scores = serve(p, runtime.table.remap_bank,
+                           runtime.table.remap_slot,
+                           runtime.cache_table_for(rb.version), batch_c)
+            jax.block_until_ready(scores)
         if state["warm_compiles"] is None:
             state["warm_compiles"] = probe.compiles      # post-first-compile
         mb.complete(reqs)
+        state["n_batches"] += 1
+        if writer is not None:
+            writer.maybe_write(state["n_batches"])
 
     for rid in range(args.requests):
         mb.submit(Request(rid=rid, features=one_request(rid)))
@@ -696,6 +762,8 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
           f"migration collectives included); swap parity: "
           f"arrays {'OK' if verify.get('arrays_ok') else 'n/a'}, "
           f"outputs {'OK' if out_ok else 'MISMATCH'}")
+    metrics.gauge("jax.serve_executables").set(executables)
+    _finalize_obs(args, tracer, metrics, writer, latencies=mb.latencies)
     if args.min_swaps > 0:
         ok = (n_swaps >= args.min_swaps and executables == 1 and out_ok
               and verify.get("arrays_ok", False))

@@ -17,6 +17,7 @@ from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.configs import get_arch
 from repro.data import synthetic as syn
 from repro.dist.fault import StragglerWatchdog
+from repro.obs.cli import add_obs_args, finalize_obs, setup_obs
 from repro.train.train_step import TrainState, build_train_step, default_optimizer
 
 
@@ -113,6 +114,7 @@ def main() -> None:
                          "rows drift away from their cached sums, so the "
                          "entries are re-summed from CURRENT values and "
                          "published as a new rewriter version")
+    add_obs_args(ap)
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -123,6 +125,10 @@ def main() -> None:
         assert spec.family == "dlrm", "--adaptive drives the banked super-table"
         return _main_train_cached(args, spec, cfg, key)
 
+    tracer, reg, writer = setup_obs(args, label=f"train:{args.arch}")
+    m_step_ms = reg.histogram("train.step_ms", "jitted train-step wall time")
+    m_migrations = reg.counter("train.migrations_total",
+                               "drift-triggered table migrations")
     statics = None
     replanner = None
     cap = None
@@ -138,7 +144,7 @@ def main() -> None:
         replanner = Replanner(
             ReplanConfig.for_vocab(V, args.banks, capacity_rows=cap,
                                    check_every=args.replan_every),
-            V, init_freq=np.ones(V))
+            V, init_freq=np.ones(V), metrics=reg)
     if spec.family == "lm":
         from repro.models import transformer as T
         params = T.init_params(cfg, key)
@@ -180,18 +186,22 @@ def main() -> None:
                 statics["remap_slot"] = jnp.asarray(remaps["remap_slot"])
 
     batch_fn = make_batch_fn(spec, cfg)
-    wd = StragglerWatchdog()
+    wd = StragglerWatchdog(metrics=reg)
     t_begin = time.time()
     n_migrations = 0
     field_offs = np.asarray(statics["field_offsets"]) if replanner else None
     for step in range(start, args.steps):
-        b = batch_fn(args.batch, args.seed, step)
-        if replanner is not None:
-            replanner.observe_rows(rows_from_sparse(b["sparse"], field_offs))
-        b = {k: jnp.asarray(v) for k, v in b.items()}
+        with tracer.span("rewrite", step=step):
+            b = batch_fn(args.batch, args.seed, step)
+            if replanner is not None:
+                replanner.observe_rows(
+                    rows_from_sparse(b["sparse"], field_offs))
+            b = {k: jnp.asarray(v) for k, v in b.items()}
         t0 = time.time()
-        state, metrics = step_fn(state, b)
-        loss = float(metrics["loss"])
+        with tracer.span("device_step", step=step):
+            state, metrics = step_fn(state, b)
+            loss = float(metrics["loss"])
+        m_step_ms.observe((time.time() - t0) * 1e3)
         wd.observe(step, time.time() - t0)
         if step % args.log_every == 0 or step == args.steps - 1:
             print(f"step {step:5d} loss {loss:.4f} "
@@ -204,25 +214,30 @@ def main() -> None:
                 # remaps are closure constants on the train path)
                 from repro.core.embedding import BankedTable
                 from repro.workload import migrate_packed_leaves
-                old_t = BankedTable(packed=state.params["emb_packed"],
-                                    remap_bank=statics["remap_bank"],
-                                    remap_slot=statics["remap_slot"],
-                                    n_banks=args.banks, rows_per_bank=cap)
-                state = migrate_packed_leaves(state, old_t, update.plan,
-                                              rows_per_bank=cap)
-                statics["remap_bank"] = jnp.asarray(update.plan.bank_of_row,
-                                                    jnp.int32)
-                statics["remap_slot"] = jnp.asarray(update.plan.slot_of_row,
-                                                    jnp.int32)
-                loss_fn, loss_kw = build_loss(
-                    spec, cfg, statics, backend=args.backend,
-                    bwd_backend=args.bwd_backend)
-                step_fn = jax.jit(build_train_step(
-                    loss_fn, opt, compress_grads=args.compress_grads,
-                    loss_kwargs=loss_kw))
+                with tracer.span("migrate", step=step):
+                    old_t = BankedTable(packed=state.params["emb_packed"],
+                                        remap_bank=statics["remap_bank"],
+                                        remap_slot=statics["remap_slot"],
+                                        n_banks=args.banks,
+                                        rows_per_bank=cap)
+                    state = migrate_packed_leaves(state, old_t, update.plan,
+                                                  rows_per_bank=cap)
+                    statics["remap_bank"] = jnp.asarray(
+                        update.plan.bank_of_row, jnp.int32)
+                    statics["remap_slot"] = jnp.asarray(
+                        update.plan.slot_of_row, jnp.int32)
+                    loss_fn, loss_kw = build_loss(
+                        spec, cfg, statics, backend=args.backend,
+                        bwd_backend=args.bwd_backend)
+                    step_fn = jax.jit(build_train_step(
+                        loss_fn, opt, compress_grads=args.compress_grads,
+                        loss_kwargs=loss_kw))
                 n_migrations += 1
+                m_migrations.inc()
                 print(f"  [migrate @step {step}] {update.report} "
                       f"imbalance -> {update.plan.imbalance():.3f}")
+        if writer is not None:
+            writer.maybe_write(step + 1)
         if ck and (step + 1) % args.ckpt_every == 0:
             if replanner is not None:
                 _save_remaps(args.ckpt_dir, statics, step + 1)
@@ -235,6 +250,7 @@ def main() -> None:
     extra = f"; migrations={n_migrations}" if replanner is not None else ""
     print(f"done in {time.time() - t_begin:.1f}s; stragglers={wd.events}"
           + extra)
+    finalize_obs(args, tracer, reg, writer, prefix="train")
 
 
 def _main_train_cached(args, spec, cfg, key) -> None:
@@ -279,9 +295,16 @@ def _main_train_cached(args, spec, cfg, key) -> None:
                                   mine_min_support=2,
                                   telemetry_decay=0.8,
                                   telemetry_decay_every=4096)
+    tracer, reg, writer = setup_obs(args, label=f"train-cached:{args.arch}")
+    m_step_ms = reg.histogram("train.step_ms", "jitted train-step wall time")
+    m_migrations = reg.counter("train.migrations_total",
+                               "drift-triggered table migrations")
+    m_refreshes = reg.counter("train.cache_refreshes_total",
+                              "periodic partial-sum re-sums (staleness)")
     runtime = AdaptiveEmbeddingRuntime(
         table, plan, rcfg, init_freq=np.ones(V),
-        max_cache_per_bag=max(2, mh // 4), max_residual_per_bag=mh)
+        max_cache_per_bag=max(2, mh // 4), max_residual_per_bag=mh,
+        tracer=tracer, metrics=reg)
 
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
     print(f"arch={args.arch} family={spec.family} params={n_params:,} "
@@ -308,28 +331,32 @@ def _main_train_cached(args, spec, cfg, key) -> None:
     state = TrainState.create(params, opt, compress=args.compress_grads)
 
     batch_fn = make_batch_fn(spec, cfg)
-    wd = StragglerWatchdog()
+    wd = StragglerWatchdog(metrics=reg)
     t_begin = time.time()
     n_migrations = n_refreshes = 0
     for step in range(args.steps):
-        b = batch_fn(args.batch, args.seed, step)
-        sp = np.asarray(b["sparse"])                       # (B, F, L)
-        union = np.where(sp >= 0, sp + offs[None, :, None], -1)
-        runtime.observe_bags([bag[bag >= 0]
-                              for bag in union.reshape(-1, union.shape[-1])])
-        rb = runtime.rewrite(union)
-        # everything a swap replaces is a step ARGUMENT; the batch resolves
-        # against the cache-table version it was rewritten for
-        batch = {"dense": jnp.asarray(b["dense"]),
-                 "label": jnp.asarray(b["label"]),
-                 "cache_idx": jnp.asarray(rb.cache_idx),
-                 "residual_idx": jnp.asarray(rb.residual_idx),
-                 "remap_bank": runtime.table.remap_bank,
-                 "remap_slot": runtime.table.remap_slot,
-                 "cache_table": runtime.cache_table_for(rb.version)}
+        with tracer.span("rewrite", step=step):
+            b = batch_fn(args.batch, args.seed, step)
+            sp = np.asarray(b["sparse"])                   # (B, F, L)
+            union = np.where(sp >= 0, sp + offs[None, :, None], -1)
+            runtime.observe_bags(
+                [bag[bag >= 0]
+                 for bag in union.reshape(-1, union.shape[-1])])
+            rb = runtime.rewrite(union)
+            # everything a swap replaces is a step ARGUMENT; the batch
+            # resolves against the cache-table version it was rewritten for
+            batch = {"dense": jnp.asarray(b["dense"]),
+                     "label": jnp.asarray(b["label"]),
+                     "cache_idx": jnp.asarray(rb.cache_idx),
+                     "residual_idx": jnp.asarray(rb.residual_idx),
+                     "remap_bank": runtime.table.remap_bank,
+                     "remap_slot": runtime.table.remap_slot,
+                     "cache_table": runtime.cache_table_for(rb.version)}
         t0 = time.time()
-        state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
+        with tracer.span("device_step", step=step):
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+        m_step_ms.observe((time.time() - t0) * 1e3)
         wd.observe(step, time.time() - t0)
         # the trained table: rebind the runtime's view to the new params so
         # replans/refreshes re-sum from CURRENT values
@@ -345,29 +372,39 @@ def _main_train_cached(args, spec, cfg, key) -> None:
             # migrate params + row-wise Adagrad state in one pass, then the
             # runtime adopts the migrated table and swaps the cache lane
             # versioned — no step re-jit (remaps are arguments)
-            state = migrate_packed_leaves(state, runtime.table, update.plan,
-                                          rows_per_bank=cap)
-            new_table = BankedTable(
-                packed=state.params["emb_packed"],
-                remap_bank=jnp.asarray(update.plan.bank_of_row, jnp.int32),
-                remap_slot=jnp.asarray(update.plan.slot_of_row, jnp.int32),
-                n_banks=banks, rows_per_bank=cap)
+            with tracer.span("migrate", step=step):
+                state = migrate_packed_leaves(state, runtime.table,
+                                              update.plan, rows_per_bank=cap)
+                new_table = BankedTable(
+                    packed=state.params["emb_packed"],
+                    remap_bank=jnp.asarray(update.plan.bank_of_row,
+                                           jnp.int32),
+                    remap_slot=jnp.asarray(update.plan.slot_of_row,
+                                           jnp.int32),
+                    n_banks=banks, rows_per_bank=cap)
             event = runtime.apply_migrated(update, new_table)
             n_migrations += 1
+            m_migrations.inc()
             print(f"  [migrate @step {step}] {update.report} "
                   f"imbalance -> {update.plan.imbalance():.3f}  "
                   f"cache v{event.cache_version} "
                   f"entries {event.cache_entries}")
         elif (step + 1) % args.cache_refresh_every == 0:
-            version = runtime.refresh_cache()
+            with tracer.span("cache_refresh", step=step):
+                version = runtime.refresh_cache()
             n_refreshes += 1
+            m_refreshes.inc()
             print(f"  [cache refresh @step {step}] re-summed "
                   f"{runtime.cache_plan.n_entries} entries -> v{version}")
+        if writer is not None:
+            writer.maybe_write(step + 1)
     executables = step_fn._cache_size()
     print(f"done in {time.time() - t_begin:.1f}s; stragglers={wd.events}; "
           f"migrations={n_migrations} refreshes={n_refreshes}; "
           f"{executables} step executable(s) "
           f"({'ZERO re-jits' if executables == 1 else 'RE-JITTED'})")
+    reg.gauge("jax.step_executables").set(executables)
+    finalize_obs(args, tracer, reg, writer, prefix="train")
 
 
 def _remaps_path(ckpt_dir: str, step: int) -> str:

@@ -157,12 +157,20 @@ class MicroBatcher:
     """
 
     def __init__(self, batch_size: int, pad_request: dict,
-                 observer: Callable[[dict, int], None] | None = None):
+                 observer: Callable[[dict, int], None] | None = None,
+                 metrics=None):
         self.batch_size = batch_size
         self.pad_request = pad_request
         self.observer = observer
         self.queue: deque[Request] = deque()
         self.latencies: list[float] = []
+        if metrics is None:
+            from repro.obs import MetricRegistry
+            metrics = MetricRegistry()
+        self._m_requests = metrics.counter("serve.requests_total",
+                                           "completed (non-pad) requests")
+        self._m_latency = metrics.histogram(
+            "serve.request_latency_ms", "arrival -> completion per request")
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -185,10 +193,12 @@ class MicroBatcher:
 
     def complete(self, reqs: list[Request]) -> None:
         now = time.monotonic()
-        self.latencies.extend(now - r.t_arrival for r in reqs)
+        for r in reqs:
+            lat = now - r.t_arrival
+            self.latencies.append(lat)
+            self._m_latency.observe(lat * 1e3)
+        self._m_requests.inc(len(reqs))
 
     def p99(self) -> float:
-        if not self.latencies:
-            return 0.0
-        s = sorted(self.latencies)
-        return s[min(len(s) - 1, int(0.99 * len(s)))]
+        from repro.obs import empirical_p99
+        return empirical_p99(self.latencies)

@@ -30,6 +30,7 @@ from repro.core.cache_runtime import (FixedCachePlan, cap_cache_plan,
 from repro.core.grace import CachePlan, mine_cooccurrence
 from repro.core.partitioning import (PartitionPlan, cache_aware_partition,
                                      non_uniform_partition)
+from repro.obs import MetricRegistry
 from repro.workload.telemetry import DriftDetector, DriftReport, TableTelemetry
 
 
@@ -116,7 +117,8 @@ class Replanner:
     def __init__(self, cfg: ReplanConfig, vocab: int, *,
                  init_freq: np.ndarray | None = None,
                  telemetry: TableTelemetry | None = None,
-                 init_plan: PartitionPlan | None = None):
+                 init_plan: PartitionPlan | None = None,
+                 metrics: MetricRegistry | None = None):
         if cfg.quant is not None:
             if cfg.partitioner != "non_uniform":
                 raise ValueError("ReplanConfig.quant drives byte-load "
@@ -146,6 +148,21 @@ class Replanner:
         self.n_replans = 0
         self.n_skipped_replans = 0         # hysteresis: drifted but kept plan
         self.last_report: DriftReport | None = None
+        # metrics mirror the counters above (pre-registered so the snapshot
+        # schema is the same whether or not anything ever drifts)
+        self.metrics = metrics if metrics is not None else MetricRegistry()
+        m = self.metrics
+        self._m_replans = m.counter("replanner.replans_total",
+                                    "committed replans (migrations)")
+        self._m_skips = m.counter("replanner.hysteresis_skips_total",
+                                  "drifted checks where the candidate lost")
+        self._m_checks = m.counter("replanner.drift_checks_total",
+                                   "cadenced drift-detector runs")
+        self._m_drifted = m.counter("replanner.drift_detected_total",
+                                    "checks that reported drift")
+        self._m_hit_rate = m.gauge("replanner.realized_hit_rate",
+                                   "realized/predicted cache saved-reads")
+        self._m_hit_rate.set(1.0)
         # fault-tolerance state (all-healthy defaults are exactly the legacy
         # planner: no per-bank caps, unit costs — bit-identical plans)
         self.bank_live = np.ones(cfg.n_banks, dtype=bool)
@@ -200,6 +217,7 @@ class Replanner:
         Accumulated until the next commit; see ``realized_hit_rate``."""
         self._realized_saved += float(saved_reads)
         self._realized_bags += int(n_bags)
+        self._m_hit_rate.set(self.realized_hit_rate())
 
     def realized_hit_rate(self) -> float:
         """REALIZED / PREDICTED saved-reads-per-bag for the installed cache,
@@ -318,6 +336,7 @@ class Replanner:
                 cache_fixed: FixedCachePlan | None = None) -> PlanUpdate:
         self.detector.rebase(freq)
         self.n_replans += 1
+        self._m_replans.inc()
         self.current_plan = plan
         if cache_fixed is None:
             cache_fixed = self._cap(cache_plan, plan)
@@ -327,6 +346,7 @@ class Replanner:
         self._pred_saved_per_bag = None
         self._realized_saved = 0.0
         self._realized_bags = 0
+        self._m_hit_rate.set(1.0)
         if cache_fixed is not None and self._recent_bags:
             from repro.core.cache_runtime import rewrite_bag
             saved = 0
@@ -361,8 +381,10 @@ class Replanner:
             return None
         report = self.detector.check(self.telemetry)
         self.last_report = report
+        self._m_checks.inc()
         if not report.drifted:
             return None
+        self._m_drifted.inc()
         if self.cfg.hysteresis > 0.0 and self.current_plan is not None:
             freq = self.telemetry.freq_vector()
             plan, cache_plan, tiers = self.build_plan(freq)
@@ -398,6 +420,7 @@ class Replanner:
                 candidate = self.projected_max_share(plan, proj)
             if candidate > incumbent * (1.0 - self.cfg.hysteresis):
                 self.n_skipped_replans += 1
+                self._m_skips.inc()
                 return None
             return self._commit(freq, plan, cache_plan, tiers, report,
                                 cache_fixed=cache_fixed)

@@ -42,6 +42,7 @@ from repro.core.cache_runtime import (FixedCachePlan, RewrittenBatch,
                                       build_cache_table_fixed, cap_cache_plan,
                                       empty_cache_plan, entry_member_union)
 from repro.core.partitioning import PartitionPlan
+from repro.obs import NULL_TRACER, MetricRegistry
 from repro.workload.migrate import migrate_rowwise_state, migrate_table
 from repro.workload.replanner import PlanUpdate, ReplanConfig, Replanner
 
@@ -84,7 +85,8 @@ class AdaptiveEmbeddingRuntime:
                  on_swap: Callable[[SwapEvent], None] | None = None,
                  max_cache_per_bag: int = 4,
                  max_residual_per_bag: int = 16,
-                 cache_keep: int = 2, tier_keep: int = 2):
+                 cache_keep: int = 2, tier_keep: int = 2,
+                 tracer=None, metrics: MetricRegistry | None = None):
         if cfg.capacity_rows is not None \
                 and cfg.capacity_rows != table.rows_per_bank:
             raise ValueError(
@@ -94,8 +96,36 @@ class AdaptiveEmbeddingRuntime:
         self.plan = plan
         self.dist = dist
         self.on_swap = on_swap
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricRegistry()
+        # pre-register every metric this runtime can emit so a run where a
+        # lane never fires still exports its counters at 0 (the snapshot's
+        # key-path schema must not depend on which events happened)
+        m = self.metrics
+        self._m_swaps = m.counter("runtime.swaps_total",
+                                  "completed replan+migrate+swap cycles")
+        self._m_swaps_by = {r: m.counter(f"runtime.swaps_{r}_total",
+                                         f"swaps triggered by {r}")
+                            for r in ("drift", "bank_failure", "straggler")}
+        self._m_migrate_ms = m.histogram("runtime.migrate_ms",
+                                         "host migrate_table wall time")
+        self._m_recovery_ms = m.histogram(
+            "runtime.recovery_ms",
+            "bank-failure handled -> recovered table live")
+        self._m_imbalance = m.gauge("runtime.plan_imbalance",
+                                    "imbalance of the live plan")
+        self._m_cache_version = m.gauge("runtime.cache_version")
+        self._m_cache_entries = m.gauge("runtime.cache_entries",
+                                        "live entries in the swapped cache")
+        self._m_cache_dropped = m.counter("runtime.cache_dropped_total",
+                                          "mined entries truncated away")
+        self._m_tier_version = m.gauge("runtime.tier_version")
+        self._m_tier_promoted = m.counter("runtime.tier_promoted_total")
+        self._m_tier_demoted = m.counter("runtime.tier_demoted_total")
+        self._m_tier_requant = m.counter("runtime.tier_requantized_total")
         self.replanner = Replanner(cfg, table.vocab, init_freq=init_freq,
-                                   init_plan=plan)
+                                   init_plan=plan, metrics=self.metrics)
+        self._m_imbalance.set(plan.imbalance())
         self.swaps: list[SwapEvent] = []
         self._batch = 0
         # cache-aware serving: a versioned rewriter starts at version 0 with
@@ -169,8 +199,12 @@ class AdaptiveEmbeddingRuntime:
     # -- migration + swap ---------------------------------------------------
 
     def apply(self, update: PlanUpdate, *, reason: str = "drift") -> SwapEvent:
-        new_table = migrate_table(self.table, update.plan, self.dist,
-                                  rows_per_bank=self.table.rows_per_bank)
+        import time
+        with self.tracer.span("migrate", reason=reason):
+            t0 = time.perf_counter()
+            new_table = migrate_table(self.table, update.plan, self.dist,
+                                      rows_per_bank=self.table.rows_per_bank)
+            self._m_migrate_ms.observe((time.perf_counter() - t0) * 1e3)
         return self.apply_migrated(update, new_table, reason=reason)
 
     def apply_migrated(self, update: PlanUpdate, new_table: BankedTable, *,
@@ -179,6 +213,28 @@ class AdaptiveEmbeddingRuntime:
         (the train loop migrates params + optimizer state together through
         ``migrate_packed_leaves`` and hands the resulting table here); the
         cache and tier lanes still swap versioned through this runtime."""
+        with self.tracer.span("swap", reason=reason):
+            event = self._apply_migrated(update, new_table, reason)
+        self._m_swaps.inc()
+        if reason in self._m_swaps_by:
+            self._m_swaps_by[reason].inc()
+        self._m_imbalance.set(event.new_imbalance)
+        if event.cache_version is not None:
+            self._m_cache_version.set(event.cache_version)
+            self._m_cache_entries.set(event.cache_entries)
+            self._m_cache_dropped.inc(event.cache_dropped)
+        if event.tier_version is not None:
+            self._m_tier_version.set(event.tier_version)
+            self._m_tier_promoted.inc(event.tier_promoted)
+            self._m_tier_demoted.inc(event.tier_demoted)
+            self._m_tier_requant.inc(event.tier_requantized)
+        self.tracer.instant("swap_live", batch=event.batch, reason=reason)
+        if self.on_swap is not None:
+            self.on_swap(event)
+        return event
+
+    def _apply_migrated(self, update: PlanUpdate, new_table: BankedTable,
+                        reason: str) -> SwapEvent:
         old_imb = self._realized_imbalance(self.plan, update.freq)
         prev_tiered = self._tier_states.get(self.tier_version) \
             if self.tier_version is not None else None
@@ -230,8 +286,6 @@ class AdaptiveEmbeddingRuntime:
             event.tier_demoted = stats["n_demoted"]
             event.tier_requantized = stats["n_requantized"]
         self.swaps.append(event)
-        if self.on_swap is not None:
-            self.on_swap(event)
         return event
 
     # -- fault recovery ------------------------------------------------------
@@ -251,11 +305,14 @@ class AdaptiveEmbeddingRuntime:
         ``recovery_s`` (failure handled -> recovered table live).
         """
         import time
-        t0 = time.monotonic()
-        self.replanner.set_bank_health(live_mask)
-        update = self.replanner.force_replan()
-        event = self.apply(update, reason="bank_failure")
-        event.recovery_s = time.monotonic() - t0
+        with self.tracer.span("recovery",
+                              dead=int((~np.asarray(live_mask)).sum())):
+            t0 = time.monotonic()
+            self.replanner.set_bank_health(live_mask)
+            update = self.replanner.force_replan()
+            event = self.apply(update, reason="bank_failure")
+            event.recovery_s = time.monotonic() - t0
+        self._m_recovery_ms.observe(event.recovery_s * 1e3)
         return event
 
     def on_straggler(self, penalty: np.ndarray) -> SwapEvent:
