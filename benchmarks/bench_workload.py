@@ -787,6 +787,153 @@ def run_fault_recovery(*, seed: int = SEED) -> dict:
     }
 
 
+REPLICATION_WARM_BAGS = 2048   # plan-building window (fixed, every mode)
+REPLICATION_HELD_BAGS = 1024   # held-out traffic the plans are scored on
+REPLICATION_KS = (1, 2, 4, 8)  # copy counts swept for the monotone gate
+
+
+def _batch_stats_replicated(bags: list[np.ndarray], rplan,
+                            bag_offset: int) -> tuple[float, float]:
+    """(max-bank share, modeled latency us) with each bag's reads routed to
+    copy ``wang_hash(global bag id) % k_max`` — the kernel's replica pick,
+    applied to the same cost model as ``_batch_stats``."""
+    import jax.numpy as jnp
+
+    from repro.kernels.embedding_bag import replica_of_bag
+    cols = np.asarray(replica_of_bag(
+        jnp.arange(bag_offset, bag_offset + len(bags)), rplan.k_max))
+    counts = np.zeros(rplan.n_banks)
+    for i, bag in enumerate(bags):
+        rows = np.unique(bag)
+        np.add.at(counts, rplan.bank_of_copy[rows, cols[i]], 1.0)
+    total = counts.sum()
+    share = float(counts.max() / total) if total else 1.0 / rplan.n_banks
+    t_row = UPMEMProfile().mram_read_latency(DIM * 4)
+    return share, float(counts.max() * t_row * 1e6)
+
+
+def run_replication(*, seed: int = SEED) -> dict:
+    """Hot-row replication vs the single-copy §3.2 optimum.
+
+    The single-copy greedy has a FLOOR: a row lives on exactly one bank, so
+    the hottest bank's share can never drop below the hottest row's share of
+    traffic — on this zipf-1.08 trace that floor sits well above the ideal
+    1/BANKS. Replication breaks it: the top-R rows get k copies on distinct
+    banks and a per-bag hash splits their reads, so the modeled max-bank
+    share approaches the ideal monotonically as k grows. Scored two ways on
+    the same held-out window: the plan's own load model (the gate) and
+    batch-wise hash-routed reads through the kernel's actual replica pick
+    (realized). Inputs are FIXED SIZE — independent of --stream-bags /
+    --smoke — so the gate booleans are identical in every artifact mode.
+    """
+    import dataclasses as _dc
+
+    from repro.core.partitioning import (choose_replication,
+                                         replicated_partition)
+    cap = int(np.ceil(VOCAB / BANKS) * 1.25)
+    # STATIONARY head: rotation would smear the cumulative frequency over
+    # several hot sets and dissolve the floor this scenario isolates (drift
+    # response is run()'s claim, not this one) — same zipf-1.08 shape
+    drift = _dc.replace(DRIFT, rotate_every=10**9, burst_prob=0.0)
+    trace = DriftingZipfTrace(drift, seed=seed)
+    warm = trace.bags(REPLICATION_WARM_BAGS)
+    freq = np.zeros(VOCAB)
+    for bag in warm:
+        np.add.at(freq, bag, 1.0)
+    freq += 1e-3
+    ideal = 1.0 / BANKS
+
+    single = non_uniform_partition(freq, BANKS, capacity_rows=cap)
+    single_share = float(single.load_per_bank.max()
+                         / single.load_per_bank.sum())
+    top_row_share = float(freq.max() / freq.sum())
+
+    plans, swept = {}, {}
+    for k in REPLICATION_KS:
+        copies = choose_replication(freq, BANKS, k_max=k)
+        rp = replicated_partition(freq, BANKS, copies=copies,
+                                  capacity_rows=cap, k_max=k)
+        plans[k] = rp
+        swept[str(k)] = {
+            "modeled_max_bank_share": rp.max_share(),
+            "n_replicated_rows": int(rp.n_replicated),
+            "extra_physical_rows": int(rp.copies.sum()) - VOCAB,
+        }
+    shares = [swept[str(k)]["modeled_max_bank_share"] for k in REPLICATION_KS]
+
+    # held-out traffic: single-copy routing vs the kernel's hash-routed
+    # replica pick on the sweep's largest plan. The GATE compares aggregate
+    # shares over the whole window (per-batch maxima are noise-dominated at
+    # this head size: ~750 reads over 8 banks vs a 0.5pp modeled gap); the
+    # per-batch stats are reported for the latency model only.
+    k_top = REPLICATION_KS[-1]
+    held = trace.bags(REPLICATION_HELD_BAGS)
+    sg_share, sg_lat, rp_share, rp_lat = [], [], [], []
+    for b in range(REPLICATION_HELD_BAGS // BATCH):
+        bags = held[b * BATCH:(b + 1) * BATCH]
+        s, l = _batch_stats(bags, single)
+        sg_share.append(s)
+        sg_lat.append(l)
+        s, l = _batch_stats_replicated(bags, plans[k_top], b * BATCH)
+        rp_share.append(s)
+        rp_lat.append(l)
+    import jax.numpy as jnp
+
+    from repro.kernels.embedding_bag import replica_of_bag
+    cols = np.asarray(replica_of_bag(jnp.arange(len(held)), k_top))
+    agg_single = np.zeros(BANKS)
+    agg_repl = np.zeros(BANKS)
+    for i, bag in enumerate(held):
+        rows = np.unique(bag)
+        np.add.at(agg_single, single.bank_of_row[rows], 1.0)
+        np.add.at(agg_repl, plans[k_top].bank_of_copy[rows, cols[i]], 1.0)
+    agg_single_share = float(agg_single.max() / agg_single.sum())
+    agg_repl_share = float(agg_repl.max() / agg_repl.sum())
+
+    return {
+        "config": {
+            "vocab": VOCAB, "banks": BANKS, "batch": BATCH,
+            "warm_bags": REPLICATION_WARM_BAGS,
+            "held_bags": REPLICATION_HELD_BAGS,
+            "k_sweep": list(REPLICATION_KS), "capacity_rows": cap,
+            "drift": dataclass_dict(drift), "seed": seed,
+            "replica_route": "wang_hash(bag) % k_max (kernel replica pick)",
+        },
+        "ideal_share": ideal,
+        "top_row_share": top_row_share,
+        "single_copy": {
+            "modeled_max_bank_share": single_share,
+            "held_window_max_bank_share": agg_single_share,
+            "mean_max_bank_load_share": float(np.mean(sg_share)),
+            "p99_model_latency_us": float(p99(sg_lat)),
+        },
+        "replicated": swept,
+        "replicated_realized": {
+            "k": k_top,
+            "held_window_max_bank_share": agg_repl_share,
+            "mean_max_bank_load_share": float(np.mean(rp_share)),
+            "p99_model_latency_us": float(p99(rp_lat)),
+        },
+        "adaptive_wins": {
+            # the tentpole claim: the single-copy optimum is floored by the
+            # hottest row; replication goes below that floor
+            "single_copy_floored_by_top_row":
+                single_share >= top_row_share - 1e-9 > ideal,
+            "replicated_beats_single_copy": shares[-1] < single_share,
+            # tolerances absorb float tie-breaking in the heap greedy (the
+            # k-sweep shares differ at the 1e-8 level when equal-load banks
+            # pop in a different order); real regressions move shares by
+            # whole percentage points
+            "monotone_toward_ideal": all(
+                b <= a + 1e-6 for a, b in zip(shares, shares[1:]))
+                and shares[-1] <= ideal + 1e-3,
+            "k1_matches_single_copy": abs(shares[0] - single_share) < 1e-9,
+            "hash_routing_beats_single_copy":
+                agg_repl_share < agg_single_share,
+        },
+    }
+
+
 def workload_drift():
     """benchmarks/run.py hook: (name, us_per_call, derived) rows. A short
     stream keeps the CI run in seconds; the standalone script uses the full
@@ -816,6 +963,13 @@ def workload_drift():
            d["degraded"]["p99_model_latency_us"],
            f"recov{d['degraded']['recovery_batches']}batches"
            f"_degreads{d['degraded']['degraded_reads_total']}")
+    d = run_replication()
+    k = d["replicated_realized"]["k"]
+    yield ("workload_replication_p99_model",
+           d["replicated_realized"]["p99_model_latency_us"],
+           f"share{d['replicated'][str(k)]['modeled_max_bank_share']:.3f}"
+           f"_vs_single{d['single_copy']['modeled_max_bank_share']:.3f}"
+           f"_k{k}")
 
 
 def write_json(out: str = "BENCH_workload.json", smoke: bool = False,
@@ -833,6 +987,7 @@ def write_json(out: str = "BENCH_workload.json", smoke: bool = False,
     doc["criteo_replay"] = run_criteo_replay(stream_bags=n, path=criteo_path)
     doc["tiered"] = run_tiered(stream_bags=n)
     doc["fault_recovery"] = run_fault_recovery()
+    doc["replication"] = run_replication()
     doc["smoke"] = smoke
     with open(out, "w") as fh:
         json.dump(doc, fh, indent=2)
@@ -884,6 +1039,26 @@ def _print_fault(doc: dict) -> None:
     print(f"  wins={doc['adaptive_wins']}")
 
 
+def _print_replication(doc: dict) -> None:
+    s = doc["single_copy"]
+    print("[hot-row replication vs the single-copy floor]")
+    print(f"{'single':<10} modeled share {s['modeled_max_bank_share']:>8.4f}  "
+          f"(top row {doc['top_row_share']:.4f}, "
+          f"ideal {doc['ideal_share']:.4f})")
+    for k, r in doc["replicated"].items():
+        print(f"{'k=' + k:<10} modeled share "
+              f"{r['modeled_max_bank_share']:>8.4f}  "
+              f"({r['n_replicated_rows']} rows replicated, "
+              f"+{r['extra_physical_rows']} physical)")
+    rr = doc["replicated_realized"]
+    print(f"  hash-routed k={rr['k']}: held-window share "
+          f"{rr['held_window_max_bank_share']:.4f} vs "
+          f"{s['held_window_max_bank_share']:.4f} single, p99 model "
+          f"{rr['p99_model_latency_us']:.1f}us vs "
+          f"{s['p99_model_latency_us']:.1f}us")
+    print(f"  wins={doc['adaptive_wins']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_workload.json")
@@ -906,12 +1081,14 @@ def main() -> None:
     _print_scenario("criteo replay", doc["criteo_replay"])
     _print_tiered(doc["tiered"])
     _print_fault(doc["fault_recovery"])
+    _print_replication(doc["replication"])
     print(f"ideal share {doc['ideal_share']:.4f}; wrote {args.out}")
     ok = (all(doc["adaptive_wins"].values())
           and all(doc["cache_aware"]["adaptive_wins"].values())
           and all(doc["criteo_replay"]["adaptive_wins"].values())
           and all(doc["tiered"]["adaptive_wins"].values())
-          and all(doc["fault_recovery"]["adaptive_wins"].values()))
+          and all(doc["fault_recovery"]["adaptive_wins"].values())
+          and all(doc["replication"]["adaptive_wins"].values()))
     if not ok:
         raise SystemExit(1)
 

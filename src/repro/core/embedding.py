@@ -141,6 +141,73 @@ def init_banked(key, plan: PartitionPlan, dim: int, *, scale: float = 0.01,
 
 
 # ---------------------------------------------------------------------------
+# replicated table: hot rows live on k banks, a hash splits their traffic
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ReplicatedTable:
+    """Pytree: packed rows + replica-axis remap (core/partitioning.py
+    ``ReplicatedPlan``). ``remap_bank``/``remap_slot`` are ``(vocab, k_max)``
+    with cyclic-padded columns, so any column of row v is a valid copy; the
+    lookup picks column ``wang_hash(bag) % k_max`` per bag. ``k_max == 1``
+    (or a plan with no replicated rows) is layout-identical to
+    ``BankedTable``.
+    """
+
+    packed: Array       # (n_banks * rows_per_bank, dim)
+    remap_bank: Array   # (vocab, k_max) int32, replicated
+    remap_slot: Array   # (vocab, k_max) int32, replicated
+    n_banks: int = dataclasses.field(metadata=dict(static=True))
+    rows_per_bank: int = dataclasses.field(metadata=dict(static=True))
+    k_max: int = dataclasses.field(default=1, metadata=dict(static=True))
+
+    @property
+    def vocab(self) -> int:
+        return self.remap_bank.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.packed.shape[-1]
+
+    def flat_remap(self) -> Array:
+        """(vocab * k_max,) copy -> position in the unsharded packed array —
+        the flattened stream the kernel indexes at ``row * k_max + r``."""
+        return (self.remap_bank * self.rows_per_bank
+                + self.remap_slot).reshape(-1).astype(jnp.int32)
+
+    def flat_bank(self) -> Array:
+        """(vocab * k_max,) int32 bank per copy, kernel-stream order."""
+        return self.remap_bank.reshape(-1).astype(jnp.int32)
+
+
+def pack_replicated(table: np.ndarray, rplan, *,
+                    rows_per_bank: int | None = None,
+                    dtype=None) -> ReplicatedTable:
+    """Physically materialize every copy the plan calls for: row v is
+    written to all ``copies[v]`` of its (bank, slot) homes."""
+    vocab, dim = table.shape
+    if rows_per_bank is None:
+        rows_per_bank = int(rplan.max_rows_per_bank)
+    packed = np.zeros((rplan.n_banks * rows_per_bank, dim), dtype=table.dtype)
+    vv, rr = np.nonzero(np.arange(rplan.k_max)[None, :]
+                        < rplan.copies[:, None])
+    pos = (rplan.bank_of_copy[vv, rr].astype(np.int64) * rows_per_bank
+           + rplan.slot_of_copy[vv, rr])
+    packed[pos] = table[vv]
+    if dtype is not None:
+        packed = packed.astype(dtype)
+    return ReplicatedTable(
+        packed=jnp.asarray(packed),
+        remap_bank=jnp.asarray(rplan.bank_of_copy, dtype=jnp.int32),
+        remap_slot=jnp.asarray(rplan.slot_of_copy, dtype=jnp.int32),
+        n_banks=rplan.n_banks,
+        rows_per_bank=rows_per_bank,
+        k_max=rplan.k_max,
+    )
+
+
+# ---------------------------------------------------------------------------
 # stage 2, jnp backend: segment-scan over the bag length
 # ---------------------------------------------------------------------------
 
@@ -254,6 +321,126 @@ def _pallas_bag_bwd(cfg, res, ct):
 
 
 _pallas_bag.defvjp(_pallas_bag_fwd, _pallas_bag_bwd)
+
+
+# ---------------------------------------------------------------------------
+# replicated stage 2: hash-picked replica per bag, k-way gradient scatter
+# ---------------------------------------------------------------------------
+
+def _replica_cols(n: int, k_max: int) -> Array:
+    """Replica column per flattened bag — the SAME ``wang_hash(bag) % k``
+    pick the kernel makes (kernels.embedding_bag.replica_of_bag), so jnp
+    and pallas read identical copies."""
+    from repro.kernels.embedding_bag import replica_of_bag
+    return replica_of_bag(jnp.arange(n, dtype=jnp.int32), k_max)
+
+
+def _replicated_bag_scan(table: Array, idx: Array, *, bank_flat: Array,
+                         slot_flat: Array, my_bank, off: Array,
+                         k_max: int) -> Array:
+    """jnp fallback for the replicated stage 2: ``_bag_partial_scan``'s
+    dataflow with the per-bag replica column folded into the remap index.
+    Same j-ascending fp32 accumulation, so it bit-matches the kernel."""
+    lead, L = idx.shape[:-1], idx.shape[-1]
+    flat = idx.reshape(-1, L)
+    N = flat.shape[0]
+    offs = _field_offsets_per_bag(off, N)
+    rcol = _replica_cols(N, k_max)
+    dim = table.shape[-1]
+
+    def body(acc, j):
+        raw = flat[:, j]
+        valid = raw >= 0
+        row = jnp.where(valid, raw + offs, 0)
+        rowk = row * k_max + rcol if k_max > 1 else row
+        mine = valid & ((my_bank < 0) | (bank_flat[rowk] == my_bank))
+        src = jnp.where(mine, slot_flat[rowk], 0)
+        rows = jnp.take(table, src, axis=0)
+        return acc + jnp.where(mine[:, None], rows, 0).astype(acc.dtype), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((N, dim), jnp.float32),
+                          jnp.arange(L))
+    return acc.reshape(*lead, dim).astype(table.dtype)
+
+
+def _replicated_scatter_ct(shape, dtype, bank_flat, slot_flat, my, idx, ct,
+                           *, off, k_max: int):
+    """Transpose of the replicated bag sum (jnp): each entry's cotangent
+    lands on the copy its forward read came through, so a row's copies
+    together receive exactly the single-copy gradient."""
+    L = idx.shape[-1]
+    flat = idx.reshape(-1, L)
+    N = flat.shape[0]
+    ctf = ct.reshape(N, -1).astype(jnp.float32)
+    offs = _field_offsets_per_bag(off, N)
+    rcol = _replica_cols(N, k_max)
+
+    def body(d_tab, j):
+        raw = flat[:, j]
+        valid = raw >= 0
+        row = jnp.where(valid, raw + offs, 0)
+        rowk = row * k_max + rcol if k_max > 1 else row
+        mine = valid & ((my < 0) | (bank_flat[rowk] == my))
+        src = jnp.where(mine, slot_flat[rowk], 0)
+        upd = jnp.where(mine[:, None], ctf, 0)
+        return d_tab.at[src].add(upd), None
+
+    d_tab, _ = jax.lax.scan(body, jnp.zeros(shape, jnp.float32),
+                            jnp.arange(L))
+    return d_tab.astype(dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _replicated_bag(cfg: tuple, packed: Array, bank_flat: Array,
+                    slot_flat: Array, off: Array, my: Array,
+                    idx: Array) -> Array:
+    """Stage-2 partial bag sums over a REPLICATED table.
+
+    cfg = (tile_b, interpret, backend, bwd, k_max). bank_flat/slot_flat are
+    the flattened (vocab * k_max,) replica-axis remap; each bag reads copy
+    ``wang_hash(bag) % k_max``. The pallas path is the ordinary banked
+    kernel with ``k_max`` folded into its entry resolver.
+    """
+    tile_b, interpret, backend, _, k_max = cfg
+    if backend == "pallas":
+        from repro.kernels.embedding_bag import banked_embedding_bag_pallas
+        lead, L = idx.shape[:-1], idx.shape[-1]
+        flat, n = _pad_bags(idx.reshape(-1, L).astype(jnp.int32), tile_b)
+        table, d = _pad_lanes(packed, interpret)
+        out = banked_embedding_bag_pallas(
+            table, bank_flat, slot_flat, off,
+            my.reshape(1).astype(jnp.int32), flat,
+            tile_b=tile_b, interpret=interpret, k_max=k_max)
+        return out[:n, :d].reshape(*lead, d)
+    return _replicated_bag_scan(packed, idx, bank_flat=bank_flat,
+                                slot_flat=slot_flat, my_bank=my, off=off,
+                                k_max=k_max)
+
+
+def _replicated_bag_fwd(cfg, packed, bank_flat, slot_flat, off, my, idx):
+    out = _replicated_bag(cfg, packed, bank_flat, slot_flat, off, my, idx)
+    return out, (packed, bank_flat, slot_flat, off, my, idx)
+
+
+def _replicated_bag_bwd(cfg, res, ct):
+    tile_b, interpret, _, bwd, k_max = cfg
+    packed, bank_flat, slot_flat, off, my, idx = res
+    if bwd == "pallas":
+        from repro.kernels.embedding_bag import ct_scatter_bag_pallas
+        L = idx.shape[-1]
+        d_tab = ct_scatter_bag_pallas(
+            ct.reshape(-1, ct.shape[-1]),
+            idx.reshape(-1, L).astype(jnp.int32), bank_flat, slot_flat, off,
+            my.reshape(1).astype(jnp.int32), packed.shape[0], packed.dtype,
+            tile_s=tile_b, interpret=interpret, k_max=k_max)
+    else:
+        d_tab = _replicated_scatter_ct(packed.shape, packed.dtype, bank_flat,
+                                       slot_flat, my, idx, ct, off=off,
+                                       k_max=k_max)
+    return (d_tab, None, None, None, None, None)
+
+
+_replicated_bag.defvjp(_replicated_bag_fwd, _replicated_bag_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -493,10 +680,17 @@ def degraded_row_counts(remap_bank: Array, bank_live: Array, rows: Array,
     request with count k is missing exactly k row contributions.
     ``per_bag=True`` sums only the trailing (bag) axis instead — shape
     ``rows.shape[:-1]``, the granularity ``degraded_mean_fill`` needs.
+
+    ``remap_bank`` may also be a replicated ``(vocab, k_max)`` map: a read
+    then counts as degraded only when EVERY copy of its row is dead — any
+    surviving replica serves it loss-free (``_replica_failover_maps``).
     """
     valid = rows >= 0
     safe = jnp.where(valid, rows, 0)
-    dead = valid & ~bank_live[remap_bank[safe]]
+    live = bank_live[remap_bank[safe]]
+    if remap_bank.ndim == 2:
+        live = live.any(axis=-1)
+    dead = valid & ~live
     if per_bag:
         return dead.sum(axis=-1).astype(jnp.int32)
     return dead.reshape(rows.shape[0], -1).sum(axis=-1).astype(jnp.int32)
@@ -630,6 +824,78 @@ def banked_gather(t: BankedTable, idx: Array, dist: DistCtx | None, *,
     """Dense per-position lookup (LM token embedding / BERT4Rec item seq)."""
     return banked_embedding_bag(t, idx, dist, reduce_bag=False,
                                 bank_live=bank_live)
+
+
+def _replica_failover_maps(t: ReplicatedTable,
+                           bank_live: Array) -> tuple[Array, Array]:
+    """(bank_flat, slot_flat) with dead copies rerouted to a live sibling.
+
+    For every (row, column) whose bank is dead, substitute the row's FIRST
+    live column — a surviving replica covers a dead bank's head reads
+    instantly, with no replan and no kernel change. Rows with NO live copy
+    keep a binary dead marker (1 vs my_bank = 0), resolving to the zero-row
+    degraded substitute exactly like the single-copy ``_binary_live_map``
+    path. Pure jnp on jit ARGUMENTS, so flipping a bank dead/alive never
+    recompiles.
+    """
+    live_rc = bank_live[t.remap_bank]                  # (V, k) bool
+    any_live = live_rc.any(axis=1)
+    first_live = jnp.argmax(live_rc, axis=1)           # 0 when none live
+    col = jnp.arange(t.k_max, dtype=jnp.int32)[None, :]
+    eff = jnp.where(live_rc, col, first_live[:, None]).astype(jnp.int32)
+    rows = jnp.arange(t.vocab)[:, None]
+    eff_bank = t.remap_bank[rows, eff]
+    eff_slot = t.remap_slot[rows, eff]
+    bank_flat = jnp.where(any_live[:, None], 0, 1).astype(jnp.int32) \
+        + jnp.zeros_like(eff)
+    slot_flat = (eff_bank * t.rows_per_bank + eff_slot).astype(jnp.int32)
+    return bank_flat.reshape(-1), slot_flat.reshape(-1)
+
+
+def replicated_embedding_bag(t: ReplicatedTable, idx: Array,
+                             dist: DistCtx | None, *, backend: str = "auto",
+                             bwd_backend: str = "auto",
+                             field_offsets: Array | None = None,
+                             tile_b: int = 8,
+                             interpret: bool | None = None,
+                             bank_live: Array | None = None) -> Array:
+    """Stages 1-3 over a REPLICATED table: idx (..., L) -> (..., dim) bag
+    sums, with each bag reading copy ``wang_hash(bag) % k_max`` of every row
+    it touches — a k-copy hot row's traffic splits k ways with no host-side
+    routing. With ``k_max == 1`` (or no replicated rows) this is bit-exact
+    to ``banked_embedding_bag``'s unsharded path on both backends.
+
+    Differentiable: the backward scatters each bag's cotangent onto the
+    copy its forward read came through, so summing a row's copies recovers
+    the single-copy gradient exactly (fp32 accumulation on both backends).
+
+    ``bank_live`` composes replication with fault tolerance: a dead copy's
+    reads fail over to the row's first live copy instantly (zero extra
+    latency, no replan); only rows with NO live copy degrade to the zero
+    row (count them with ``degraded_row_counts`` on the (V, k) remap).
+
+    The sharded (mesh) path is not wired yet — replication currently rides
+    the unsharded serve loop; the multi-host mesh item in ROADMAP.md picks
+    this up.
+    """
+    if dist is not None:
+        raise ValueError("replicated_embedding_bag is unsharded-only for "
+                         "now — see the multi-host serving mesh item in "
+                         "ROADMAP.md")
+    backend = _resolve_backend(backend)
+    bwd = _resolve_bwd(bwd_backend, backend)
+    interpret = _default_interpret(interpret)
+    off = jnp.zeros((1,), jnp.int32) if field_offsets is None \
+        else jnp.asarray(field_offsets, jnp.int32)
+    if bank_live is None:
+        bank_flat = t.flat_bank()
+        slot_flat = t.flat_remap()
+        my = jnp.full((), -1, jnp.int32)
+    else:
+        bank_flat, slot_flat = _replica_failover_maps(t, bank_live)
+        my = jnp.zeros((), jnp.int32)
+    cfg = (tile_b, interpret, backend, bwd, t.k_max)
+    return _replicated_bag(cfg, t.packed, bank_flat, slot_flat, off, my, idx)
 
 
 def tiered_embedding_bag(fp_packed: Array, tt, idx: Array,

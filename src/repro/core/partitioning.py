@@ -84,6 +84,201 @@ def _plan_from_banks(n_banks: int, bank_of_row: np.ndarray,
     )
 
 
+@dataclasses.dataclass
+class ReplicatedPlan:
+    """Replication-aware row -> (bank, slot) assignment (§3.2 + hot-row
+    replication).
+
+    Row ``v`` owns ``copies[v]`` physical copies, each on a DISTINCT bank.
+    The per-row maps are ``(vocab, k_max)``: column ``r`` holds copy
+    ``r % copies[v]`` (cyclic padding), so a reader that picks any column in
+    ``[0, k_max)`` — e.g. the kernel's ``wang_hash(bag) % k_max`` — always
+    lands on a valid copy, and when ``copies[v]`` divides ``k_max`` the
+    traffic splits uniformly across the copies. Single-copy rows repeat the
+    same (bank, slot) in every column, which makes ``k_max == 1`` (or a plan
+    with no replicated rows) bit-identical to the plain ``PartitionPlan``
+    layout.
+    """
+
+    n_banks: int
+    k_max: int
+    copies: np.ndarray               # (vocab,) int32 in {1, k_max}
+    bank_of_copy: np.ndarray         # (vocab, k_max) int32
+    slot_of_copy: np.ndarray         # (vocab, k_max) int32
+    rows_per_bank: np.ndarray        # (n_banks,) int32 — physical rows stored
+    load_per_bank: np.ndarray        # (n_banks,) float64 — freq split k ways
+
+    @property
+    def vocab(self) -> int:
+        return int(self.copies.shape[0])
+
+    @property
+    def max_rows_per_bank(self) -> int:
+        return int(self.rows_per_bank.max())
+
+    @property
+    def n_replicated(self) -> int:
+        return int((self.copies > 1).sum())
+
+    def imbalance(self) -> float:
+        mean = self.load_per_bank.mean()
+        return float(self.load_per_bank.max() / mean) if mean > 0 else 1.0
+
+    def max_share(self) -> float:
+        """Hottest bank's share of total modeled traffic (ideal: 1/n_banks)."""
+        total = self.load_per_bank.sum()
+        return float(self.load_per_bank.max() / total) if total > 0 else 0.0
+
+    def validate(self) -> None:
+        V, k = self.bank_of_copy.shape
+        assert k == self.k_max and self.slot_of_copy.shape == (V, k)
+        assert self.bank_of_copy.min() >= 0
+        assert self.bank_of_copy.max() < self.n_banks
+        cols = np.arange(k)[None, :] % self.copies[:, None]
+        # cyclic padding: column r repeats copy r % copies[v]
+        base = self.bank_of_copy[np.arange(V)[:, None], cols]
+        assert (base == self.bank_of_copy).all()
+        for v in np.flatnonzero(self.copies > 1):
+            c = int(self.copies[v])
+            assert np.unique(self.bank_of_copy[v, :c]).shape[0] == c, \
+                "replica copies must land on distinct banks"
+        # physical (bank, slot) pairs are unique and dense per bank
+        vv, rr = np.nonzero(np.arange(k)[None, :] < self.copies[:, None])
+        bb, ss = self.bank_of_copy[vv, rr], self.slot_of_copy[vv, rr]
+        for b in range(self.n_banks):
+            slots = ss[bb == b]
+            assert slots.shape[0] == self.rows_per_bank[b]
+            if slots.shape[0]:
+                assert slots.min() == 0 and slots.max() == slots.shape[0] - 1
+                assert np.unique(slots).shape[0] == slots.shape[0]
+
+
+def choose_replication(freq: np.ndarray, n_banks: int, *, k_max: int,
+                       max_r: int = 256,
+                       hot_rows: np.ndarray | None = None) -> np.ndarray:
+    """Pick the copy count per row from live head mass.
+
+    A row whose frequency exceeds the perfectly-balanced per-copy load
+    ``total / (n_banks * k_max)`` cannot be spread by placement alone — it
+    gets ``k_max`` copies; everything else stays single-copy. ``max_r``
+    bounds the capacity cost (R extra-copy rows cost ``R * (k_max - 1)``
+    physical rows). ``hot_rows`` (e.g. the tiered lane's bf16 head) further
+    restricts candidates so replicas stay in the full-precision tier.
+    """
+    vocab = freq.shape[0]
+    copies = np.ones(vocab, dtype=np.int32)
+    if k_max <= 1 or vocab == 0:
+        return copies
+    freq = np.asarray(freq, np.float64)
+    total = float(freq.sum())
+    if total <= 0:
+        return copies
+    hot = freq > total / (n_banks * k_max)
+    if hot_rows is not None:
+        mask = np.zeros(vocab, dtype=bool)
+        mask[np.asarray(hot_rows, np.int64)] = True
+        hot &= mask
+    cand = np.flatnonzero(hot)
+    if cand.shape[0] > max_r:
+        cand = cand[np.argsort(-freq[cand], kind="stable")[:max_r]]
+    copies[cand] = k_max
+    return copies
+
+
+def replicated_partition(
+    freq: np.ndarray,
+    n_banks: int,
+    *,
+    copies: np.ndarray,
+    capacity_rows: int | None = None,
+    k_max: int | None = None,
+    bank_capacity_rows: np.ndarray | None = None,
+) -> ReplicatedPlan:
+    """§3.2 greedy, replication-aware: each row's ``copies[v]`` copies go to
+    the ``copies[v]`` least-loaded DISTINCT banks with capacity, each copy
+    accounted at ``freq[v] / copies[v]`` (the hash splits reads uniformly).
+
+    With ``copies`` all ones this reduces to exactly the
+    ``non_uniform_partition`` greedy (same heap tie-breaking, same stable
+    slot order), so the k=1 plan is the single-copy plan. ``k_max`` pins the
+    map width independently of ``copies.max()`` so a serve loop can swap
+    between replicated and unreplicated plans without a shape change.
+    """
+    vocab = freq.shape[0]
+    freq = np.asarray(freq, np.float64)
+    copies = np.asarray(copies, np.int32)
+    if copies.shape != (vocab,):
+        raise ValueError(f"copies {copies.shape} != ({vocab},)")
+    if vocab and copies.min() < 1:
+        raise ValueError("copies must be >= 1")
+    k_need = int(copies.max()) if vocab else 1
+    k_max = k_need if k_max is None else int(k_max)
+    if k_need > k_max:
+        raise ValueError(f"copies.max() {k_need} > k_max {k_max}")
+    if k_need > n_banks:
+        raise ValueError(f"copies.max() {k_need} > n_banks {n_banks}: "
+                         f"replica copies must land on distinct banks")
+    total_rows = int(copies.sum())
+    if capacity_rows is None:
+        capacity_rows = total_rows
+    if bank_capacity_rows is None:
+        cap_of = np.full(n_banks, int(capacity_rows), dtype=np.int64)
+    else:
+        # per-bank override (e.g. 0 rows for a dead bank on the fault path)
+        cap_of = np.asarray(bank_capacity_rows, np.int64)
+        if cap_of.shape != (n_banks,):
+            raise ValueError(f"bank_capacity_rows {cap_of.shape} != ({n_banks},)")
+    if int(cap_of.sum()) < total_rows:
+        raise ValueError(
+            f"capacity exhausted: {int(cap_of.sum())} total rows across "
+            f"{n_banks} banks < {total_rows} physical rows (vocab {vocab} + "
+            f"{total_rows - vocab} replica copies) — raise capacity_rows or "
+            f"lower replication")
+    order = np.argsort(-freq, kind="stable")
+    bank_cols = np.full((vocab, k_max), -1, dtype=np.int32)
+    # heap of (load, rows_used, bank); capacity never grows, so a full bank
+    # is dropped for good
+    heap: list[tuple[float, int, int]] = [(0.0, 0, b) for b in range(n_banks)]
+    heapq.heapify(heap)
+    for v in order:
+        c = int(copies[v])
+        share = float(freq[v]) / c
+        chosen: list[tuple[float, int, int]] = []
+        for _ in range(c):
+            while heap and heap[0][1] >= cap_of[heap[0][2]]:
+                heapq.heappop(heap)
+            if not heap:
+                raise ValueError("capacity exhausted — raise capacity_rows "
+                                 "or lower replication")
+            chosen.append(heapq.heappop(heap))
+        for r, (load, used, b) in enumerate(chosen):
+            bank_cols[v, r] = b
+            heapq.heappush(heap, (load + share, used + 1, b))
+    # stable slot assignment: within a bank, physical rows follow
+    # (global row id, copy index) order — the replicated analogue of
+    # _plan_from_banks' global-id order
+    vv, rr = np.nonzero(np.arange(k_max)[None, :] < copies[:, None])
+    bb = bank_cols[vv, rr]
+    slot_flat = np.zeros(vv.shape[0], dtype=np.int32)
+    for b in range(n_banks):
+        m = bb == b
+        slot_flat[m] = np.arange(int(m.sum()), dtype=np.int32)
+    slot_cols = np.full((vocab, k_max), -1, dtype=np.int32)
+    slot_cols[vv, rr] = slot_flat
+    cols = np.arange(k_max)[None, :] % copies[:, None]
+    rows_idx = np.arange(vocab)[:, None]
+    return ReplicatedPlan(
+        n_banks=n_banks,
+        k_max=k_max,
+        copies=copies,
+        bank_of_copy=bank_cols[rows_idx, cols].astype(np.int32),
+        slot_of_copy=slot_cols[rows_idx, cols].astype(np.int32),
+        rows_per_bank=np.bincount(bb, minlength=n_banks).astype(np.int32),
+        load_per_bank=np.bincount(bb, weights=(freq / copies)[vv],
+                                  minlength=n_banks),
+    )
+
+
 def uniform_partition(vocab: int, n_banks: int,
                       freq: np.ndarray | None = None) -> PartitionPlan:
     """§3.1: contiguous equal row blocks (block b gets rows [b*Nr, (b+1)*Nr))."""

@@ -84,16 +84,45 @@ def _dma_accumulate(acc, table_ref, buf, sem, start, end, src_fn, meta_fn,
     return jax.lax.fori_loop(start, end, body, acc)
 
 
+def wang_hash(x: jax.Array) -> jax.Array:
+    """Wang's 32-bit integer mix — the cheap deterministic in-kernel hash
+    (a handful of shifts/xors/mults, no tables). Shared by the kernels and
+    the jnp fallbacks so the replica pick ``wang_hash(bag) % k_max`` is
+    bit-identical across backends."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ jnp.uint32(61)) ^ (x >> 16)
+    x = x * jnp.uint32(9)
+    x = x ^ (x >> 4)
+    x = x * jnp.uint32(0x27D4EB2D)
+    x = x ^ (x >> 15)
+    return x
+
+
+def replica_of_bag(bag: jax.Array, k_max: int) -> jax.Array:
+    """Replica column for a (global) bag id: hash so consecutive bags spread
+    across copies, mod into [0, k_max)."""
+    return (wang_hash(bag) % jnp.uint32(k_max)).astype(jnp.int32)
+
+
 def _entry_fns(idx_ref, bank_ref, slot_ref, off_ref, my, b0, bag_len,
-               n_fields):
+               n_fields, k_max: int = 1):
     """(src_fn, meta_fn) for a rectangular (bags x bag_len) index stream with
     in-kernel field offsets, remap, and ownership mask. ``e`` is the
-    tile-LOCAL entry id in [0, tile_b * bag_len)."""
+    tile-LOCAL entry id in [0, tile_b * bag_len).
+
+    ``k_max > 1`` is the replicated-table path: bank/slot are the FLATTENED
+    ``(vocab * k_max,)`` replica-axis remap, and each bag reads copy
+    ``wang_hash(bag) % k_max`` of every row it touches — replicas split a
+    hot row's traffic with no host-side routing. ``k_max == 1`` traces the
+    exact single-copy path (no hash in the graph).
+    """
     def resolve(e):
         bag = b0 + e // bag_len
         raw = idx_ref[bag * bag_len + e % bag_len]
         valid = raw >= 0
         row = jnp.where(valid, raw + off_ref[bag % n_fields], 0)
+        if k_max > 1:
+            row = row * k_max + replica_of_bag(bag, k_max)
         mine = valid & ((my < 0) | (bank_ref[row] == my))
         return row, mine
 
@@ -192,10 +221,12 @@ def _plain_fused_kernel(cache_idx_ref, resid_idx_ref, c_len_ref, r_len_ref,
 
 def _banked_bag_kernel(idx_ref, bank_ref, slot_ref, off_ref, my_ref,
                        table_ref, out_ref, buf, sem, *,
-                       tile_b: int, bag_len: int, n_fields: int, dim: int):
+                       tile_b: int, bag_len: int, n_fields: int, dim: int,
+                       k_max: int = 1):
     b0 = pl.program_id(0) * tile_b
     src_fn, meta_fn = _entry_fns(idx_ref, bank_ref, slot_ref, off_ref,
-                                 my_ref[0], b0, bag_len, n_fields)
+                                 my_ref[0], b0, bag_len, n_fields,
+                                 k_max=k_max)
     acc = jnp.zeros((tile_b, dim), jnp.float32)
     acc = _dma_accumulate(acc, table_ref, buf, sem, 0, tile_b * bag_len,
                           src_fn, meta_fn)
@@ -421,20 +452,26 @@ def _scratch(dim: int, dtype):
 def banked_embedding_bag_pallas(table: jax.Array, bank: jax.Array,
                                 slot: jax.Array, field_offsets: jax.Array,
                                 my_bank: jax.Array, idx: jax.Array, *,
-                                tile_b: int = 8, interpret: bool = False
-                                ) -> jax.Array:
+                                tile_b: int = 8, interpret: bool = False,
+                                k_max: int = 1) -> jax.Array:
     """One bank's stage-2 partial bag sums, remap + mask in-kernel.
 
     table (R, D) local rows in HBM; bank/slot (V,) int32 remap (prefetched);
     field_offsets (F,) int32; my_bank (1,) int32 (< 0 disables the ownership
     test); idx (NB, L) int32 raw per-field ids, -1 padded. -> (NB, D).
+
+    ``k_max > 1`` serves a REPLICATED table: bank/slot are the flattened
+    ``(V * k_max,)`` replica-axis remap and each bag's reads resolve through
+    replica column ``wang_hash(bag) % k_max`` (see ``_entry_fns``); the
+    kernel body is otherwise unchanged — same prefetch streams, same DMA
+    ping-pong, one extra SMEM index multiply per entry.
     """
     NB, L = idx.shape
     R, D = table.shape
     assert NB % tile_b == 0, (NB, tile_b)
     kernel = functools.partial(
         _banked_bag_kernel, tile_b=tile_b, bag_len=L,
-        n_fields=field_offsets.shape[0], dim=D)
+        n_fields=field_offsets.shape[0], dim=D, k_max=k_max)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
         grid=(NB // tile_b,),
@@ -628,8 +665,8 @@ def _ct_scatter_call(ct: jax.Array, dest: jax.Array, bags: jax.Array,
 def ct_scatter_bag_pallas(ct: jax.Array, idx: jax.Array, bank: jax.Array,
                           slot: jax.Array, field_offsets: jax.Array,
                           my_bank: jax.Array, n_rows: int, out_dtype, *,
-                          tile_s: int = 8, interpret: bool = False
-                          ) -> jax.Array:
+                          tile_s: int = 8, interpret: bool = False,
+                          k_max: int = 1) -> jax.Array:
     """Transpose of ``banked_embedding_bag_pallas``: scatter-add the bag
     cotangents back onto one bank's rows, entirely in the kernel layer.
 
@@ -643,6 +680,13 @@ def ct_scatter_bag_pallas(ct: jax.Array, idx: jax.Array, bank: jax.Array,
     slot, and sorts — see ``scatter_run_metadata``. fp32 accumulation per
     run, one cast to ``out_dtype`` at the write, matching the fallback's
     accumulation policy bit-for-bit in fp32.
+
+    ``k_max > 1`` is the k-way replicated backward: each entry's destination
+    is the SAME hash-picked copy its forward read came through (bank/slot
+    flattened ``(V * k_max,)``), so every copy of a row accumulates exactly
+    the cotangents of the bags it served — the sorted-run machinery groups
+    the per-copy collisions like any other slot collision, and summing a
+    row's copies recovers the single-copy gradient.
     """
     NB, L = idx.shape
     E = NB * L
@@ -652,6 +696,8 @@ def ct_scatter_bag_pallas(ct: jax.Array, idx: jax.Array, bank: jax.Array,
     raw = idx.reshape(-1)[bag * L + j]
     valid = raw >= 0
     row = jnp.where(valid, raw + field_offsets[bag % F], 0)
+    if k_max > 1:
+        row = row * k_max + replica_of_bag(bag, k_max)
     dest = _dest_slots(row, valid, bank, slot, my_bank, n_rows)
     return _ct_scatter_call(ct, dest, bag, n_rows, out_dtype,
                             tile_s=tile_s, interpret=interpret)

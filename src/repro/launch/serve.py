@@ -92,6 +92,19 @@ def main() -> None:
                          "occurred AND the swap invariants (bit-parity with "
                          "a from-scratch rebuild, zero recompiles) held — "
                          "the CI serve-smoke contract")
+    ap.add_argument("--replicate-k-max", type=int, default=1,
+                    help="hot-row replication on the adaptive serve path "
+                         "(dlrm --adaptive, non_uniform): give the "
+                         "telemetry-chosen hottest rows up to this many "
+                         "copies on distinct banks; an in-kernel per-bag "
+                         "hash splits their traffic. 1 = off. Replans "
+                         "re-pick the replicated set through the same "
+                         "zero-recompile swap")
+    ap.add_argument("--replicate-max-r", type=int, default=64,
+                    help="cap on the number of replicated rows per plan "
+                         "(bounds the extra-copy capacity cost; further "
+                         "clamped so the copies always fit the fixed "
+                         "per-bank capacity)")
     ap.add_argument("--quant", default="off", choices=("off", "int8", "int4"),
                     help="tiered-precision embedding storage (repro.quant) "
                          "on the adaptive serve path: hot head stays bf16, "
@@ -204,7 +217,19 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
             "(cache_aware recovery packing is a ROADMAP item)")
         assert args.quant == "off", ("--inject-bank-failure serves the "
                                      "full-precision path")
+        assert args.replicate_k_max <= 1, (
+            "--inject-bank-failure x --replicate-k-max in one run is a "
+            "ROADMAP item; replica failover itself is covered by "
+            "tests/test_replication.py")
         return _main_adaptive_fault(args, spec, cfg, mod)
+    if args.replicate_k_max > 1:
+        assert args.partition == "non_uniform", (
+            "--replicate-k-max rides the non_uniform adaptive path "
+            "(cache_aware entry placement has no replica axis)")
+        assert args.quant == "off", (
+            "--replicate-k-max serves the full-precision path; the "
+            "dequant+replica-select kernel cross-product is a ROADMAP item")
+        return _main_adaptive_replicated(args, spec, cfg, mod)
     if args.partition == "cache_aware":
         assert args.quant == "off", ("--quant rides the non_uniform adaptive "
                                      "path; the cache+residual tiered "
@@ -365,6 +390,175 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
                     f"(need >= {args.min_swaps}), serve executables="
                     f"{executables} (need 1), "
                     f"re-tier parity={verify.get('tier_ok')}")
+
+
+def _main_adaptive_replicated(args, spec, cfg, mod) -> None:
+    """Hot-row-replicated serving under the adaptive loop: the runtime's
+    replica lane maintains a versioned (ReplicatedPlan, ReplicatedTable)
+    side state; every drifted replan re-picks the replicated set from live
+    head mass and the WHOLE replicated pytree swaps as a jit argument —
+    same zero-recompile contract as the remap/cache/tier lanes.
+
+    Contracts (hard exit with --min-swaps): at least that many live swaps,
+    ONE serve executable across every replica-count change, and the first
+    swapped-in replicated table bit-identical to packing the migrated base
+    table's rows from scratch under the same plan (including the serve
+    OUTPUT on a held probe batch).
+    """
+    from repro.core.embedding import BankedTable, pack_replicated
+    from repro.core.partitioning import non_uniform_partition
+    from repro.serve.serve_step import (
+        MicroBatcher, Request, build_recsys_serve_replicated_adaptive)
+    from repro.workload import (AdaptiveEmbeddingRuntime, DriftConfig,
+                                DriftingZipfTrace, ReplanConfig,
+                                dlrm_drifting_batch, rows_from_sparse,
+                                unpacked_rows)
+
+    banks = args.banks
+    V = cfg.total_vocab
+    cap = int(np.ceil(V / banks) * (1.0 + args.capacity_slack))
+    plan = non_uniform_partition(np.ones(V), banks, capacity_rows=cap)
+    params, statics = mod.init_params(cfg, jax.random.key(args.seed),
+                                      plan=plan, rows_per_bank=cap)
+    offs = np.asarray(statics["field_offsets"])
+
+    tracer, metrics, writer = _setup_obs(
+        args, label=f"serve-replicated:{args.arch}:k={args.replicate_k_max}")
+    probe = CompileProbe(metrics=metrics)
+    table = BankedTable(packed=params["emb_packed"],
+                        remap_bank=statics["remap_bank"],
+                        remap_slot=statics["remap_slot"],
+                        n_banks=banks, rows_per_bank=cap)
+    rcfg = ReplanConfig.for_vocab(V, banks, capacity_rows=cap,
+                                  check_every=args.replan_every,
+                                  hysteresis=args.hysteresis,
+                                  replicate_k_max=args.replicate_k_max,
+                                  replicate_max_r=args.replicate_max_r)
+    runtime = AdaptiveEmbeddingRuntime(table, plan, rcfg,
+                                       init_freq=np.ones(V),
+                                       tracer=tracer, metrics=metrics)
+
+    # the WHOLE replicated pytree (packed copies + (vocab, k_max) remap)
+    # enters as an ARGUMENT; bank_live composes the fault lane in (all-live
+    # here — failover behavior is pinned by tests/test_replication.py)
+    serve = jax.jit(build_recsys_serve_replicated_adaptive(
+        mod, cfg, statics, backend=args.backend))
+    all_live = jnp.ones(banks, dtype=bool)
+
+    def observe(feats, n_real):
+        sp = np.asarray(feats["sparse"])[:n_real]
+        runtime.observe_batch(rows_from_sparse(sp, offs))
+
+    mh = max(cfg.multi_hot, 1)
+    # a much heavier head than the plain loop: replication only matters when
+    # SINGLE rows carry > 1/(banks * k_max) of total traffic — with F fields
+    # diluting each row to ~1/F of the stream, the per-field head must be
+    # steep (zipf 2.0) before any one row crosses that line. Milder streams
+    # correctly replicate nothing (copies all 1 — bit-identical serving).
+    traces = [DriftingZipfTrace(
+        DriftConfig(n_items=v, zipf_a=2.0, avg_bag=float(mh),
+                    rotate_every=args.drift_rotate_every, rotate_frac=0.25),
+        seed=args.seed + f) for f, v in enumerate(cfg.vocab_sizes)]
+    rng = np.random.default_rng(args.seed)
+
+    def one_request(rid):
+        sparse = dlrm_drifting_batch(traces, 1, cfg.multi_hot)[0]
+        return {"dense": rng.standard_normal(cfg.n_dense).astype(np.float32),
+                "sparse": sparse}
+
+    mb = MicroBatcher(args.batch, one_request(-1), observer=observe,
+                      metrics=metrics)
+    verify: dict = {}
+    state = {"warm_compiles": None, "n_batches": 0}
+
+    def check_repack(event) -> None:
+        """First-swap invariant: the replica-lane table is bit-identical to
+        packing the migrated base table's rows from scratch under the same
+        plan — including the serve output on the probe batch."""
+        rplan, rtable = runtime.replicated
+        fresh = pack_replicated(unpacked_rows(runtime.table), rplan,
+                                rows_per_bank=cap)
+        arrays_ok = ((np.asarray(rtable.packed)
+                      == np.asarray(fresh.packed)).all()
+                     and (np.asarray(rtable.remap_bank)
+                          == np.asarray(fresh.remap_bank)).all()
+                     and (np.asarray(rtable.remap_slot)
+                          == np.asarray(fresh.remap_slot)).all())
+        feats = verify["feats"]
+        swapped, _ = serve(params, rtable, all_live, feats)
+        scratch, _ = serve(params, fresh, all_live, feats)
+        out_ok = (np.asarray(swapped) == np.asarray(scratch)).all()
+        verify["repack_ok"] = bool(arrays_ok and out_ok)
+        print(f"  [replica swap parity] arrays "
+              f"{'OK' if arrays_ok else 'MISMATCH'}  outputs "
+              f"{'OK' if out_ok else 'MISMATCH'} "
+              f"(replica v{event.replica_version})")
+
+    def run_batch():
+        with tracer.span("rewrite"):
+            reqs, feats = mb.next_batch()
+        with tracer.span("device_step", batch=state["n_batches"]):
+            _, rtable = runtime.replicated
+            scores, counts = serve(params, rtable, all_live, feats)
+            jax.block_until_ready(scores)
+        assert int(np.asarray(counts).sum()) == 0  # all-live: no degradation
+        if state["warm_compiles"] is None:
+            state["warm_compiles"] = probe.compiles
+        mb.complete(reqs)
+        state["n_batches"] += 1
+        if writer is not None:
+            writer.maybe_write(state["n_batches"])
+        event = runtime.end_batch()        # drift check -> migrate -> swap
+        if event is not None:
+            rplan, _ = runtime.replicated
+            print(f"  [swap @batch {event.batch}] {event.update.report} "
+                  f"imbalance {event.old_imbalance:.3f} -> "
+                  f"{event.new_imbalance:.3f}  replicas v"
+                  f"{event.replica_version} hot={event.replica_hot_rows} "
+                  f"churn={event.replica_copy_churn} "
+                  f"modeled share={rplan.max_share():.4f} "
+                  f"(ideal {1.0 / banks:.4f})")
+            if "repack_ok" not in verify:
+                verify["feats"] = feats
+                check_repack(event)
+
+    for rid in range(args.requests):
+        mb.submit(Request(rid=rid, features=one_request(rid)))
+        if len(mb.queue) >= args.batch:
+            run_batch()
+    while mb.ready():
+        run_batch()
+
+    lat = sorted(mb.latencies)
+    p50 = lat[len(lat) // 2] * 1e3
+    rp = runtime.replanner
+    n_swaps = len(runtime.swaps)
+    executables = serve._cache_size()
+    other = probe.compiles - (state["warm_compiles"] or probe.compiles)
+    rplan, _ = runtime.replicated
+    print(f"served {len(lat)} requests  p50={p50:.2f}ms "
+          f"p99={mb.p99() * 1e3:.2f}ms  replans={rp.n_replans} "
+          f"skipped={rp.n_skipped_replans}")
+    print(f"replica lane: v{runtime.replica_version}, "
+          f"{rplan.n_replicated} replicated row(s) "
+          f"(k_max {args.replicate_k_max}), modeled max-bank share "
+          f"{rplan.max_share():.4f} vs ideal {1.0 / banks:.4f}")
+    print(f"compile probe: {executables} serve executable(s) across "
+          f"{n_swaps} replica swap(s) — "
+          f"{'ZERO serve recompiles' if executables == 1 else 'RECOMPILED'} "
+          f"({other} host-side compiles outside the serve step); "
+          f"re-pack parity: {verify.get('repack_ok', 'n/a')}")
+    metrics.gauge("jax.serve_executables").set(executables)
+    _finalize_obs(args, tracer, metrics, writer, latencies=mb.latencies)
+    if args.min_swaps > 0:
+        ok = (n_swaps >= args.min_swaps and executables == 1
+              and verify.get("repack_ok", False))
+        if not ok:
+            raise SystemExit(
+                f"replicated serve contract violated: swaps={n_swaps} "
+                f"(need >= {args.min_swaps}), serve executables="
+                f"{executables} (need 1), "
+                f"re-pack parity={verify.get('repack_ok')}")
 
 
 def _main_adaptive_fault(args, spec, cfg, mod) -> None:

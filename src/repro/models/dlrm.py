@@ -148,7 +148,7 @@ def dot_interaction(z: Array) -> Array:
 def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
             dist: DistCtx | None = None, *, backend: str = "auto",
             bwd_backend: str = "auto", tiered=None,
-            bank_live: Array | None = None) -> Array:
+            replicated=None, bank_live: Array | None = None) -> Array:
     """batch: dense (B, n_dense) fp; sparse (B, F) int32 (one-hot fields) or
     (B, F, L) multi-hot. Returns logits (B,).
 
@@ -170,6 +170,17 @@ def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
     One-hot fields fold into length-1 bags on this path (same semantics as
     the dense gather).
 
+    ``replicated`` (a core.embedding.ReplicatedTable — the runtime's hot-row
+    replica side table) reroutes the lookup through the replica-aware path:
+    each bag picks one copy of each row via an in-kernel hash, so hot-row
+    traffic splits across the copies' banks. Like ``tiered`` it rides the jit
+    as an ARGUMENT with pinned shapes — a live replica-count swap is a pure
+    argument change (launch/serve.py --replicate-k-max). Composes with
+    ``bank_live``: a surviving copy covers a dead bank's reads before any
+    read degrades to the zero row. One-hot fields fold into length-1 bags.
+    Mutually exclusive with ``tiered`` (the replicas ARE the full-precision
+    head; an in-kernel dequant+replica-select kernel is a ROADMAP item).
+
     ``bank_live`` ((n_banks,) bool jit argument) enables bounded-degraded
     serving through a bank failure: reads homed on dead banks resolve to the
     zero row (core/embedding.py). Not supported with ``tiered`` — the fault
@@ -178,7 +189,18 @@ def forward(cfg: DLRMConfig, params: dict, statics: dict, batch: dict,
     dense, sparse = batch["dense"], batch["sparse"]
     B = dense.shape[0]
     t = _banked(params, statics)
-    if tiered is not None:
+    if replicated is not None:
+        if tiered is not None:
+            raise ValueError("tiered x replicated serving is not wired — "
+                             "replicas are the full-precision head "
+                             "(ROADMAP.md)")
+        from repro.core.embedding import replicated_embedding_bag
+        bags = sparse if sparse.ndim == 3 else sparse[..., None]
+        emb = replicated_embedding_bag(                          # (B, F, D)
+            replicated, bags, dist, backend=backend,
+            bwd_backend=bwd_backend,
+            field_offsets=statics["field_offsets"], bank_live=bank_live)
+    elif tiered is not None:
         if bank_live is not None:
             raise ValueError("bank_live degraded serving is not wired into "
                              "the tiered lookup path")

@@ -111,6 +111,37 @@ def build_recsys_serve_tiered_adaptive(family_mod, cfg, statics, dist=None,
     return serve
 
 
+def build_recsys_serve_replicated_adaptive(family_mod, cfg, statics,
+                                           dist=None,
+                                           backend: str | None = None):
+    """CTR scoring over HOT-ROW-REPLICATED embeddings under the adaptive
+    runtime: the whole ReplicatedTable pytree — the packed copies plus the
+    ``(vocab, k_max)`` replica-axis remap — enters as an argument of the
+    returned ``serve(params, replicated, bank_live, batch)``. Map shapes
+    depend only on (vocab, k_max) and the packed shape only on the fixed
+    per-bank capacity, never on WHICH rows are replicated, so a live
+    replica-count swap (telemetry found a new head) is a pure argument
+    change against one compiled executable. ``bank_live`` composes the
+    fault lane in: a surviving copy covers a dead bank's head reads
+    instantly, and the step returns ``(scores, degraded_read_count)`` where
+    a read only counts degraded when EVERY copy of the row is dead.
+    """
+    from repro.core.embedding import degraded_row_counts
+    kw = {} if backend is None else {"backend": backend}
+
+    def serve(params, replicated, bank_live, batch):
+        logits = family_mod.forward(cfg, params, statics, batch, dist,
+                                    replicated=replicated,
+                                    bank_live=bank_live, **kw)
+        sparse = batch["sparse"]
+        offs = statics["field_offsets"]
+        offs = offs[None, :] if sparse.ndim == 2 else offs[None, :, None]
+        rows = jnp.where(sparse >= 0, sparse + offs, -1)
+        counts = degraded_row_counts(replicated.remap_bank, bank_live, rows)
+        return jax.nn.sigmoid(logits), counts
+    return serve
+
+
 def build_retrieval_serve(family_mod, cfg, statics, dist=None, top_k: int = 128):
     """1 query x N candidates -> (top-k scores, top-k ids)."""
     def serve(params, batch):

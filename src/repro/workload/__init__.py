@@ -14,6 +14,7 @@ from repro.workload.replanner import PlanUpdate, ReplanConfig, Replanner
 from repro.core.cache_runtime import (FixedCachePlan, RewrittenBatch,
                                       VersionedCacheRewriter)
 from repro.workload.migrate import (migrate_packed_leaves,
+                                    migrate_replicated,
                                     migrate_rowwise_state, migrate_table,
                                     permute_packed_rows)
 from repro.workload.runtime import (AdaptiveEmbeddingRuntime, SwapEvent,
@@ -26,8 +27,8 @@ __all__ = [
     "PlanUpdate",
     "ReplanConfig", "Replanner", "RewrittenBatch", "SwapEvent",
     "TableTelemetry", "TopKCounter", "VersionedCacheRewriter",
-    "dlrm_drifting_batch", "migrate_packed_leaves", "migrate_rowwise_state",
-    "migrate_table",
+    "dlrm_drifting_batch", "migrate_packed_leaves", "migrate_replicated",
+    "migrate_rowwise_state", "migrate_table",
     "permute_packed_rows", "read_criteo_tsv", "rows_from_sparse",
     "topk_jaccard", "unpacked_rows", "weighted_l1", "write_criteo_tsv",
 ]

@@ -202,6 +202,44 @@ def _migrate_packed_sharded(t: BankedTable, new_plan: PartitionPlan,
     )(t.packed, t.remap_bank, t.remap_slot, new_bank, new_slot)
 
 
+def migrate_replicated(base: BankedTable, rplan, *,
+                       rows_per_bank: int | None = None):
+    """Build the replicated side table for ``rplan`` from a live base table
+    — the replica-lane swap's device path.
+
+    Gathers the vocab rows once through the base remap (no host round-trip)
+    and scatters every copy the plan calls for; bit-identical to
+    ``pack_replicated`` of the unpacked rows (tests assert it), so a
+    replica-count change swaps in a table indistinguishable from a fresh
+    pack. ``rows_per_bank`` pins the shape across swaps like the other
+    lanes.
+    """
+    from repro.core.embedding import ReplicatedTable
+    rpb = int(rplan.max_rows_per_bank if rows_per_bank is None
+              else rows_per_bank)
+    if rpb < rplan.max_rows_per_bank:
+        raise ValueError(f"rows_per_bank {rpb} < replica plan max "
+                         f"{rplan.max_rows_per_bank}")
+    if rplan.vocab != base.vocab:
+        raise ValueError(f"replica plan vocab {rplan.vocab} != table "
+                         f"{base.vocab}")
+    rows = jnp.take(base.packed, base.flat_remap(), axis=0)     # (V, D)
+    vv, rr = np.nonzero(np.arange(rplan.k_max)[None, :]
+                        < rplan.copies[:, None])
+    pos = (rplan.bank_of_copy[vv, rr].astype(np.int64) * rpb
+           + rplan.slot_of_copy[vv, rr]).astype(np.int32)
+    packed = jnp.zeros((rplan.n_banks * rpb, base.dim), base.packed.dtype)
+    packed = packed.at[jnp.asarray(pos)].set(rows[jnp.asarray(vv)])
+    return ReplicatedTable(
+        packed=packed,
+        remap_bank=jnp.asarray(rplan.bank_of_copy, jnp.int32),
+        remap_slot=jnp.asarray(rplan.slot_of_copy, jnp.int32),
+        n_banks=rplan.n_banks,
+        rows_per_bank=rpb,
+        k_max=rplan.k_max,
+    )
+
+
 def migrate_packed_leaves(tree, old_table: BankedTable,
                           new_plan: PartitionPlan, *,
                           rows_per_bank: int | None = None):

@@ -81,6 +81,16 @@ class ReplanConfig:
     # (the byte arithmetic needs it). non_uniform partitioner only.
     quant: "object | None" = None          # repro.quant.QuantSpec
     quant_dim: int | None = None
+    # hot-row replication lane: > 1 gives the top-R hottest rows
+    # ``replicate_k_max`` copies each (core/partitioning.choose_replication
+    # picks R from live head mass; copies land on distinct banks and a
+    # per-bag hash splits their traffic). Every committed PlanUpdate then
+    # carries ``replica_plan`` for the runtime's replica swap lane.
+    # ``replicate_max_r`` bounds the capacity cost — and is further clamped
+    # so R * (k_max - 1) extra physical rows always fit the fixed
+    # ``capacity_rows`` (shape-stable swaps). non_uniform partitioner only.
+    replicate_k_max: int = 1
+    replicate_max_r: int = 64
 
     @classmethod
     def for_vocab(cls, vocab: int, n_banks: int, **overrides) -> "ReplanConfig":
@@ -108,6 +118,11 @@ class PlanUpdate:
     # plan's byte-load balance was computed under — the runtime re-quantizes
     # exactly the rows whose tier changed (quant.retier_tiered)
     tier_of_row: np.ndarray | None = None
+    # replica lane (ReplanConfig.replicate_k_max > 1): the fresh
+    # replication-aware plan (core/partitioning.ReplicatedPlan) — the
+    # runtime rebuilds the replicated side table from the migrated base
+    # (workload.migrate.migrate_replicated) and swaps it versioned
+    replica_plan: "object | None" = None
 
 
 class Replanner:
@@ -126,6 +141,15 @@ class Replanner:
             if cfg.quant_dim is None:
                 raise ValueError("ReplanConfig.quant needs quant_dim (the "
                                  "embedding dim) for the byte arithmetic")
+        if cfg.replicate_k_max > 1:
+            if cfg.partitioner != "non_uniform":
+                raise ValueError("ReplanConfig.replicate_k_max rides the "
+                                 "non_uniform path only (cache_aware entry "
+                                 "placement has no replica axis)")
+            if cfg.replicate_k_max > cfg.n_banks:
+                raise ValueError(f"replicate_k_max {cfg.replicate_k_max} > "
+                                 f"n_banks {cfg.n_banks}: copies must land "
+                                 f"on distinct banks")
         self.cfg = cfg
         self.vocab = vocab
         # the INSTALLED plan (+ its capped cache plan, cache_aware), for
@@ -290,6 +314,47 @@ class Replanner:
             return plan, cp, None
         raise ValueError(f"unknown partitioner {cfg.partitioner!r}")
 
+    def build_replica_plan(self, freq: np.ndarray,
+                           tier_of_row: "np.ndarray | None" = None):
+        """Fresh replication-aware plan (core.partitioning.ReplicatedPlan)
+        for the replica swap lane; None when replication is off
+        (``replicate_k_max <= 1``). R comes from live head mass
+        (choose_replication), clamped so the ``R * (k - 1)`` extra physical
+        rows always fit the fixed per-bank capacity; with the tiered lane on,
+        candidates are restricted to the bf16 head (replicas stay
+        full-precision); dead banks get zero replica capacity and the copy
+        count clamps to the surviving-bank count."""
+        cfg = self.cfg
+        if cfg.replicate_k_max <= 1:
+            return None
+        from repro.core.partitioning import (choose_replication,
+                                             replicated_partition)
+        per_bank = cfg.capacity_rows if cfg.capacity_rows is not None \
+            else self.vocab
+        bank_caps = None
+        if bool(self.bank_live.all()):
+            headroom = cfg.n_banks * per_bank - self.vocab
+        else:
+            bank_caps = np.where(self.bank_live, per_bank, 0)
+            headroom = int(bank_caps.sum()) - self.vocab
+        # copies must land on distinct LIVE banks
+        k_eff = min(cfg.replicate_k_max, int(self.bank_live.sum()))
+        if k_eff <= 1 or headroom <= 0:
+            copies = np.ones(self.vocab, dtype=np.int32)
+        else:
+            max_r = max(0, min(cfg.replicate_max_r, headroom // (k_eff - 1)))
+            hot = None
+            if tier_of_row is not None:
+                hot = np.flatnonzero(np.asarray(tier_of_row) == 0)
+            copies = choose_replication(freq, cfg.n_banks, k_max=k_eff,
+                                        max_r=max_r, hot_rows=hot)
+        # k_max stays pinned at the configured width even when fewer copies
+        # fit right now, so every emitted plan has the serve jit's map shape
+        return replicated_partition(
+            freq, cfg.n_banks, copies=copies,
+            capacity_rows=cfg.capacity_rows, k_max=cfg.replicate_k_max,
+            bank_capacity_rows=bank_caps)
+
     @staticmethod
     def projected_max_share(plan: PartitionPlan, freq: np.ndarray) -> float:
         """Fraction of ``freq``'s row-read mass landing on the hottest bank
@@ -359,7 +424,9 @@ class Replanner:
             self._pred_saved_per_bag = saved / max(len(bags), 1)
         return PlanUpdate(plan=plan, freq=freq, report=report,
                           cache_plan=cache_plan, cache_fixed=cache_fixed,
-                          tier_of_row=tier_of_row)
+                          tier_of_row=tier_of_row,
+                          replica_plan=self.build_replica_plan(
+                              freq, tier_of_row))
 
     def force_replan(self, report: DriftReport | None = None) -> PlanUpdate:
         """Replan unconditionally — no drift gate, no hysteresis."""

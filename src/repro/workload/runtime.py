@@ -43,7 +43,8 @@ from repro.core.cache_runtime import (FixedCachePlan, RewrittenBatch,
                                       empty_cache_plan, entry_member_union)
 from repro.core.partitioning import PartitionPlan
 from repro.obs import NULL_TRACER, MetricRegistry
-from repro.workload.migrate import migrate_rowwise_state, migrate_table
+from repro.workload.migrate import (migrate_replicated, migrate_rowwise_state,
+                                    migrate_table)
 from repro.workload.replanner import PlanUpdate, ReplanConfig, Replanner
 
 
@@ -70,6 +71,9 @@ class SwapEvent:
     tier_promoted: int = 0              # rows moved to a MORE precise tier
     tier_demoted: int = 0               # rows moved to a LESS precise tier
     tier_requantized: int = 0           # rows whose payload was rebuilt
+    replica_version: int | None = None  # replica lane: version installed
+    replica_hot_rows: int = 0           # rows holding > 1 copy in the new plan
+    replica_copy_churn: int = 0         # rows whose copy count changed
     # what triggered the swap: "drift" (detector cadence), "bank_failure"
     # (recovery re-pack off dead banks), "straggler" (penalty-driven shed)
     reason: str = "drift"
@@ -86,6 +90,7 @@ class AdaptiveEmbeddingRuntime:
                  max_cache_per_bag: int = 4,
                  max_residual_per_bag: int = 16,
                  cache_keep: int = 2, tier_keep: int = 2,
+                 replica_keep: int = 2,
                  tracer=None, metrics: MetricRegistry | None = None):
         if cfg.capacity_rows is not None \
                 and cfg.capacity_rows != table.rows_per_bank:
@@ -123,6 +128,12 @@ class AdaptiveEmbeddingRuntime:
         self._m_tier_promoted = m.counter("runtime.tier_promoted_total")
         self._m_tier_demoted = m.counter("runtime.tier_demoted_total")
         self._m_tier_requant = m.counter("runtime.tier_requantized_total")
+        self._m_replica_version = m.gauge("runtime.replica_version")
+        self._m_replica_hot = m.gauge("runtime.replica_hot_rows",
+                                      "rows holding > 1 copy in the live plan")
+        self._m_replica_churn = m.counter(
+            "runtime.replica_copy_churn_total",
+            "rows whose copy count changed across swaps")
         self.replanner = Replanner(cfg, table.vocab, init_freq=init_freq,
                                    init_plan=plan, metrics=self.metrics)
         self._m_imbalance.set(plan.imbalance())
@@ -157,6 +168,25 @@ class AdaptiveEmbeddingRuntime:
             self.tier_version = 0
             self._tier_states[0] = build_tiered_table(
                 table, ta.tier_of_row, hot_dtype=cfg.quant.hot_dtype)
+        # hot-row replication lane: version 0 comes from the initial
+        # frequencies (an uninformative all-ones prior replicates nothing —
+        # bit-identical to single-copy serving until telemetry finds a head).
+        # Same fixed-shape contract again: the (vocab, k_max) maps and the
+        # n_banks * rows_per_bank packed array never change shape, so
+        # replica-count swaps feed same-shape arguments to one compiled step.
+        self.replica_version: int | None = None
+        self._replica_keep = int(replica_keep)
+        self._replica_states: dict[int, tuple[object, object]] = {}
+        if cfg.replicate_k_max > 1:
+            freq0 = init_freq if init_freq is not None \
+                else np.ones(table.vocab)
+            rplan0 = self.replanner.build_replica_plan(freq0)
+            rtable0 = migrate_replicated(table, rplan0,
+                                         rows_per_bank=table.rows_per_bank)
+            self.replica_version = 0
+            self._replica_states[0] = (rplan0, rtable0)
+            self._m_replica_version.set(0)
+            self._m_replica_hot.set(rplan0.n_replicated)
 
     def _empty_cache_fixed(self) -> FixedCachePlan:
         cfg = self.replanner.cfg
@@ -228,6 +258,10 @@ class AdaptiveEmbeddingRuntime:
             self._m_tier_promoted.inc(event.tier_promoted)
             self._m_tier_demoted.inc(event.tier_demoted)
             self._m_tier_requant.inc(event.tier_requantized)
+        if event.replica_version is not None:
+            self._m_replica_version.set(event.replica_version)
+            self._m_replica_hot.set(event.replica_hot_rows)
+            self._m_replica_churn.inc(event.replica_copy_churn)
         self.tracer.instant("swap_live", batch=event.batch, reason=reason)
         if self.on_swap is not None:
             self.on_swap(event)
@@ -238,6 +272,8 @@ class AdaptiveEmbeddingRuntime:
         old_imb = self._realized_imbalance(self.plan, update.freq)
         prev_tiered = self._tier_states.get(self.tier_version) \
             if self.tier_version is not None else None
+        prev_replica = self._replica_states.get(self.replica_version) \
+            if self.replica_version is not None else None
         # callers that drive the replanner directly (the cache-aware train
         # loop) advance its clock but not ours — sync so SwapEvent.batch
         # records when the swap actually happened in either driving mode
@@ -285,6 +321,31 @@ class AdaptiveEmbeddingRuntime:
             event.tier_promoted = stats["n_promoted"]
             event.tier_demoted = stats["n_demoted"]
             event.tier_requantized = stats["n_requantized"]
+        if self.replica_version is not None:
+            # replica lane: rebuild the replicated side table from the
+            # MIGRATED base (every copy of a row reads the same post-migration
+            # value — bit-identical to packing from scratch, tests pin it),
+            # under the plan the replanner attached; recovery/straggler
+            # replans that bypassed _commit recompute it here so the replica
+            # layout always reflects the same freq + bank-health state as the
+            # base plan it rides with
+            rplan = update.replica_plan
+            if rplan is None:
+                rplan = self.replanner.build_replica_plan(
+                    update.freq, update.tier_of_row)
+            rtable = migrate_replicated(self.table, rplan,
+                                        rows_per_bank=self.table.rows_per_bank)
+            self.replica_version += 1
+            self._replica_states[self.replica_version] = (rplan, rtable)
+            for v in [v for v in self._replica_states
+                      if v <= self.replica_version - self._replica_keep]:
+                del self._replica_states[v]
+            event.replica_version = self.replica_version
+            event.replica_hot_rows = rplan.n_replicated
+            prev_plan = prev_replica[0] if prev_replica is not None else None
+            event.replica_copy_churn = int(
+                (prev_plan.copies != rplan.copies).sum()
+            ) if prev_plan is not None else rplan.n_replicated
         self.swaps.append(event)
         return event
 
@@ -341,6 +402,29 @@ class AdaptiveEmbeddingRuntime:
             raise KeyError(
                 f"tier version {version} retired (retained: "
                 f"{sorted(self._tier_states)}); raise tier_keep="
+            ) from None
+
+    # -- replica lane accessors ----------------------------------------------
+
+    @property
+    def replicated(self):
+        """The CURRENT (ReplicatedPlan, ReplicatedTable) pair (replica lane
+        on). The table's flattened maps + packed array are what the serve
+        step takes as arguments; the plan carries copies/load for stats."""
+        if self.replica_version is None:
+            raise ValueError("replica lane disabled: set "
+                             "ReplanConfig.replicate_k_max > 1")
+        return self._replica_states[self.replica_version]
+
+    def replicated_for(self, version: int):
+        """The (plan, table) pair of a still-retained replica version
+        (mirrors ``tiered_for`` for pipelines deeper than one micro-batch)."""
+        try:
+            return self._replica_states[version]
+        except KeyError:
+            raise KeyError(
+                f"replica version {version} retired (retained: "
+                f"{sorted(self._replica_states)}); raise replica_keep="
             ) from None
 
     def refresh_cache(self) -> int:

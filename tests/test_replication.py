@@ -1,0 +1,346 @@
+"""Hot-row replication (ISSUE 8 tentpole): the replica-aware partitioner,
+the k-way lookup/backward kernels, failover composition, and the runtime's
+versioned replica lane.
+
+Invariants under test:
+  * k=1 replicated serving is bit-exact to the single-copy banked path
+    (both backends) — replication is a strict superset, not a fork.
+  * gradients through a k>1 table, summed across each row's copies,
+    bit-match the single-copy gradients (fp32 scatter on both backends).
+  * a replica-lane swap installs a table bit-identical to a fresh pack of
+    the migrated rows (mirrors the tier-lane parity tests).
+  * with a dead bank, reads of replicated rows stay exact through a
+    surviving copy; only rows with NO live copy degrade to the zero row.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.core.embedding import (banked_embedding_bag, degraded_row_counts,
+                                  pack_replicated, pack_table,
+                                  replicated_embedding_bag)
+from repro.core.partitioning import (choose_replication,
+                                     non_uniform_partition,
+                                     replicated_partition)
+from repro.workload import (AdaptiveEmbeddingRuntime, ReplanConfig,
+                            Replanner, migrate_replicated, migrate_table,
+                            unpacked_rows)
+
+BACKENDS = ["jnp", "pallas"]
+
+
+def _setup(rng, v=96, d=16, banks=4, k_max=4, n_hot=5):
+    """A table with an explicit hot head + both the single-copy and the
+    k_max-copy views of it, packed at one pinned per-bank capacity."""
+    table = (rng.standard_normal((v, d)) * 0.1).astype(np.float32)
+    freq = rng.random(v) + 0.1
+    freq[:n_hot] += 50.0
+    cap = int(np.ceil((v + n_hot * (k_max - 1)) / banks) * 1.3)
+    plan = non_uniform_partition(freq, banks, capacity_rows=cap)
+    bt = pack_table(table, plan)
+    copies = np.ones(v, np.int32)
+    copies[:n_hot] = k_max
+    rplan = replicated_partition(freq, banks, copies=copies,
+                                 capacity_rows=cap, k_max=k_max)
+    rt = pack_replicated(table, rplan, rows_per_bank=cap)
+    return table, freq, plan, bt, rplan, rt, cap
+
+
+def _bags(rng, n, l, v, hot_frac=0.5, n_hot=5):
+    """(n, l) bags with -1 padding, biased toward the replicated head so
+    every copy actually sees traffic."""
+    idx = np.full((n, l), -1, np.int32)
+    for i in range(n):
+        k = rng.integers(1, l + 1)
+        hot = rng.random(k) < hot_frac
+        idx[i, :k] = np.where(hot, rng.integers(0, n_hot, k),
+                              rng.integers(0, v, k))
+    return jnp.asarray(idx)
+
+
+def _fold_replicated(g, rplan, rows_per_bank):
+    """(banks*rpb, D) packed gradient -> (V, D) by summing each row's
+    copies (exact: fp32 adds of integer bag counts)."""
+    v = rplan.vocab
+    out = np.zeros((v, g.shape[-1]), np.float32)
+    for row in range(v):
+        for r in range(int(rplan.copies[row])):
+            pos = (int(rplan.bank_of_copy[row, r]) * rows_per_bank
+                   + int(rplan.slot_of_copy[row, r]))
+            out[row] += g[pos]
+    return out
+
+
+def _fold_single(g, plan, rows_per_bank):
+    flat = (plan.bank_of_row.astype(np.int64) * rows_per_bank
+            + plan.slot_of_row)
+    return np.asarray(g)[flat]
+
+
+# ---------------------------------------------------------------------------
+# plan invariants
+# ---------------------------------------------------------------------------
+
+class TestReplicatedPlan:
+    def test_copies_all_one_matches_single_copy_plan(self):
+        """k=1 is the degenerate case: same (bank, slot) homes as the §3.2
+        greedy, every replica column a cyclic repeat of column 0."""
+        rng = np.random.default_rng(0)
+        v, banks = 200, 4
+        freq = rng.random(v) + 0.1
+        plan = non_uniform_partition(freq, banks)
+        rplan = replicated_partition(freq, banks,
+                                     copies=np.ones(v, np.int32), k_max=3)
+        rplan.validate()
+        assert rplan.n_replicated == 0
+        np.testing.assert_array_equal(rplan.bank_of_copy[:, 0],
+                                      plan.bank_of_row)
+        np.testing.assert_array_equal(rplan.slot_of_copy[:, 0],
+                                      plan.slot_of_row)
+        for r in range(1, rplan.k_max):     # cyclic padding
+            np.testing.assert_array_equal(rplan.bank_of_copy[:, r],
+                                          rplan.bank_of_copy[:, 0])
+
+    def test_copies_land_on_distinct_banks_and_cut_max_share(self):
+        rng = np.random.default_rng(1)
+        _, freq, plan, _, rplan, _, _ = _setup(rng, k_max=4)
+        rplan.validate()
+        assert rplan.n_replicated == 5
+        single = _plan_share(plan)
+        assert rplan.max_share() <= single + 1e-12
+
+    def test_choose_replication_threshold(self):
+        """Only rows above total/(banks*k_max) get copies; hot_rows further
+        restricts candidates (the tier-composition hook)."""
+        freq = np.array([100.0, 50.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+        copies = choose_replication(freq, 2, k_max=2)
+        assert copies[0] == 2 and copies[1] == 2 and (copies[2:] == 1).all()
+        gated = choose_replication(freq, 2, k_max=2,
+                                   hot_rows=np.array([1]))
+        assert gated[0] == 1 and gated[1] == 2
+
+    def test_dead_bank_gets_no_copies(self):
+        """bank_capacity_rows=0 (the fault path) keeps every copy off the
+        dead bank."""
+        rng = np.random.default_rng(2)
+        v, banks = 60, 4
+        freq = rng.random(v) + 0.1
+        freq[:3] += 50.0
+        caps = np.array([0, 40, 40, 40])
+        copies = np.ones(v, np.int32)
+        copies[:3] = 3
+        rplan = replicated_partition(freq, banks, copies=copies,
+                                     capacity_rows=40,
+                                     bank_capacity_rows=caps)
+        rplan.validate()
+        vv, rr = np.nonzero(np.arange(rplan.k_max)[None, :]
+                            < rplan.copies[:, None])
+        assert (rplan.bank_of_copy[vv, rr] != 0).all()
+
+
+def _plan_share(plan):
+    return float(plan.load_per_bank.max() / plan.load_per_bank.sum())
+
+
+# ---------------------------------------------------------------------------
+# lookup parity: k=1 degenerate case + jnp/pallas agreement at k>1
+# ---------------------------------------------------------------------------
+
+class TestLookupParity:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_k1_bitmatches_single_copy(self, backend):
+        rng = np.random.default_rng(3)
+        v, d, banks = 96, 16, 4
+        table = (rng.standard_normal((v, d)) * 0.1).astype(np.float32)
+        freq = rng.random(v) + 0.1
+        plan = non_uniform_partition(freq, banks)
+        bt = pack_table(table, plan)
+        rplan = replicated_partition(freq, banks,
+                                     copies=np.ones(v, np.int32), k_max=1)
+        rt = pack_replicated(table, rplan)
+        idx = _bags(rng, 17, 6, v)
+        want = banked_embedding_bag(bt, idx, None, backend=backend)
+        got = replicated_embedding_bag(rt, idx, None, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_k4_pallas_matches_jnp(self):
+        rng = np.random.default_rng(4)
+        _, _, _, _, _, rt, _ = _setup(rng, k_max=4)
+        idx = _bags(rng, 17, 6, 96)
+        a = replicated_embedding_bag(rt, idx, None, backend="jnp")
+        b = replicated_embedding_bag(rt, idx, None, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_k4_values_match_single_copy(self):
+        """Replica choice only changes WHERE a row is read, never its value:
+        bag sums are bit-equal to the single-copy path (same per-bag
+        summation order)."""
+        rng = np.random.default_rng(5)
+        _, _, _, bt, _, rt, _ = _setup(rng, k_max=4)
+        idx = _bags(rng, 33, 6, 96)
+        want = banked_embedding_bag(bt, idx, None, backend="jnp")
+        got = replicated_embedding_bag(rt, idx, None, backend="jnp")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# gradients: copies sum back to the single-copy gradient, bit-exactly
+# ---------------------------------------------------------------------------
+
+class TestGradParity:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_copy_sum_bitmatches_single_copy_grads(self, backend):
+        rng = np.random.default_rng(6)
+        _, _, plan, bt, rplan, rt, cap = _setup(rng, k_max=4)
+        idx = _bags(rng, 17, 6, 96)
+
+        def loss_r(p):
+            t2 = dataclasses.replace(rt, packed=p)
+            return replicated_embedding_bag(t2, idx, None, backend=backend,
+                                            bwd_backend=backend).sum()
+
+        def loss_s(p):
+            b2 = dataclasses.replace(bt, packed=p)
+            return banked_embedding_bag(b2, idx, None, backend="jnp").sum()
+
+        g_r = _fold_replicated(np.asarray(jax.grad(loss_r)(rt.packed)),
+                               rplan, cap)
+        g_s = _fold_single(np.asarray(jax.grad(loss_s)(bt.packed)),
+                           plan, bt.rows_per_bank)
+        np.testing.assert_array_equal(g_r, g_s)
+        # the hash routing genuinely spreads traffic: with head-biased bags
+        # more than one copy of some hot row received gradient
+        g_packed = np.asarray(jax.grad(loss_r)(rt.packed))
+        touched = 0
+        for row in range(5):                 # the replicated head
+            pos = (rplan.bank_of_copy[row, :rplan.copies[row]]
+                   .astype(np.int64) * cap
+                   + rplan.slot_of_copy[row, :rplan.copies[row]])
+            touched = max(touched,
+                          int((np.abs(g_packed[pos]).sum(-1) > 0).sum()))
+        assert touched > 1
+
+
+# ---------------------------------------------------------------------------
+# fault composition: surviving copies cover a dead bank's head reads
+# ---------------------------------------------------------------------------
+
+class TestFailover:
+    def test_all_live_mask_is_identity(self):
+        rng = np.random.default_rng(7)
+        _, _, _, _, _, rt, _ = _setup(rng, k_max=4)
+        idx = _bags(rng, 17, 6, 96)
+        live = jnp.ones(rt.n_banks, dtype=bool)
+        a = replicated_embedding_bag(rt, idx, None, backend="jnp")
+        b = replicated_embedding_bag(rt, idx, None, backend="jnp",
+                                     bank_live=live)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_dead_bank_confined_to_unreplicated_rows(self, backend):
+        rng = np.random.default_rng(8)
+        table, _, _, _, rplan, rt, _ = _setup(rng, k_max=4)
+        v = table.shape[0]
+        dead = 1
+        live = np.ones(rt.n_banks, bool)
+        live[dead] = False
+        idx = _bags(rng, 33, 6, v)
+        # oracle: zero exactly the rows with NO live copy
+        eff = table.copy()
+        no_live = np.zeros(v, bool)
+        for row in range(v):
+            homes = rplan.bank_of_copy[row, :rplan.copies[row]]
+            if not live[homes].any():
+                eff[row] = 0.0
+                no_live[row] = True
+        assert not no_live[:5].any()        # k=4 copies always survive 1 kill
+        assert no_live.any()                # some single-copy row did die
+        rows = np.asarray(idx)
+        want = np.where((rows >= 0)[..., None], eff[np.maximum(rows, 0)],
+                        0.0).sum(axis=-2)
+        got = replicated_embedding_bag(rt, idx, None, backend=backend,
+                                       bank_live=jnp.asarray(live))
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-5)
+        # degraded accounting agrees with the oracle, per bag
+        counts = degraded_row_counts(rt.remap_bank, jnp.asarray(live),
+                                     jnp.asarray(rows))
+        want_counts = (no_live[np.maximum(rows, 0)] & (rows >= 0)).sum(-1)
+        np.testing.assert_array_equal(np.asarray(counts), want_counts)
+
+
+# ---------------------------------------------------------------------------
+# runtime replica lane: versioned swaps, fresh-pack parity, guards
+# ---------------------------------------------------------------------------
+
+class TestReplicaLane:
+    def test_runtime_replica_lane_versions_and_parity(self):
+        rng = np.random.default_rng(9)
+        v, d, banks = 400, 16, 4
+        cap = int(np.ceil(v / banks) * 1.5)
+        table = (rng.standard_normal((v, d)) * 0.01).astype(np.float32)
+        f0 = rng.random(v) + 0.1
+        f0[:4] += 400.0                      # head hot enough to replicate
+        plan = non_uniform_partition(f0, banks, capacity_rows=cap)
+        bt = migrate_table(pack_table(table, plan), plan, rows_per_bank=cap)
+        cfg = ReplanConfig.for_vocab(v, banks, capacity_rows=cap,
+                                     check_every=2, replicate_k_max=3,
+                                     replicate_max_r=8)
+        rt = AdaptiveEmbeddingRuntime(bt, plan, cfg, init_freq=f0)
+        assert rt.replica_version == 0
+        rplan0, rtable0 = rt.replicated
+        assert rplan0.n_replicated >= 1
+        assert rtable0.k_max == 3
+        for _ in range(30):                  # rotated hot set -> drift
+            rt.observe_batch(rng.integers(v // 2, v, size=(64,)))
+            rt.end_batch()
+        assert rt.replanner.n_replans >= 1
+        ev = rt.swaps[-1]
+        assert ev.replica_version == rt.replica_version >= 1
+        # versioned access: current + retired-window semantics
+        assert rt.replicated_for(rt.replica_version) is rt.replicated
+        with pytest.raises(KeyError):
+            rt.replicated_for(-1)
+        # swapped table bit-matches a fresh pack of the migrated rows (the
+        # serve CLI's first-swap probe, in-test) — and the on-device rebuild
+        rplan, rtable = rt.replicated
+        assert rtable is not rtable0
+        fresh = pack_replicated(unpacked_rows(rt.table), rplan,
+                                rows_per_bank=rtable.rows_per_bank)
+        np.testing.assert_array_equal(np.asarray(rtable.packed),
+                                      np.asarray(fresh.packed))
+        np.testing.assert_array_equal(np.asarray(rtable.remap_bank),
+                                      np.asarray(fresh.remap_bank))
+        np.testing.assert_array_equal(np.asarray(rtable.remap_slot),
+                                      np.asarray(fresh.remap_slot))
+        redo = migrate_replicated(rt.table, rplan,
+                                  rows_per_bank=rtable.rows_per_bank)
+        np.testing.assert_array_equal(np.asarray(rtable.packed),
+                                      np.asarray(redo.packed))
+        # shape pinning: every version feeds the same jit signature
+        assert rtable.packed.shape == rtable0.packed.shape
+        assert rtable.remap_bank.shape == rtable0.remap_bank.shape
+
+    def test_lane_disabled_by_default(self):
+        rng = np.random.default_rng(10)
+        v, d, banks = 100, 8, 2
+        plan = non_uniform_partition(np.ones(v), banks)
+        bt = pack_table((rng.standard_normal((v, d)) * 0.01)
+                        .astype(np.float32), plan)
+        rt = AdaptiveEmbeddingRuntime(
+            bt, plan, ReplanConfig.for_vocab(v, banks))
+        assert rt.replica_version is None
+        with pytest.raises(ValueError, match="replica lane disabled"):
+            _ = rt.replicated
+
+    def test_replication_requires_non_uniform_partitioner(self):
+        with pytest.raises(ValueError, match="non_uniform"):
+            Replanner(ReplanConfig(n_banks=4, partitioner="cache_aware",
+                                   replicate_k_max=2), 100)
+
+    def test_replication_rejects_k_above_banks(self):
+        with pytest.raises(ValueError, match="replicate_k_max"):
+            Replanner(ReplanConfig(n_banks=2, replicate_k_max=4), 100)

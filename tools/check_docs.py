@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Docs-drift gate (CI `tests` job, blocking).
+
+Two checks over the user-facing markdown:
+
+1. Every ``--flag`` a doc mentions must exist in some argparse definition
+   under ``src/repro/launch/``, ``benchmarks/`` or ``tools/`` — a renamed
+   CLI knob whose README still advertises the old name fails CI.
+2. Every relative markdown link must resolve to a real file in the repo.
+
+Pure text scan — no imports of the scanned code (jax-free, runs first in
+CI before anything heavy). Flags that are real but live outside this
+repo's argparse (XLA env flags, pytest's own options) go in ALLOWED_EXTERNAL.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+DOCS = [
+    "README.md",
+    "ARCHITECTURE.md",
+    "src/repro/workload/README.md",
+    "src/repro/kernels/README.md",
+]
+
+# where --flags are defined (glob patterns relative to the repo root);
+# obs/cli.py holds the shared --trace-out/--metrics-out wiring the launch
+# CLIs delegate to
+ARGPARSE_SOURCES = ["src/repro/launch/*.py", "src/repro/obs/cli.py",
+                    "benchmarks/*.py", "tools/*.py"]
+
+# real flags the docs mention that are not this repo's argparse to define
+ALLOWED_EXTERNAL = {
+    "--xla_force_host_platform_device_count",   # XLA_FLAGS env option
+    "--strict-markers",                         # pytest option (pytest.ini)
+}
+
+FLAG_MENTION = re.compile(r"(?<![\w/-])--[a-z0-9][a-z0-9_-]*[a-z0-9]")
+FLAG_DEF = re.compile(r"""add_argument\(\s*\n?\s*['"](--[a-z0-9][a-z0-9_-]*)""")
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def defined_flags() -> set[str]:
+    flags = set()
+    for pattern in ARGPARSE_SOURCES:
+        for path in REPO.glob(pattern):
+            flags.update(FLAG_DEF.findall(path.read_text()))
+    return flags
+
+
+def check_doc(doc: Path, known: set[str]) -> list[str]:
+    errors = []
+    text = doc.read_text()
+    rel = doc.relative_to(REPO)
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for flag in FLAG_MENTION.findall(line):
+            if flag not in known and flag not in ALLOWED_EXTERNAL:
+                errors.append(f"{rel}:{lineno}: flag {flag} not defined by "
+                              f"any argparse under {ARGPARSE_SOURCES}")
+        for target in MD_LINK.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (doc.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{rel}:{lineno}: broken link {target} "
+                              f"(-> {resolved})")
+    return errors
+
+
+def main() -> int:
+    known = defined_flags()
+    if not known:
+        print("check_docs: found no argparse flag definitions — "
+              "ARGPARSE_SOURCES is wrong", file=sys.stderr)
+        return 2
+    errors = []
+    for name in DOCS:
+        doc = REPO / name
+        if not doc.exists():
+            errors.append(f"{name}: listed in DOCS but missing")
+            continue
+        errors.extend(check_doc(doc, known))
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"check_docs: OK ({len(DOCS)} docs, {len(known)} known flags)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
