@@ -32,14 +32,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-# (vocab, dim, batch, bag_len, n_fields) — small enough that interpret-mode
-# pallas stays seconds-fast on CPU; TPU runs can scale these up freely.
-CONFIGS = [
-    (10_000, 64, 32, 8, 1),
-    (10_000, 64, 128, 8, 1),
-    (50_000, 128, 64, 16, 1),
-    (20_000, 32, 32, 16, 4),      # multi-field fused (B, F, L)
-]
+# (vocab, dim, batch, bag_len, n_fields) — the rectangular lookup shapes,
+# shared with the autotuner's signature suite so the bench baselines and the
+# committed TUNE_dispatch.json cannot drift apart. Small enough that
+# interpret-mode pallas stays seconds-fast on CPU; TPU runs scale up freely.
+from repro.tune.autotune import PLAIN_CONFIGS as CONFIGS
 
 REPEATS = 5
 
@@ -51,7 +48,8 @@ GRAD_CONFIGS = [
 ]
 
 
-def _bench_one(v, d, b, l, f, backend, seed=0, repeats=REPEATS):
+def _bench_one(v, d, b, l, f, backend, seed=0, repeats=REPEATS,
+               tile_b=8, n_slots=2):
     from repro.core.embedding import banked_embedding_bag, pack_table
     from repro.core.partitioning import non_uniform_partition
 
@@ -64,7 +62,8 @@ def _bench_one(v, d, b, l, f, backend, seed=0, repeats=REPEATS):
     idx = jnp.asarray(rng.integers(-1, per_field, shape), jnp.int32)
 
     fn = jax.jit(lambda t, i: banked_embedding_bag(
-        t, i, None, backend=backend, field_offsets=offs))
+        t, i, None, backend=backend, field_offsets=offs,
+        tile_b=tile_b, n_slots=n_slots))
     out = fn(bt, idx)
     jax.block_until_ready(out)          # compile
     best = float("inf")
@@ -132,6 +131,42 @@ def run_grads(bwds=("jnp", "pallas"), configs=None,
     return rows
 
 
+def run_dispatched(results: list[dict], configs=None,
+                   repeats=REPEATS) -> list[dict]:
+    """The tuned-dispatch scenario: time ``backend='tuned'`` per config and
+    record the decision the cache resolved it to, next to TWO references:
+    ``best_direct_us`` (best of the paired jnp/pallas ``results`` rows — the
+    best-of-both bar) and ``rerun_direct_us`` (the winner's exact
+    (backend, tile_b, n_slots) re-measured ADJACENT to the dispatched call —
+    the wall-clock noise control; same code path, same machine state). A
+    dispatched time far above BOTH references means the cache picked (or
+    defaulted to) the wrong backend for that shape — exactly the BENCH
+    batch-128 inversion this section exists to catch — while a gap to
+    ``best_direct_us`` alone is inter-measurement noise."""
+    from repro.tune.dispatch import decide
+    rows = []
+    for cfg in (CONFIGS if configs is None else configs):
+        v, d, b, l, f = cfg
+        dec = decide("plain", vocab=v, dim=d, batch=b * f, bag_len=l,
+                     n_fields=f)
+        # 3x repeats: this section COMPARES two best-of samples of the same
+        # code path, so both minima must converge or noise flags the choice
+        r = _bench_one(v, d, b, l, f, "tuned", repeats=3 * repeats)
+        ctl = _bench_one(v, d, b, l, f, dec.backend, repeats=3 * repeats,
+                         tile_b=dec.tile_b, n_slots=dec.n_slots)
+        direct = [x["us_per_call"] for x in results
+                  if (x["vocab"], x["dim"], x["batch"], x["bag_len"],
+                      x["n_fields"]) == cfg]
+        rows.append(dict(vocab=v, dim=d, batch=b, bag_len=l, n_fields=f,
+                         chosen_backend=dec.backend, tile_b=dec.tile_b,
+                         n_slots=dec.n_slots, source=dec.source,
+                         us_per_call=r["us_per_call"],
+                         rerun_direct_us=ctl["us_per_call"],
+                         best_direct_us=min(direct) if direct
+                         else r["us_per_call"]))
+    return rows
+
+
 def embedding_backends():
     """benchmarks/run.py hook: (name, us_per_call, derived) rows."""
     for r in run_all():
@@ -154,14 +189,16 @@ def write_json(out: str = "BENCH_embedding.json",
     (first fwd/grad configs only, 2 repeats — seconds, not minutes)."""
     import jax
     rep = 2 if smoke else REPEATS
+    results = run_all(configs=CONFIGS[:2] if smoke else None, repeats=rep)
     doc = {
         "jax_backend": jax.default_backend(),
         "pallas_mode": "compiled" if jax.default_backend() == "tpu"
         else "interpret",
         "repeats": rep,
         "smoke": smoke,
-        "results": run_all(configs=CONFIGS[:2] if smoke else None,
-                           repeats=rep),
+        "results": results,
+        "dispatched_results": run_dispatched(
+            results, configs=CONFIGS[:2] if smoke else None, repeats=rep),
         "grad_results": run_grads(configs=GRAD_CONFIGS[:1] if smoke
                                   else None, repeats=rep),
     }
@@ -184,6 +221,17 @@ def main() -> None:
                f"l={r['bag_len']} f={r['n_fields']}")
         print(f"{cfg:<34} {r['backend']:<8} {r['us_per_call']:>12.1f} "
               f"{r['effective_gather_gbps']:>8.3f}")
+    print(f"{'dispatched':<34} {'chose':<8} {'us/call':>12} "
+          f"{'best_direct':>12} {'rerun':>12}")
+    for r in doc["dispatched_results"]:
+        cfg = (f"v={r['vocab']} d={r['dim']} b={r['batch']} "
+               f"l={r['bag_len']} f={r['n_fields']}")
+        bar = 1.25 * max(r["best_direct_us"], r["rerun_direct_us"])
+        mark = "" if r["us_per_call"] <= bar \
+            else "  SLOWER THAN BOTH DIRECT REFERENCES"
+        print(f"{cfg:<34} {r['chosen_backend']:<8} "
+              f"{r['us_per_call']:>12.1f} {r['best_direct_us']:>12.1f} "
+              f"{r['rerun_direct_us']:>12.1f}{mark}")
     print(f"{'grad config':<34} {'bwd':<8} {'us/grad':>12} {'GB/s':>8}")
     for r in grows:
         cfg = (f"v={r['vocab']} d={r['dim']} b={r['batch']} "

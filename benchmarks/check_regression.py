@@ -29,8 +29,16 @@ the same key-path schema check applied to ONE pair of ``repro.obs``
 metrics-snapshot JSONs (the serve CLI's ``--metrics-out``). Values are
 run-dependent (latencies, counts) so only the structure is gated — the obs
 layer pre-registers every metric up front precisely so a run where an event
-never fires still exports the full key set. Both modes compose: pass all
-four flags to gate bench artifacts AND the metrics schema in one call.
+never fires still exports the full key set.
+
+Dispatch-cache mode (``--tune-baseline`` + ``--tune-candidate``): the same
+pair check applied to the autotuner's ``TUNE_dispatch.json`` (the CI smoke
+tune vs the committed cache). Entry keys are call signatures, so key-path
+parity doubles as the signature-suite gate; decision values are
+machine-dependent and ungated; ``meta.version`` mismatches are fatal.
+
+All modes compose: pass any combination of flag groups to gate bench
+artifacts, the metrics schema, and the dispatch cache in one call.
 """
 from __future__ import annotations
 
@@ -131,6 +139,36 @@ def check_metrics_schema(baseline_path: str, candidate_path: str
     return errors, []
 
 
+def check_tune_cache(baseline_path: str, candidate_path: str
+                     ) -> tuple[list[str], list[str]]:
+    """Dispatch-cache gate for one TUNE_dispatch.json pair.
+
+    The cache's entry KEYS are call-signature strings, so ``check_pair``'s
+    key-path schema check IS the signature-suite parity gate: a CI smoke
+    tune must cover exactly the committed suite (it may shrink candidates
+    and repeats, never signatures), and any entry-field rename fails both
+    directions. Decision values (``backend`` str, ``tile_b``/``n_slots``
+    ints) are machine-dependent and deliberately NOT gated — they surface
+    in review diffs of the committed file instead — while the ``*_us``
+    measurements ride the usual advisory band. ``meta.version`` is the one
+    value gated fatally: a schema bump means the committed cache must be
+    regenerated deliberately (``python -m repro.launch.tune``).
+    """
+    name = os.path.basename(candidate_path)
+    with open(baseline_path) as fh:
+        baseline = json.load(fh)
+    with open(candidate_path) as fh:
+        candidate = json.load(fh)
+    errors, warnings = check_pair(baseline, candidate, name)
+    bver = baseline.get("meta", {}).get("version")
+    cver = candidate.get("meta", {}).get("version")
+    if bver != cver:
+        errors.append(f"{name}: dispatch cache schema version changed — "
+                      f"baseline {bver} vs candidate {cver} (regenerate "
+                      f"the committed cache with repro.launch.tune)")
+    return errors, warnings
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-dir",
@@ -143,14 +181,23 @@ def main() -> None:
     ap.add_argument("--metrics-candidate",
                     help="metrics snapshot written by the smoke run "
                          "(--metrics-out)")
+    ap.add_argument("--tune-baseline",
+                    help="committed TUNE_dispatch.json (signature-suite "
+                         "schema gate, decision values ungated)")
+    ap.add_argument("--tune-candidate",
+                    help="dispatch cache written by the CI smoke tune "
+                         "(repro.launch.tune --smoke --out ...)")
     args = ap.parse_args()
 
     metrics_mode = bool(args.metrics_baseline or args.metrics_candidate)
     if metrics_mode and not (args.metrics_baseline and args.metrics_candidate):
         ap.error("--metrics-baseline and --metrics-candidate go together")
-    if not metrics_mode and not args.baseline_dir:
+    tune_mode = bool(args.tune_baseline or args.tune_candidate)
+    if tune_mode and not (args.tune_baseline and args.tune_candidate):
+        ap.error("--tune-baseline and --tune-candidate go together")
+    if not (metrics_mode or tune_mode) and not args.baseline_dir:
         ap.error("--baseline-dir is required unless only gating a metrics "
-                 "snapshot pair")
+                 "snapshot or dispatch cache pair")
 
     errors, warnings = [], []
     n_artifacts = 0
@@ -187,6 +234,17 @@ def main() -> None:
             warnings += w
             print(f"checked {os.path.basename(args.metrics_candidate)} "
                   f"(metrics schema): {len(e)} fatal, {len(w)} advisory")
+    if tune_mode:
+        n_artifacts += 1
+        if not os.path.exists(args.tune_candidate):
+            errors.append(f"smoke tune produced no dispatch cache "
+                          f"({args.tune_candidate} missing)")
+        else:
+            e, w = check_tune_cache(args.tune_baseline, args.tune_candidate)
+            errors += e
+            warnings += w
+            print(f"checked {os.path.basename(args.tune_candidate)} "
+                  f"(dispatch cache): {len(e)} fatal, {len(w)} advisory")
     for w in warnings:
         print(f"WARN  {w}")
     for e in errors:

@@ -54,15 +54,37 @@ from repro.core.partitioning import PartitionPlan
 
 Array = jax.Array
 
-BACKENDS = ("auto", "jnp", "pallas")
+BACKENDS = ("auto", "jnp", "pallas", "tuned")
 
 
 def _resolve_backend(backend: str) -> str:
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "tuned":
+        raise ValueError("backend='tuned' resolves through the dispatch "
+                         "cache at the entry points — this path has no "
+                         "tuned signature (pass 'auto')")
     if backend == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "jnp"
     return backend
+
+
+def _dispatch(path: str, *, vocab: int, dim: int, batch: int, bag_len,
+              n_fields: int = 1, k_max: int = 1, tier_mix: str = "none",
+              bwd_backend: str = "auto", tile_b: int,
+              n_slots: int) -> tuple[str, int, int]:
+    """Resolve ``backend='tuned'``: look the call signature up in the
+    persisted dispatch cache (repro.tune, TUNE_dispatch.json) and return
+    (backend, tile_b, n_slots) — the measured decision on a hit, today's
+    defaults (the caller's tile_b/n_slots + the pre-tuner auto rule) on a
+    miss. Shapes are static under jit, so this runs at trace time: a pure
+    host dict lookup, deterministic per shape, zero recompiles."""
+    from repro.tune.dispatch import decide
+    d = decide(path, vocab=vocab, dim=dim, batch=batch, bag_len=bag_len,
+               n_fields=n_fields, k_max=k_max, tier_mix=tier_mix,
+               bwd_backend=bwd_backend, default_tile_b=tile_b,
+               default_n_slots=n_slots)
+    return d.backend, d.tile_b, d.n_slots
 
 
 def _default_interpret(interpret: bool | None) -> bool:
@@ -75,9 +97,11 @@ def _resolve_bwd(bwd_backend: str, fwd_backend: str) -> str:
     the XLA scatter fallback under a pallas forward (the parity baseline).
     Only consulted on the pallas forward — the jnp forward differentiates
     through its scan natively."""
-    if bwd_backend not in BACKENDS:
-        raise ValueError(
-            f"bwd_backend must be one of {BACKENDS}, got {bwd_backend!r}")
+    if bwd_backend not in BACKENDS or bwd_backend == "tuned":
+        raise ValueError(f"bwd_backend must be one of "
+                         f"{tuple(b for b in BACKENDS if b != 'tuned')}, "
+                         f"got {bwd_backend!r} (the tuned dispatch keys on "
+                         f"bwd_backend; it does not select one)")
     return fwd_backend if bwd_backend == "auto" else bwd_backend
 
 
@@ -281,20 +305,21 @@ def _pallas_bag(cfg: tuple, packed: Array, bank: Array, slot: Array,
                 off: Array, my: Array, idx: Array) -> Array:
     """One bank's stage-2 partial bag sums via the fused Pallas kernel.
 
-    cfg = (tile_b, interpret, bwd). idx (..., L) raw per-field ids; bank/slot
-    the replicated remap; my () int32 bank id (< 0: own everything — the
-    unsharded path, where slot is the flat remap). ``bwd`` selects the
+    cfg = (tile_b, interpret, bwd, n_slots). idx (..., L) raw per-field ids;
+    bank/slot the replicated remap; my () int32 bank id (< 0: own everything
+    — the unsharded path, where slot is the flat remap). ``bwd`` selects the
     custom_vjp backward: 'pallas' = the sorted-run scatter kernel, 'jnp' =
-    the XLA segment-scan scatter.
+    the XLA segment-scan scatter. ``n_slots`` is the row-DMA pipeline depth
+    (fwd and bwd kernels alike).
     """
     from repro.kernels.embedding_bag import banked_embedding_bag_pallas
-    tile_b, interpret, _ = cfg
+    tile_b, interpret, _, n_slots = cfg
     lead, L = idx.shape[:-1], idx.shape[-1]
     flat, n = _pad_bags(idx.reshape(-1, L).astype(jnp.int32), tile_b)
     table, d = _pad_lanes(packed, interpret)
     out = banked_embedding_bag_pallas(
         table, bank, slot, off, my.reshape(1).astype(jnp.int32), flat,
-        tile_b=tile_b, interpret=interpret)
+        tile_b=tile_b, interpret=interpret, n_slots=n_slots)
     return out[:n, :d].reshape(*lead, d)
 
 
@@ -304,7 +329,7 @@ def _pallas_bag_fwd(cfg, packed, bank, slot, off, my, idx):
 
 
 def _pallas_bag_bwd(cfg, res, ct):
-    tile_b, interpret, bwd = cfg
+    tile_b, interpret, bwd, n_slots = cfg
     packed, bank, slot, off, my, idx = res
     if bwd == "pallas":
         from repro.kernels.embedding_bag import ct_scatter_bag_pallas
@@ -313,7 +338,7 @@ def _pallas_bag_bwd(cfg, res, ct):
             ct.reshape(-1, ct.shape[-1]),
             idx.reshape(-1, L).astype(jnp.int32), bank, slot, off,
             my.reshape(1).astype(jnp.int32), packed.shape[0], packed.dtype,
-            tile_s=tile_b, interpret=interpret)
+            tile_s=tile_b, interpret=interpret, n_slots=n_slots)
     else:
         d_tab = _scatter_bag_ct(packed.shape, packed.dtype, bank, slot, my,
                                 idx, ct, off=off)
@@ -396,12 +421,12 @@ def _replicated_bag(cfg: tuple, packed: Array, bank_flat: Array,
                     idx: Array) -> Array:
     """Stage-2 partial bag sums over a REPLICATED table.
 
-    cfg = (tile_b, interpret, backend, bwd, k_max). bank_flat/slot_flat are
-    the flattened (vocab * k_max,) replica-axis remap; each bag reads copy
-    ``wang_hash(bag) % k_max``. The pallas path is the ordinary banked
-    kernel with ``k_max`` folded into its entry resolver.
+    cfg = (tile_b, interpret, backend, bwd, k_max, n_slots). bank_flat/
+    slot_flat are the flattened (vocab * k_max,) replica-axis remap; each
+    bag reads copy ``wang_hash(bag) % k_max``. The pallas path is the
+    ordinary banked kernel with ``k_max`` folded into its entry resolver.
     """
-    tile_b, interpret, backend, _, k_max = cfg
+    tile_b, interpret, backend, _, k_max, n_slots = cfg
     if backend == "pallas":
         from repro.kernels.embedding_bag import banked_embedding_bag_pallas
         lead, L = idx.shape[:-1], idx.shape[-1]
@@ -410,7 +435,8 @@ def _replicated_bag(cfg: tuple, packed: Array, bank_flat: Array,
         out = banked_embedding_bag_pallas(
             table, bank_flat, slot_flat, off,
             my.reshape(1).astype(jnp.int32), flat,
-            tile_b=tile_b, interpret=interpret, k_max=k_max)
+            tile_b=tile_b, interpret=interpret, k_max=k_max,
+            n_slots=n_slots)
         return out[:n, :d].reshape(*lead, d)
     return _replicated_bag_scan(packed, idx, bank_flat=bank_flat,
                                 slot_flat=slot_flat, my_bank=my, off=off,
@@ -423,7 +449,7 @@ def _replicated_bag_fwd(cfg, packed, bank_flat, slot_flat, off, my, idx):
 
 
 def _replicated_bag_bwd(cfg, res, ct):
-    tile_b, interpret, _, bwd, k_max = cfg
+    tile_b, interpret, _, bwd, k_max, n_slots = cfg
     packed, bank_flat, slot_flat, off, my, idx = res
     if bwd == "pallas":
         from repro.kernels.embedding_bag import ct_scatter_bag_pallas
@@ -432,7 +458,8 @@ def _replicated_bag_bwd(cfg, res, ct):
             ct.reshape(-1, ct.shape[-1]),
             idx.reshape(-1, L).astype(jnp.int32), bank_flat, slot_flat, off,
             my.reshape(1).astype(jnp.int32), packed.shape[0], packed.dtype,
-            tile_s=tile_b, interpret=interpret, k_max=k_max)
+            tile_s=tile_b, interpret=interpret, k_max=k_max,
+            n_slots=n_slots)
     else:
         d_tab = _replicated_scatter_ct(packed.shape, packed.dtype, bank_flat,
                                        slot_flat, my, idx, ct, off=off,
@@ -482,7 +509,8 @@ def _tiered_bag(cfg: tuple, fp_packed: Array, payload: Array,
                 off: Array, my: Array, idx: Array) -> Array:
     """One bank's tiered stage-2 partial bag sums (fp32).
 
-    cfg = (tile_b, interpret, backend, bwd, dim, hot_dtype). The forward
+    cfg = (tile_b, interpret, backend, bwd, dim, hot_dtype, n_slots). The
+    forward
     reads ONLY the quantized payload (dequant in-kernel / in-scan);
     ``fp_packed`` — the fp master table the payload was quantized from — is
     the STRAIGHT-THROUGH gradient carrier: the backward scatters the bag
@@ -490,7 +518,7 @@ def _tiered_bag(cfg: tuple, fp_packed: Array, payload: Array,
     so training through mixed tiers updates fp rows as if the lookup had
     been full-precision (quantized rows included).
     """
-    tile_b, interpret, backend, _, dim, hot = cfg
+    tile_b, interpret, backend, _, dim, hot, n_slots = cfg
     if backend == "pallas":
         from repro.kernels.embedding_bag import tiered_embedding_bag_pallas
         lead, L = idx.shape[:-1], idx.shape[-1]
@@ -499,7 +527,7 @@ def _tiered_bag(cfg: tuple, fp_packed: Array, payload: Array,
         out = tiered_embedding_bag_pallas(
             pay, scale_bits, tier, bank, slot, off,
             my.reshape(1).astype(jnp.int32), flat, dim=dim, hot_dtype=hot,
-            tile_b=tile_b, interpret=interpret)
+            tile_b=tile_b, interpret=interpret, n_slots=n_slots)
         return out[:n].reshape(*lead, dim)
     scale = jax.lax.bitcast_convert_type(scale_bits, jnp.float32)
     return _tiered_partial_scan(payload, scale, tier, idx, remap=slot,
@@ -515,7 +543,7 @@ def _tiered_bag_fwd(cfg, fp_packed, payload, scale_bits, tier, bank, slot,
 
 
 def _tiered_bag_bwd(cfg, res, ct):
-    tile_b, interpret, _, bwd, _, _ = cfg
+    tile_b, interpret, _, bwd, _, _, n_slots = cfg
     fp_packed, bank, slot, off, my, idx = res
     if bwd == "pallas":
         from repro.kernels.embedding_bag import ct_scatter_bag_pallas
@@ -524,7 +552,8 @@ def _tiered_bag_bwd(cfg, res, ct):
             ct.reshape(-1, ct.shape[-1]),
             idx.reshape(-1, L).astype(jnp.int32), bank, slot, off,
             my.reshape(1).astype(jnp.int32), fp_packed.shape[0],
-            fp_packed.dtype, tile_s=tile_b, interpret=interpret)
+            fp_packed.dtype, tile_s=tile_b, interpret=interpret,
+            n_slots=n_slots)
     else:
         d_tab = _scatter_bag_ct(fp_packed.shape, fp_packed.dtype, bank, slot,
                                 my, idx, ct, off=off)
@@ -539,9 +568,10 @@ def _pallas_cache_bag(cfg: tuple, emt_packed: Array, cache_packed: Array,
                       e_bank: Array, e_slot: Array, c_bank: Array,
                       c_slot: Array, my: Array, cache_idx: Array,
                       resid_idx: Array) -> Array:
-    """Fused Fig.-7 stage 2: Σ cache partials + Σ residual rows, one kernel."""
+    """Fused Fig.-7 stage 2: Σ cache partials + Σ residual rows, one kernel.
+    cfg = (tile_b, interpret, bwd, n_slots)."""
     from repro.kernels.embedding_bag import fused_cache_bag_pallas
-    tile_b, interpret, _ = cfg
+    tile_b, interpret, _, n_slots = cfg
     lead = cache_idx.shape[:-1]
     ci, n = _pad_bags(cache_idx.reshape(-1, cache_idx.shape[-1])
                       .astype(jnp.int32), tile_b)
@@ -552,7 +582,7 @@ def _pallas_cache_bag(cfg: tuple, emt_packed: Array, cache_packed: Array,
     out = fused_cache_bag_pallas(
         emt, cache, e_bank, e_slot, c_bank, c_slot,
         my.reshape(1).astype(jnp.int32), ci, ri,
-        tile_b=tile_b, interpret=interpret)
+        tile_b=tile_b, interpret=interpret, n_slots=n_slots)
     return out[:n, :d].reshape(*lead, d)
 
 
@@ -594,7 +624,7 @@ def _scatter_bag_ct(shape, dtype, bank, slot, my, idx, ct, *, off=None):
 
 
 def _pallas_cache_bag_bwd(cfg, res, ct):
-    tile_b, interpret, bwd = cfg
+    tile_b, interpret, bwd, n_slots = cfg
     (emt_packed, cache_packed, e_bank, e_slot, c_bank, c_slot, my,
      cache_idx, resid_idx) = res
     if bwd == "pallas":
@@ -609,11 +639,12 @@ def _pallas_cache_bag_bwd(cfg, res, ct):
         d_emt = ct_scatter_bag_pallas(
             ctf, resid_idx.reshape(-1, resid_idx.shape[-1]).astype(jnp.int32),
             e_bank, e_slot, zero, myk, emt_packed.shape[0], emt_packed.dtype,
-            tile_s=tile_b, interpret=interpret)
+            tile_s=tile_b, interpret=interpret, n_slots=n_slots)
         d_cache = ct_scatter_bag_pallas(
             ctf, cache_idx.reshape(-1, cache_idx.shape[-1]).astype(jnp.int32),
             c_bank, c_slot, zero, myk, cache_packed.shape[0],
-            cache_packed.dtype, tile_s=tile_b, interpret=interpret)
+            cache_packed.dtype, tile_s=tile_b, interpret=interpret,
+            n_slots=n_slots)
     else:
         d_emt = _scatter_bag_ct(emt_packed.shape, emt_packed.dtype,
                                 e_bank, e_slot, my, resid_idx, ct)
@@ -731,7 +762,7 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
                          *, reduce_bag: bool = True, backend: str = "auto",
                          bwd_backend: str = "auto",
                          field_offsets: Array | None = None,
-                         tile_b: int = 8,
+                         tile_b: int = 8, n_slots: int = 2,
                          interpret: bool | None = None,
                          bank_live: Array | None = None) -> Array:
     """The paper's stages 1-3. idx (..., L) -> (..., dim) [reduce] or
@@ -754,7 +785,20 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
     Under a mesh: shard_map over (dp_axes + bank_axis); indices are sharded on
     batch, replicated across banks (stage 1); each bank computes its partial
     with the selected ``backend`` (stage 2); psum over the bank axis (stage 3).
+
+    ``backend='tuned'`` resolves (backend, tile_b, n_slots) through the
+    persisted dispatch cache at trace time (repro.tune); a cache miss is the
+    deterministic 'auto' default with the caller's tile_b/n_slots.
     """
+    if backend == "tuned" and reduce_bag:
+        backend, tile_b, n_slots = _dispatch(
+            "plain", vocab=t.vocab, dim=t.dim,
+            batch=int(np.prod(idx.shape[:-1])), bag_len=idx.shape[-1],
+            n_fields=1 if field_offsets is None
+            else int(np.shape(field_offsets)[0]),
+            bwd_backend=bwd_backend, tile_b=tile_b, n_slots=n_slots)
+    elif backend == "tuned":
+        backend = "auto"        # dense gather: no kernel to tune
     backend = _resolve_backend(backend)
     bwd = _resolve_bwd(bwd_backend, backend)
     interpret = _default_interpret(interpret)
@@ -778,7 +822,7 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
             bank_map = _binary_live_map(t.remap_bank, bank_live)
             my = jnp.zeros((), jnp.int32)
         if backend == "pallas":
-            return _pallas_bag((tile_b, interpret, bwd), t.packed,
+            return _pallas_bag((tile_b, interpret, bwd, n_slots), t.packed,
                                bank_map, t.flat_remap(), off, my, idx)
         return _bag_partial_scan(
             t.packed, idx, remap=t.flat_remap(),
@@ -801,8 +845,8 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
             part = _local_gather_partial(packed_local, bank_map, slot_map,
                                          idx_local, my)
         elif backend == "pallas":
-            part = _pallas_bag((tile_b, interpret, bwd), packed_local,
-                               bank_map, slot_map, off_local,
+            part = _pallas_bag((tile_b, interpret, bwd, n_slots),
+                               packed_local, bank_map, slot_map, off_local,
                                my.astype(jnp.int32), idx_local)
         else:
             part = _bag_partial_scan(packed_local, idx_local,
@@ -856,7 +900,7 @@ def replicated_embedding_bag(t: ReplicatedTable, idx: Array,
                              dist: DistCtx | None, *, backend: str = "auto",
                              bwd_backend: str = "auto",
                              field_offsets: Array | None = None,
-                             tile_b: int = 8,
+                             tile_b: int = 8, n_slots: int = 2,
                              interpret: bool | None = None,
                              bank_live: Array | None = None) -> Array:
     """Stages 1-3 over a REPLICATED table: idx (..., L) -> (..., dim) bag
@@ -882,6 +926,14 @@ def replicated_embedding_bag(t: ReplicatedTable, idx: Array,
         raise ValueError("replicated_embedding_bag is unsharded-only for "
                          "now — see the multi-host serving mesh item in "
                          "ROADMAP.md")
+    if backend == "tuned":
+        backend, tile_b, n_slots = _dispatch(
+            "replicated", vocab=t.vocab, dim=t.dim,
+            batch=int(np.prod(idx.shape[:-1])), bag_len=idx.shape[-1],
+            n_fields=1 if field_offsets is None
+            else int(np.shape(field_offsets)[0]),
+            k_max=t.k_max, bwd_backend=bwd_backend,
+            tile_b=tile_b, n_slots=n_slots)
     backend = _resolve_backend(backend)
     bwd = _resolve_bwd(bwd_backend, backend)
     interpret = _default_interpret(interpret)
@@ -894,7 +946,7 @@ def replicated_embedding_bag(t: ReplicatedTable, idx: Array,
     else:
         bank_flat, slot_flat = _replica_failover_maps(t, bank_live)
         my = jnp.zeros((), jnp.int32)
-    cfg = (tile_b, interpret, backend, bwd, t.k_max)
+    cfg = (tile_b, interpret, backend, bwd, t.k_max, n_slots)
     return _replicated_bag(cfg, t.packed, bank_flat, slot_flat, off, my, idx)
 
 
@@ -902,7 +954,7 @@ def tiered_embedding_bag(fp_packed: Array, tt, idx: Array,
                          dist: DistCtx | None, *, backend: str = "auto",
                          bwd_backend: str = "auto",
                          field_offsets: Array | None = None,
-                         tile_b: int = 8,
+                         tile_b: int = 8, n_slots: int = 2,
                          interpret: bool | None = None) -> Array:
     """Stages 1-3 over a TIERED table (repro.quant.TieredTable): the fused
     lookup path with per-row dequant applied in-kernel (pallas) or in-scan
@@ -915,6 +967,14 @@ def tiered_embedding_bag(fp_packed: Array, tt, idx: Array,
     ``params['emb_packed']`` unchanged. One-hot fields fold in as length-1
     bags — the dense-gather semantics of ``banked_gather`` at fp32.
     """
+    if backend == "tuned":
+        backend, tile_b, n_slots = _dispatch(
+            "tiered", vocab=int(tt.remap_bank.shape[0]), dim=tt.dim,
+            batch=int(np.prod(idx.shape[:-1])), bag_len=idx.shape[-1],
+            n_fields=1 if field_offsets is None
+            else int(np.shape(field_offsets)[0]),
+            tier_mix=tt.hot_dtype, bwd_backend=bwd_backend,
+            tile_b=tile_b, n_slots=n_slots)
     backend = _resolve_backend(backend)
     bwd = _resolve_bwd(bwd_backend, backend)
     interpret = _default_interpret(interpret)
@@ -926,7 +986,7 @@ def tiered_embedding_bag(fp_packed: Array, tt, idx: Array,
     off = jnp.zeros((1,), jnp.int32) if field_offsets is None \
         else jnp.asarray(field_offsets, jnp.int32)
     scale_bits = jax.lax.bitcast_convert_type(tt.scale, jnp.int32)
-    cfg = (tile_b, interpret, backend, bwd, tt.dim, tt.hot_dtype)
+    cfg = (tile_b, interpret, backend, bwd, tt.dim, tt.hot_dtype, n_slots)
 
     if dist is None:
         return _tiered_bag(cfg, fp_packed, tt.payload, scale_bits, tt.tier,
@@ -962,6 +1022,7 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
                               cache_idx: Array, residual_idx: Array,
                               dist: DistCtx | None, *, backend: str = "auto",
                               bwd_backend: str = "auto", tile_b: int = 8,
+                              n_slots: int = 2,
                               interpret: bool | None = None,
                               bank_live: Array | None = None) -> Array:
     """Cache-aware fused lookup (paper Fig. 7): one stage-2 pass computes
@@ -978,6 +1039,12 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
     zero-row degraded substitute. Same zero-recompile argument contract as
     ``banked_embedding_bag``.
     """
+    if backend == "tuned":
+        backend, tile_b, n_slots = _dispatch(
+            "fused", vocab=t.vocab, dim=t.dim,
+            batch=int(np.prod(cache_idx.shape[:-1])),
+            bag_len=f"{cache_idx.shape[-1]}+{residual_idx.shape[-1]}",
+            bwd_backend=bwd_backend, tile_b=tile_b, n_slots=n_slots)
     backend = _resolve_backend(backend)
     bwd = _resolve_bwd(bwd_backend, backend)
     interpret = _default_interpret(interpret)
@@ -992,7 +1059,7 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
             my = jnp.zeros((), jnp.int32)
         if backend == "pallas":
             return _pallas_cache_bag(
-                (tile_b, interpret, bwd), t.packed, cache.packed,
+                (tile_b, interpret, bwd, n_slots), t.packed, cache.packed,
                 e_bank, t.flat_remap(), c_bank,
                 cache.flat_remap(), my, cache_idx, residual_idx)
         zero = jnp.zeros((1,), jnp.int32)
@@ -1020,8 +1087,8 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
         my = jax.lax.axis_index(bank)
         if backend == "pallas":
             part = _pallas_cache_bag(
-                (tile_b, interpret, bwd), emt_local, cache_local, e_bank,
-                e_slot,
+                (tile_b, interpret, bwd, n_slots), emt_local, cache_local,
+                e_bank, e_slot,
                 c_bank, c_slot, my.astype(jnp.int32), ci_local, ri_local)
         else:
             zero = jnp.zeros((1,), jnp.int32)
@@ -1054,14 +1121,15 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
 def _pallas_csr_bag(cfg: tuple, packed: Array, bank: Array, slot: Array,
                     my: Array, indices: Array, seg: Array,
                     offs_ext: Array) -> Array:
-    """cfg = (tile_b, interpret, num_bags_padded, bwd)."""
+    """cfg = (tile_b, interpret, num_bags_padded, bwd, n_slots)."""
     from repro.kernels.embedding_bag import csr_bag_pallas
-    tile_b, interpret, nb_pad, _ = cfg
+    tile_b, interpret, nb_pad, _, n_slots = cfg
     table, d = _pad_lanes(packed, interpret)
     out = csr_bag_pallas(table, bank, slot, my.reshape(1).astype(jnp.int32),
                          indices.astype(jnp.int32), seg.astype(jnp.int32),
                          offs_ext.astype(jnp.int32), nb_pad,
-                         tile_b=tile_b, interpret=interpret)
+                         tile_b=tile_b, interpret=interpret,
+                         n_slots=n_slots)
     return out[:, :d]
 
 
@@ -1071,14 +1139,14 @@ def _pallas_csr_bag_fwd(cfg, packed, bank, slot, my, indices, seg, offs_ext):
 
 
 def _pallas_csr_bag_bwd(cfg, res, ct):
-    tile_b, interpret, nb_pad, bwd = cfg
+    tile_b, interpret, nb_pad, bwd, n_slots = cfg
     packed, bank, slot, my, indices, seg = res
     if bwd == "pallas":
         from repro.kernels.embedding_bag import ct_scatter_csr_pallas
         d_tab = ct_scatter_csr_pallas(
             ct, indices, seg, bank, slot, my.reshape(1).astype(jnp.int32),
             packed.shape[0], packed.dtype, tile_s=tile_b,
-            interpret=interpret)
+            interpret=interpret, n_slots=n_slots)
         return (d_tab, None, None, None, None, None, None)
     valid = indices >= 0
     row = jnp.where(valid, indices, 0)
@@ -1095,7 +1163,7 @@ _pallas_csr_bag.defvjp(_pallas_csr_bag_fwd, _pallas_csr_bag_bwd)
 def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
                       num_bags: int, dist: DistCtx | None, *,
                       backend: str = "auto", bwd_backend: str = "auto",
-                      tile_b: int = 8,
+                      tile_b: int = 8, n_slots: int = 2,
                       interpret: bool | None = None) -> Array:
     """CSR-ragged variant (indices flat + offsets), bag-summed.
 
@@ -1108,6 +1176,11 @@ def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
     double-buffered row DMA as the rectangular kernel (bag id = prefetched
     segment id), so ragged bags fuse without padding to a rectangle.
     """
+    if backend == "tuned":
+        backend, tile_b, n_slots = _dispatch(
+            "csr", vocab=t.vocab, dim=t.dim, batch=int(num_bags),
+            bag_len="ragged", bwd_backend=bwd_backend,
+            tile_b=tile_b, n_slots=n_slots)
     backend = _resolve_backend(backend)
     bwd = _resolve_bwd(bwd_backend, backend)
     interpret = _default_interpret(interpret)
@@ -1121,7 +1194,7 @@ def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
 
     if dist is None:
         if backend == "pallas":
-            out = _pallas_csr_bag((tile_b, interpret, nb_pad, bwd),
+            out = _pallas_csr_bag((tile_b, interpret, nb_pad, bwd, n_slots),
                                   t.packed,
                                   t.remap_bank, t.flat_remap(),
                                   jnp.full((), -1, jnp.int32), indices, seg,
@@ -1135,7 +1208,7 @@ def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
     def fn(packed_local, bank_map, slot_map, idx_local, seg_local, offs_local):
         my = jax.lax.axis_index(dist.bank_axis)
         if backend == "pallas":
-            part = _pallas_csr_bag((tile_b, interpret, nb_pad, bwd),
+            part = _pallas_csr_bag((tile_b, interpret, nb_pad, bwd, n_slots),
                                    packed_local, bank_map, slot_map,
                                    my.astype(jnp.int32), idx_local,
                                    seg_local, offs_local)[:num_bags]
@@ -1210,6 +1283,7 @@ def csr_embedding_bag_sharded(t: BankedTable, indices: np.ndarray,
                               offsets: np.ndarray, num_bags: int,
                               dist: DistCtx | None, *, backend: str = "auto",
                               bwd_backend: str = "auto", tile_b: int = 8,
+                              n_slots: int = 2,
                               interpret: bool | None = None) -> Array:
     """CSR bag sums with the flat stream SHARDED over dp (vs the replicating
     ``csr_embedding_bag``): each dp shard owns a contiguous bag range chosen
@@ -1232,7 +1306,12 @@ def csr_embedding_bag_sharded(t: BankedTable, indices: np.ndarray,
                                  jnp.asarray(offsets[:num_bags]), num_bags,
                                  dist, backend=backend,
                                  bwd_backend=bwd_backend, tile_b=tile_b,
-                                 interpret=interpret)
+                                 n_slots=n_slots, interpret=interpret)
+    if backend == "tuned":
+        backend, tile_b, n_slots = _dispatch(
+            "csr", vocab=t.vocab, dim=t.dim, batch=int(num_bags),
+            bag_len="ragged", bwd_backend=bwd_backend,
+            tile_b=tile_b, n_slots=n_slots)
     backend = _resolve_backend(backend)
     bwd = _resolve_bwd(bwd_backend, backend)
     interpret = _default_interpret(interpret)
@@ -1258,7 +1337,7 @@ def csr_embedding_bag_sharded(t: BankedTable, indices: np.ndarray,
         idx_local = idx_s[0]
         seg_local = seg_s[0]
         if backend == "pallas":
-            part = _pallas_csr_bag((tile_b, interpret, nb_pad, bwd),
+            part = _pallas_csr_bag((tile_b, interpret, nb_pad, bwd, n_slots),
                                    packed_local, bank_map, slot_map,
                                    my.astype(jnp.int32), idx_local,
                                    seg_local, offs_local[0])[:num_bags]

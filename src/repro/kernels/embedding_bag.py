@@ -3,9 +3,10 @@
 TPU adaptation of the paper's in-DPU lookup (DESIGN.md §5, paper §3.1/Fig. 7).
 The table(s) stay in HBM (`pltpu.ANY`); bag indices and the row->(bank, slot)
 remap vectors are scalar-prefetched (SMEM) so the kernel can compute HBM row
-addresses *before* touching vector memory; rows stream HBM->VMEM through a
-two-slot ping-pong of `pltpu.make_async_copy` DMAs (the copy for entry e+1 is
-in flight while entry e is being accumulated). Each grid step owns a tile of
+addresses *before* touching vector memory; rows stream HBM->VMEM through an
+N-slot rotation of `pltpu.make_async_copy` DMAs (`n_slots`, default 2 =
+classic ping-pong: up to N-1 copies are in flight while entry e is being
+accumulated — the pipeline depth the autotuner sweeps). Each grid step owns a tile of
 bags and writes only the reduced (tile_b, D) block — the (B*L, D) gathered
 matrix a naive XLA gather would materialize never exists.
 
@@ -55,24 +56,32 @@ def _dma_accumulate(acc, table_ref, buf, sem, start, end, src_fn, meta_fn,
     ``row_fn(e, raw)`` -> fp32 accumulator row from the DMA'd raw row
     (default: a plain fp32 cast; the tiered kernel dequantizes here).
 
-    Ping-pong over two (1, D) VMEM slots: the DMA for entry e+1 is started
-    before waiting on entry e, so the HBM fetch of the next row overlaps the
-    VPU accumulate of the current one.
+    N-deep rotation over ``buf.shape[0]`` (1, D) VMEM slots: up to N row
+    DMAs are in flight at once — the copy for entry e+N-1 is started before
+    waiting on entry e, so N-1 HBM fetches overlap the VPU accumulate of the
+    current row. The slot count is carried by the scratch SHAPE (see
+    ``_scratch``), so the kernels need no extra parameter; N=2 is the
+    classic ping-pong and traces the exact pre-N-slot graph. Slot reuse is
+    hazard-free by construction: entry e+N-1's slot was last used by entry
+    e-1, whose value was consumed (and semaphore waited) one iteration ago.
     """
+    n_slots = buf.shape[0]
+
     def dma(e, slot):
         return pltpu.make_async_copy(
             table_ref.at[pl.ds(src_fn(e), 1), :], buf.at[slot], sem.at[slot])
 
-    @pl.when(end > start)
-    def _():
-        dma(start, 0).start()
+    for k in range(n_slots - 1):
+        @pl.when(start + k < end)
+        def _(k=k):
+            dma(start + k, k).start()
 
     def body(e, acc):
-        slot = (e - start) % 2
+        slot = (e - start) % n_slots
 
-        @pl.when(e + 1 < end)
+        @pl.when(e + (n_slots - 1) < end)
         def _():
-            dma(e + 1, (slot + 1) % 2).start()
+            dma(e + n_slots - 1, (slot + n_slots - 1) % n_slots).start()
 
         dma(e, slot).wait()
         bag_local, mine = meta_fn(e)
@@ -445,15 +454,21 @@ def _csr_bag_kernel(idx_ref, seg_ref, offs_ref, bank_ref, slot_ref, my_ref,
 # pallas_call wrappers (shape plumbing only — padding stays in the callers)
 # ---------------------------------------------------------------------------
 
-def _scratch(dim: int, dtype):
-    return [pltpu.VMEM((2, 1, dim), dtype), pltpu.SemaphoreType.DMA((2,))]
+def _scratch(dim: int, dtype, n_slots: int = 2):
+    """Row-DMA scratch: ``n_slots`` (1, dim) VMEM slots + matching DMA
+    semaphores. ``_dma_accumulate`` reads the pipeline depth off the buffer
+    shape, so this is the single knob the autotuner turns."""
+    assert n_slots >= 1, n_slots
+    return [pltpu.VMEM((n_slots, 1, dim), dtype),
+            pltpu.SemaphoreType.DMA((n_slots,))]
 
 
 def banked_embedding_bag_pallas(table: jax.Array, bank: jax.Array,
                                 slot: jax.Array, field_offsets: jax.Array,
                                 my_bank: jax.Array, idx: jax.Array, *,
                                 tile_b: int = 8, interpret: bool = False,
-                                k_max: int = 1) -> jax.Array:
+                                k_max: int = 1, n_slots: int = 2
+                                ) -> jax.Array:
     """One bank's stage-2 partial bag sums, remap + mask in-kernel.
 
     table (R, D) local rows in HBM; bank/slot (V,) int32 remap (prefetched);
@@ -477,7 +492,7 @@ def banked_embedding_bag_pallas(table: jax.Array, bank: jax.Array,
         grid=(NB // tile_b,),
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
         out_specs=pl.BlockSpec((tile_b, D), lambda b, *_: (b, 0)),
-        scratch_shapes=_scratch(D, table.dtype),
+        scratch_shapes=_scratch(D, table.dtype, n_slots),
     )
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
@@ -491,8 +506,8 @@ def tiered_embedding_bag_pallas(payload: jax.Array, scale_bits: jax.Array,
                                 slot: jax.Array, field_offsets: jax.Array,
                                 my_bank: jax.Array, idx: jax.Array, *,
                                 dim: int, hot_dtype: str = "bf16",
-                                tile_b: int = 8, interpret: bool = False
-                                ) -> jax.Array:
+                                tile_b: int = 8, interpret: bool = False,
+                                n_slots: int = 2) -> jax.Array:
     """One bank's stage-2 partial bag sums over a TIERED byte payload.
 
     payload (R, row_bytes) int8 rows in HBM (each DMA slot is sized for the
@@ -511,7 +526,7 @@ def tiered_embedding_bag_pallas(payload: jax.Array, scale_bits: jax.Array,
         grid=(NB // tile_b,),
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
         out_specs=pl.BlockSpec((tile_b, dim), lambda b, *_: (b, 0)),
-        scratch_shapes=_scratch(payload.shape[-1], payload.dtype),
+        scratch_shapes=_scratch(payload.shape[-1], payload.dtype, n_slots),
     )
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
@@ -522,8 +537,8 @@ def tiered_embedding_bag_pallas(payload: jax.Array, scale_bits: jax.Array,
 
 
 def embedding_bag_pallas(table: jax.Array, idx: jax.Array, *,
-                         tile_b: int = 8, interpret: bool = False
-                         ) -> jax.Array:
+                         tile_b: int = 8, interpret: bool = False,
+                         n_slots: int = 2) -> jax.Array:
     """Plain bag sum: table (V, D); idx (B, L) -1 padded -> (B, D).
 
     Remap-free variant: rows are table positions, so no (V,)-sized scalar
@@ -539,7 +554,7 @@ def embedding_bag_pallas(table: jax.Array, idx: jax.Array, *,
         grid=(B // tile_b,),
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
         out_specs=pl.BlockSpec((tile_b, D), lambda b, *_: (b, 0)),
-        scratch_shapes=_scratch(D, table.dtype),
+        scratch_shapes=_scratch(D, table.dtype, n_slots),
     )
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
@@ -550,8 +565,8 @@ def embedding_bag_pallas(table: jax.Array, idx: jax.Array, *,
 
 def plain_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
                            cache_idx: jax.Array, residual_idx: jax.Array, *,
-                           tile_b: int = 8, interpret: bool = False
-                           ) -> jax.Array:
+                           tile_b: int = 8, interpret: bool = False,
+                           n_slots: int = 2) -> jax.Array:
     """Fig.-7 fused lookup over unbanked tables (identity layout): no remap
     operands in SMEM. -> (B, D) = Σ cached partials + Σ residual rows."""
     B, Lc = cache_idx.shape
@@ -568,7 +583,7 @@ def plain_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
                   pl.BlockSpec(memory_space=pltpu.ANY)],
         out_specs=pl.BlockSpec((tile_b, D), lambda b, *_: (b, 0)),
-        scratch_shapes=_scratch(D, emt.dtype),
+        scratch_shapes=_scratch(D, emt.dtype, n_slots),
     )
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
@@ -584,7 +599,8 @@ def fused_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
                            cache_bank: jax.Array, cache_slot: jax.Array,
                            my_bank: jax.Array, cache_idx: jax.Array,
                            residual_idx: jax.Array, *, tile_b: int = 8,
-                           interpret: bool = False) -> jax.Array:
+                           interpret: bool = False,
+                           n_slots: int = 2) -> jax.Array:
     """emt (R, D), cache (Rc, D); cache_idx (B, Lc), residual_idx (B, Lr)
     (-1 padded) -> (B, D) = Σ cached partials + Σ residual rows, one pass."""
     B, Lc = cache_idx.shape
@@ -601,7 +617,7 @@ def fused_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
                   pl.BlockSpec(memory_space=pltpu.ANY)],
         out_specs=pl.BlockSpec((tile_b, D), lambda b, *_: (b, 0)),
-        scratch_shapes=_scratch(D, emt.dtype),
+        scratch_shapes=_scratch(D, emt.dtype, n_slots),
     )
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
@@ -613,9 +629,16 @@ def fused_cache_bag_pallas(emt: jax.Array, cache: jax.Array,
       jnp.zeros((1,), jnp.int32), cache, emt)
 
 
-def _scatter_scratch(dim: int, ct_dtype, out_dtype):
-    return [pltpu.VMEM((2, 1, dim), ct_dtype), pltpu.SemaphoreType.DMA((2,)),
-            pltpu.VMEM((2, 1, dim), out_dtype), pltpu.SemaphoreType.DMA((2,))]
+def _scatter_scratch(dim: int, ct_dtype, out_dtype, n_slots: int = 2):
+    """Backward scratch: the cotangent INPUT stream shares the N-slot
+    ``_dma_accumulate`` pipeline, but the accumulated-row OUTPUT ping-pong in
+    ``_ct_scatter_kernel`` is hard-coded two-deep (its start/wait guards are
+    written against slot reuse at distance 2), so that pair stays (2, ...)."""
+    assert n_slots >= 1, n_slots
+    return [pltpu.VMEM((n_slots, 1, dim), ct_dtype),
+            pltpu.SemaphoreType.DMA((n_slots,)),
+            pltpu.VMEM((2, 1, dim), out_dtype),
+            pltpu.SemaphoreType.DMA((2,))]
 
 
 def _dest_slots(row: jax.Array, valid: jax.Array, bank: jax.Array,
@@ -632,7 +655,7 @@ def _dest_slots(row: jax.Array, valid: jax.Array, bank: jax.Array,
 
 def _ct_scatter_call(ct: jax.Array, dest: jax.Array, bags: jax.Array,
                      n_rows: int, out_dtype, *, tile_s: int,
-                     interpret: bool) -> jax.Array:
+                     interpret: bool, n_slots: int = 2) -> jax.Array:
     """Shared pallas_call plumbing for the backward scatters: run the sort
     prep, then the sorted-run kernel with the d_table aliased to zeros."""
     E = dest.shape[0]
@@ -648,7 +671,7 @@ def _ct_scatter_call(ct: jax.Array, dest: jax.Array, bags: jax.Array,
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
                   pl.BlockSpec(memory_space=pltpu.ANY)],
         out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
-        scratch_shapes=_scatter_scratch(D, ctp.dtype, out_dtype),
+        scratch_shapes=_scatter_scratch(D, ctp.dtype, out_dtype, n_slots),
     )
     out = pl.pallas_call(
         kernel, grid_spec=grid_spec,
@@ -666,7 +689,7 @@ def ct_scatter_bag_pallas(ct: jax.Array, idx: jax.Array, bank: jax.Array,
                           slot: jax.Array, field_offsets: jax.Array,
                           my_bank: jax.Array, n_rows: int, out_dtype, *,
                           tile_s: int = 8, interpret: bool = False,
-                          k_max: int = 1) -> jax.Array:
+                          k_max: int = 1, n_slots: int = 2) -> jax.Array:
     """Transpose of ``banked_embedding_bag_pallas``: scatter-add the bag
     cotangents back onto one bank's rows, entirely in the kernel layer.
 
@@ -700,14 +723,16 @@ def ct_scatter_bag_pallas(ct: jax.Array, idx: jax.Array, bank: jax.Array,
         row = row * k_max + replica_of_bag(bag, k_max)
     dest = _dest_slots(row, valid, bank, slot, my_bank, n_rows)
     return _ct_scatter_call(ct, dest, bag, n_rows, out_dtype,
-                            tile_s=tile_s, interpret=interpret)
+                            tile_s=tile_s, interpret=interpret,
+                            n_slots=n_slots)
 
 
 def ct_scatter_csr_pallas(ct: jax.Array, indices: jax.Array,
                           seg_ids: jax.Array, bank: jax.Array,
                           slot: jax.Array, my_bank: jax.Array, n_rows: int,
                           out_dtype, *, tile_s: int = 8,
-                          interpret: bool = False) -> jax.Array:
+                          interpret: bool = False,
+                          n_slots: int = 2) -> jax.Array:
     """Transpose of ``csr_bag_pallas``: ct (num_bags, D) bag cotangents,
     indices/seg_ids (T,) the forward's flat stream (entries keep their
     natural stream order within a run — the single-scatter fallback's
@@ -716,13 +741,14 @@ def ct_scatter_csr_pallas(ct: jax.Array, indices: jax.Array,
     row = jnp.where(valid, indices, 0)
     dest = _dest_slots(row, valid, bank, slot, my_bank, n_rows)
     return _ct_scatter_call(ct, dest, seg_ids, n_rows, out_dtype,
-                            tile_s=tile_s, interpret=interpret)
+                            tile_s=tile_s, interpret=interpret,
+                            n_slots=n_slots)
 
 
 def csr_bag_pallas(table: jax.Array, bank: jax.Array, slot: jax.Array,
                    my_bank: jax.Array, indices: jax.Array, seg_ids: jax.Array,
                    offsets_ext: jax.Array, num_bags: int, *, tile_b: int = 8,
-                   interpret: bool = False) -> jax.Array:
+                   interpret: bool = False, n_slots: int = 2) -> jax.Array:
     """CSR bag sums: indices (T,) flat stream, seg_ids (T,) bag per entry,
     offsets_ext (num_bags + 1,) with offsets_ext[-1] == T. -> (num_bags, D).
     ``num_bags`` must be a multiple of tile_b (pad offsets with T)."""
@@ -736,7 +762,7 @@ def csr_bag_pallas(table: jax.Array, bank: jax.Array, slot: jax.Array,
         grid=(num_bags // tile_b,),
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
         out_specs=pl.BlockSpec((tile_b, D), lambda b, *_: (b, 0)),
-        scratch_shapes=_scratch(D, table.dtype),
+        scratch_shapes=_scratch(D, table.dtype, n_slots),
     )
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,

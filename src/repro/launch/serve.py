@@ -66,8 +66,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="auto",
-                    choices=("auto", "jnp", "pallas"),
-                    help="embedding stage-2 backend (dlrm only)")
+                    choices=("auto", "jnp", "pallas", "tuned"),
+                    help="embedding stage-2 backend (dlrm only). 'auto' "
+                         "resolves to 'tuned': per-shape decisions from the "
+                         "committed TUNE_dispatch.json autotuner cache, "
+                         "falling back to the old auto rule on a cache miss")
     ap.add_argument("--adaptive", action="store_true",
                     help="online telemetry + drift-triggered repartitioning "
                          "with live table migration (dlrm only)")
@@ -146,6 +149,8 @@ def main() -> None:
                          "failure-injection contract")
     _add_obs_args(ap)
     args = ap.parse_args()
+    if args.backend == "auto":
+        args.backend = "tuned"   # auto now means: consult the dispatch cache
 
     spec = get_arch(args.arch)
     assert spec.family in ("dlrm", "din", "xdeepfm"), "recsys serving CLI"

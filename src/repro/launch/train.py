@@ -77,11 +77,13 @@ def main() -> None:
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--backend", default="auto",
-                    choices=("auto", "jnp", "pallas"),
+                    choices=("auto", "jnp", "pallas", "tuned"),
                     help="embedding stage-2 backend (dlrm). 'pallas' keeps "
                          "the WHOLE embedding step near memory: fused "
                          "lookup kernel forward, sorted-run scatter kernel "
-                         "backward")
+                         "backward. 'auto' resolves to 'tuned': per-shape "
+                         "decisions from the committed TUNE_dispatch.json "
+                         "autotuner cache, old auto rule on a miss")
     ap.add_argument("--bwd-backend", default="auto",
                     choices=("auto", "jnp", "pallas"),
                     help="override the gradient scatter only ('auto' "
@@ -116,6 +118,8 @@ def main() -> None:
                          "published as a new rewriter version")
     add_obs_args(ap)
     args = ap.parse_args()
+    if args.backend == "auto":
+        args.backend = "tuned"   # auto now means: consult the dispatch cache
 
     spec = get_arch(args.arch)
     cfg = spec.config if args.full else spec.reduced

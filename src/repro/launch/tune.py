@@ -1,0 +1,74 @@
+"""Autotune CLI: sweep the kernel candidate space and write the dispatch
+cache (``TUNE_dispatch.json``) that ``backend='tuned'`` lookups resolve
+through.
+
+Usage::
+
+    python -m repro.launch.tune                      # full sweep -> repo root
+    python -m repro.launch.tune --smoke --out /tmp/t.json   # CI smoke mode
+
+Smoke mode keeps the SAME signature suite as the full run (the cache's entry
+keys are its schema; CI gates key-path parity against the committed file via
+``benchmarks/check_regression.py --tune-baseline``) but shrinks candidates
+and repeats to CI seconds.
+
+After the sweep the CLI SELF-CHECKS the file it wrote: reloads it, installs
+it as the process cache, and verifies every recorded signature resolves to
+exactly the recorded decision — the persistence round-trip that the dispatch
+layer depends on.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="kernel autotuner -> TUNE_dispatch.json")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: TUNE_dispatch.json at the "
+                         "repo root, the committed location)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: same signature suite, fewer candidates "
+                         "and repeats")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="timing repeats per candidate (default 3, smoke 2)")
+    ap.add_argument("--arch", default=None,
+                    help="label recorded in the cache meta (default: "
+                         "'<jax backend>-compiled|interpret')")
+    args = ap.parse_args()
+
+    from repro.tune.autotune import tune
+    from repro.tune.dispatch import (CACHE_BASENAME, DispatchCache, _repo_root,
+                                     set_cache)
+
+    out = args.out or os.path.join(_repo_root(), CACHE_BASENAME)
+    cache = tune(smoke=args.smoke, repeats=args.repeats, arch=args.arch)
+    cache.save(out)
+    print(f"wrote {out}: {len(cache.entries)} entries "
+          f"(meta {cache.meta})")
+
+    # self-check: reload what we wrote and confirm the dispatch layer
+    # resolves every tuned signature to the recorded decision
+    reloaded = DispatchCache.load(out)
+    set_cache(reloaded)
+    try:
+        want = cache.decisions()
+        got = reloaded.decisions()
+        bad = [k for k in want
+               if (want[k].backend, want[k].tile_b, want[k].n_slots)
+               != (got[k].backend, got[k].tile_b, got[k].n_slots)]
+        if sorted(want) != sorted(got) or bad:
+            print(f"self-check FAILED: round-trip decisions diverge "
+                  f"({bad or 'key sets differ'})", file=sys.stderr)
+            return 1
+    finally:
+        set_cache(None)
+    print(f"self-check OK: {len(want)} decisions round-trip bit-exact")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

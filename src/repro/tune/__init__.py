@@ -1,0 +1,24 @@
+"""Kernel autotuner + shape-specialized dispatch (ROADMAP: measured, not
+assumed).
+
+``dispatch`` — the persisted per-call-signature decision cache
+(``TUNE_dispatch.json``) that ``backend='tuned'`` lookups in
+``core/embedding.py`` resolve through at trace time.
+
+``autotune`` — the sweep that produces it: measure every (backend, tile_b,
+n_slots) candidate per signature and record the winner.
+"""
+from repro.tune.dispatch import (CallSignature, Decision, DispatchCache,
+                                 decide, default_cache_path, get_cache,
+                                 set_cache, signature)
+
+__all__ = [
+    "CallSignature",
+    "Decision",
+    "DispatchCache",
+    "decide",
+    "default_cache_path",
+    "get_cache",
+    "set_cache",
+    "signature",
+]
