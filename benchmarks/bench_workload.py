@@ -934,6 +934,135 @@ def run_replication(*, seed: int = SEED) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# traffic-calibration scenario (repro.obs.traffic): measured vs modeled
+# ---------------------------------------------------------------------------
+
+# stationary head (no rotation, no bursts): the plan is built from the same
+# regime it serves, so the plan-time load model SHOULD predict the measured
+# max-bank share — this scenario gates on that calibration. Small enough for
+# the REAL jit'd serve step (with the in-band per-bank counters) in CI
+# seconds, like run_fault_recovery.
+TRAFFIC_VOCAB = 2000
+TRAFFIC_DIM = 16
+TRAFFIC_BATCH = 16
+TRAFFIC_BATCHES = 64
+# sampling tolerance: warmup (256 bags) and stream (1024 bags) are separate
+# draws from one stationary zipf, so the shares differ by sketch noise only;
+# a real attribution bug (wrong bank, dropped reads) moves the share by
+# whole points
+TRAFFIC_SHARE_RTOL = 0.10
+
+
+def run_traffic_calibration(*, seed: int = SEED) -> dict:
+    """Measured per-bank traffic (obs.traffic device counters inside the
+    REAL jit'd serve step) vs the plan-time load model, on a stationary
+    trace where the model has no excuse.
+
+    Every other scenario's bank-load numbers are *modeled* — this one runs
+    the actual serve executable with ``bank_read_counts`` computed on device
+    from the same remap arguments the lookup consumes, recounts every batch
+    on the host (``host_bank_read_counts``), and gates on three things:
+    the device counts bit-match the host recount, the measured aggregate
+    max-bank share lands within ``TRAFFIC_SHARE_RTOL`` of the plan's
+    modeled share, and the counter-instrumented step still compiles ONE
+    executable. The measured series flows through the same
+    ``TrafficAccumulator`` the serve CLI exports, so the bench and the
+    runtime share one accounting path.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.embedding import BankedTable, banked_embedding_bag
+    from repro.obs.traffic import (TrafficAccumulator, bank_read_counts,
+                                   host_bank_read_counts)
+
+    vocab, dim = TRAFFIC_VOCAB, TRAFFIC_DIM
+    cap = int(np.ceil(vocab / BANKS) * 1.25)
+    drift = DriftConfig(n_items=vocab, zipf_a=1.08, avg_bag=8.0,
+                        rotate_every=10 ** 9)      # stationary by design
+    trace = DriftingZipfTrace(drift, seed=seed)
+    warm = trace.bags(256)
+    freq0 = np.zeros(vocab)
+    for bag in warm:
+        np.add.at(freq0, bag, 1.0)
+    plan = non_uniform_partition(freq0 + 1e-3, BANKS, capacity_rows=cap)
+    modeled_share = float(plan.load_per_bank.max() / plan.load_per_bank.sum())
+
+    rng = np.random.default_rng(seed)
+    table_np = (rng.standard_normal((vocab, dim)) * 0.01).astype(np.float32)
+    packed0 = np.zeros((BANKS * cap, dim), np.float32)
+    packed0[plan.bank_of_row.astype(np.int64) * cap
+            + plan.slot_of_row] = table_np
+    table = BankedTable(packed=jnp.asarray(packed0),
+                        remap_bank=jnp.asarray(plan.bank_of_row, jnp.int32),
+                        remap_slot=jnp.asarray(plan.slot_of_row, jnp.int32),
+                        n_banks=BANKS, rows_per_bank=cap)
+
+    @jax.jit
+    def serve(packed, remap_bank, remap_slot, idx):
+        bt = BankedTable(packed=packed, remap_bank=remap_bank,
+                         remap_slot=remap_slot, n_banks=BANKS,
+                         rows_per_bank=cap)
+        emb = banked_embedding_bag(bt, idx, None, backend="jnp")
+        return emb, bank_read_counts(remap_bank, idx, BANKS)
+
+    reg = MetricRegistry()
+    acc = TrafficAccumulator(reg, BANKS, row_nbytes=dim * 4)
+    t_row = UPMEMProfile().mram_read_latency(dim * 4)
+    total = np.zeros(BANKS, np.int64)
+    lookups = 0
+    bit_match = True
+    lat_measured, lat_modeled = [], []
+    for _ in range(TRAFFIC_BATCHES):
+        idx = _rect_bags(trace.bags(TRAFFIC_BATCH))
+        _, reads = serve(table.packed, table.remap_bank, table.remap_slot,
+                         jnp.asarray(idx))
+        reads = np.asarray(reads)
+        host = host_bank_read_counts(plan.bank_of_row, idx, BANKS)
+        bit_match &= bool(np.array_equal(reads, host))
+        acc.update(reads)
+        total += reads
+        lookups += int((idx >= 0).sum())
+        lat_measured.append(float(reads.max() * t_row * 1e6))
+        # the plan-time projection of the SAME batch: split its reads by
+        # the warmup frequencies' bank shares (what the planner promised)
+        lat_modeled.append(float(reads.sum() * modeled_share * t_row * 1e6))
+
+    measured_share = float(total.max() / total.sum())
+    return {
+        "config": {
+            "vocab": vocab, "dim": dim, "banks": BANKS,
+            "batch": TRAFFIC_BATCH, "n_batches": TRAFFIC_BATCHES,
+            "share_rtol": TRAFFIC_SHARE_RTOL, "seed": seed,
+            "latency_model": "max-bank MEASURED reads x UPMEM MRAM read "
+                             "latency (realized) vs plan-share x total "
+                             "reads (projected)",
+        },
+        "modeled": {
+            "max_bank_share": modeled_share,
+            "p99_model_latency_us": float(p99(lat_modeled)),
+        },
+        "measured": {
+            "max_bank_share": measured_share,
+            "p99_model_latency_us": float(p99(lat_measured)),
+            "reads_total": int(total.sum()),
+            "lookups_total": lookups,
+            "argmax_bank": int(np.argmax(total)),
+            "batches": acc.batches,
+        },
+        "adaptive_wins": {
+            "counts_bit_match_host": bit_match,
+            "reads_match_lookups": int(total.sum()) == lookups,
+            "measured_vs_modeled_share":
+                abs(measured_share - modeled_share)
+                <= TRAFFIC_SHARE_RTOL * modeled_share,
+            "one_serve_executable": serve._cache_size() == 1,
+        },
+        "ideal_share": 1.0 / BANKS,
+    }
+
+
 def workload_drift():
     """benchmarks/run.py hook: (name, us_per_call, derived) rows. A short
     stream keeps the CI run in seconds; the standalone script uses the full
@@ -970,6 +1099,11 @@ def workload_drift():
            f"share{d['replicated'][str(k)]['modeled_max_bank_share']:.3f}"
            f"_vs_single{d['single_copy']['modeled_max_bank_share']:.3f}"
            f"_k{k}")
+    d = run_traffic_calibration()
+    yield ("workload_traffic_calibration_p99_model",
+           d["measured"]["p99_model_latency_us"],
+           f"share{d['measured']['max_bank_share']:.3f}"
+           f"_vs_model{d['modeled']['max_bank_share']:.3f}")
 
 
 def write_json(out: str = "BENCH_workload.json", smoke: bool = False,
@@ -988,6 +1122,7 @@ def write_json(out: str = "BENCH_workload.json", smoke: bool = False,
     doc["tiered"] = run_tiered(stream_bags=n)
     doc["fault_recovery"] = run_fault_recovery()
     doc["replication"] = run_replication()
+    doc["traffic_calibration"] = run_traffic_calibration()
     doc["smoke"] = smoke
     with open(out, "w") as fh:
         json.dump(doc, fh, indent=2)
@@ -1059,6 +1194,18 @@ def _print_replication(doc: dict) -> None:
     print(f"  wins={doc['adaptive_wins']}")
 
 
+def _print_traffic(doc: dict) -> None:
+    m, d = doc["measured"], doc["modeled"]
+    print("[traffic calibration: measured counters vs the load model]")
+    print(f"{'modeled':<10} max-bank share {d['max_bank_share']:>8.4f}  "
+          f"p99 model us {d['p99_model_latency_us']:>8.1f}")
+    print(f"{'measured':<10} max-bank share {m['max_bank_share']:>8.4f}  "
+          f"p99 model us {m['p99_model_latency_us']:>8.1f}   "
+          f"({m['reads_total']} reads over {m['batches']} batches, "
+          f"hot bank {m['argmax_bank']})")
+    print(f"  wins={doc['adaptive_wins']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_workload.json")
@@ -1082,13 +1229,15 @@ def main() -> None:
     _print_tiered(doc["tiered"])
     _print_fault(doc["fault_recovery"])
     _print_replication(doc["replication"])
+    _print_traffic(doc["traffic_calibration"])
     print(f"ideal share {doc['ideal_share']:.4f}; wrote {args.out}")
     ok = (all(doc["adaptive_wins"].values())
           and all(doc["cache_aware"]["adaptive_wins"].values())
           and all(doc["criteo_replay"]["adaptive_wins"].values())
           and all(doc["tiered"]["adaptive_wins"].values())
           and all(doc["fault_recovery"]["adaptive_wins"].values())
-          and all(doc["replication"]["adaptive_wins"].values()))
+          and all(doc["replication"]["adaptive_wins"].values())
+          and all(doc["traffic_calibration"]["adaptive_wins"].values()))
     if not ok:
         raise SystemExit(1)
 

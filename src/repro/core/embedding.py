@@ -739,6 +739,23 @@ def degraded_mean_fill(emb: Array, per_bag_counts: Array,
 
 
 # ---------------------------------------------------------------------------
+# measured traffic: union-vocab rows for the per-bank counters
+# ---------------------------------------------------------------------------
+
+def _traffic_rows(idx: Array, field_offsets: Array | None) -> Array:
+    """The union-vocab row ids a batch actually reads: ``field_offsets``
+    applied per flattened bag (bag n -> field n % F, exactly the
+    ``_field_offsets_per_bag`` rule the lookup paths use), padding kept as
+    -1. This is what the ``with_traffic`` counters count."""
+    if field_offsets is None:
+        return idx
+    off = jnp.asarray(field_offsets, jnp.int32)
+    flat = idx.reshape(-1, idx.shape[-1])
+    offs = _field_offsets_per_bag(off, flat.shape[0])
+    return jnp.where(flat >= 0, flat + offs[:, None], -1)
+
+
+# ---------------------------------------------------------------------------
 # distributed lookup
 # ---------------------------------------------------------------------------
 
@@ -764,7 +781,8 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
                          field_offsets: Array | None = None,
                          tile_b: int = 8, n_slots: int = 2,
                          interpret: bool | None = None,
-                         bank_live: Array | None = None) -> Array:
+                         bank_live: Array | None = None,
+                         with_traffic: bool = False):
     """The paper's stages 1-3. idx (..., L) -> (..., dim) [reduce] or
     (..., L, dim).
 
@@ -789,7 +807,24 @@ def banked_embedding_bag(t: BankedTable, idx: Array, dist: DistCtx | None,
     ``backend='tuned'`` resolves (backend, tile_b, n_slots) through the
     persisted dispatch cache at trace time (repro.tune); a cache miss is the
     deterministic 'auto' default with the caller's tile_b/n_slots.
+
+    ``with_traffic=True`` additionally returns a ``BankTraffic`` of exact
+    per-bank measured read/byte counts for this batch — pure jnp on the
+    same jit arguments (the ``degraded_row_counts`` pattern: zero extra
+    executables, swap-safe). Return becomes ``(out, traffic)``.
     """
+    if with_traffic:
+        out = banked_embedding_bag(
+            t, idx, dist, reduce_bag=reduce_bag, backend=backend,
+            bwd_backend=bwd_backend, field_offsets=field_offsets,
+            tile_b=tile_b, n_slots=n_slots, interpret=interpret,
+            bank_live=bank_live)
+        from repro.obs.traffic import bank_read_counts, traffic_from_reads
+        reads = bank_read_counts(t.remap_bank,
+                                 _traffic_rows(idx, field_offsets),
+                                 t.n_banks, bank_live=bank_live)
+        row_nbytes = t.packed.shape[-1] * np.dtype(t.packed.dtype).itemsize
+        return out, traffic_from_reads(reads, row_nbytes)
     if backend == "tuned" and reduce_bag:
         backend, tile_b, n_slots = _dispatch(
             "plain", vocab=t.vocab, dim=t.dim,
@@ -902,7 +937,8 @@ def replicated_embedding_bag(t: ReplicatedTable, idx: Array,
                              field_offsets: Array | None = None,
                              tile_b: int = 8, n_slots: int = 2,
                              interpret: bool | None = None,
-                             bank_live: Array | None = None) -> Array:
+                             bank_live: Array | None = None,
+                             with_traffic: bool = False):
     """Stages 1-3 over a REPLICATED table: idx (..., L) -> (..., dim) bag
     sums, with each bag reading copy ``wang_hash(bag) % k_max`` of every row
     it touches — a k-copy hot row's traffic splits k ways with no host-side
@@ -921,11 +957,27 @@ def replicated_embedding_bag(t: ReplicatedTable, idx: Array,
     The sharded (mesh) path is not wired yet — replication currently rides
     the unsharded serve loop; the multi-host mesh item in ROADMAP.md picks
     this up.
+
+    ``with_traffic=True``: return becomes ``(out, BankTraffic)`` — measured
+    reads routed to the SAME copy the kernel's wang-hash pick reads (and,
+    under ``bank_live``, the same failover column the maps substitute).
     """
     if dist is not None:
         raise ValueError("replicated_embedding_bag is unsharded-only for "
                          "now — see the multi-host serving mesh item in "
                          "ROADMAP.md")
+    if with_traffic:
+        out = replicated_embedding_bag(
+            t, idx, dist, backend=backend, bwd_backend=bwd_backend,
+            field_offsets=field_offsets, tile_b=tile_b, n_slots=n_slots,
+            interpret=interpret, bank_live=bank_live)
+        from repro.obs.traffic import (replicated_bank_read_counts,
+                                       traffic_from_reads)
+        reads = replicated_bank_read_counts(
+            t.remap_bank, _traffic_rows(idx, field_offsets), t.n_banks,
+            k_max=t.k_max, bank_live=bank_live)
+        row_nbytes = t.packed.shape[-1] * np.dtype(t.packed.dtype).itemsize
+        return out, traffic_from_reads(reads, row_nbytes)
     if backend == "tuned":
         backend, tile_b, n_slots = _dispatch(
             "replicated", vocab=t.vocab, dim=t.dim,
@@ -955,7 +1007,8 @@ def tiered_embedding_bag(fp_packed: Array, tt, idx: Array,
                          bwd_backend: str = "auto",
                          field_offsets: Array | None = None,
                          tile_b: int = 8, n_slots: int = 2,
-                         interpret: bool | None = None) -> Array:
+                         interpret: bool | None = None,
+                         with_traffic: bool = False):
     """Stages 1-3 over a TIERED table (repro.quant.TieredTable): the fused
     lookup path with per-row dequant applied in-kernel (pallas) or in-scan
     (jnp) — idx (..., L) -> (..., dim) fp32 bag sums.
@@ -967,6 +1020,17 @@ def tiered_embedding_bag(fp_packed: Array, tt, idx: Array,
     ``params['emb_packed']`` unchanged. One-hot fields fold in as length-1
     bags — the dense-gather semantics of ``banked_gather`` at fp32.
     """
+    if with_traffic:
+        out = tiered_embedding_bag(
+            fp_packed, tt, idx, dist, backend=backend,
+            bwd_backend=bwd_backend, field_offsets=field_offsets,
+            tile_b=tile_b, n_slots=n_slots, interpret=interpret)
+        from repro.obs.traffic import tiered_bank_traffic
+        from repro.quant import tier_nbytes
+        return out, tiered_bank_traffic(
+            tt.remap_bank, tt.remap_slot, tt.rows_per_bank, tt.tier,
+            tier_nbytes(tt.dim, tt.hot_dtype),
+            _traffic_rows(idx, field_offsets), tt.n_banks)
     if backend == "tuned":
         backend, tile_b, n_slots = _dispatch(
             "tiered", vocab=int(tt.remap_bank.shape[0]), dim=tt.dim,
@@ -1024,7 +1088,8 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
                               bwd_backend: str = "auto", tile_b: int = 8,
                               n_slots: int = 2,
                               interpret: bool | None = None,
-                              bank_live: Array | None = None) -> Array:
+                              bank_live: Array | None = None,
+                              with_traffic: bool = False):
     """Cache-aware fused lookup (paper Fig. 7): one stage-2 pass computes
     ``Σ cache_partials + Σ residual_rows`` per bag.
 
@@ -1039,6 +1104,18 @@ def banked_cache_residual_bag(t: BankedTable, cache: BankedTable,
     zero-row degraded substitute. Same zero-recompile argument contract as
     ``banked_embedding_bag``.
     """
+    if with_traffic:
+        out = banked_cache_residual_bag(
+            t, cache, cache_idx, residual_idx, dist, backend=backend,
+            bwd_backend=bwd_backend, tile_b=tile_b, n_slots=n_slots,
+            interpret=interpret, bank_live=bank_live)
+        from repro.obs.traffic import (cached_bank_read_counts,
+                                       traffic_from_reads)
+        reads = cached_bank_read_counts(
+            cache.remap_bank, cache_idx, t.remap_bank, residual_idx,
+            t.n_banks, bank_live=bank_live)
+        row_nbytes = t.packed.shape[-1] * np.dtype(t.packed.dtype).itemsize
+        return out, traffic_from_reads(reads, row_nbytes)
     if backend == "tuned":
         backend, tile_b, n_slots = _dispatch(
             "fused", vocab=t.vocab, dim=t.dim,
@@ -1164,7 +1241,8 @@ def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
                       num_bags: int, dist: DistCtx | None, *,
                       backend: str = "auto", bwd_backend: str = "auto",
                       tile_b: int = 8, n_slots: int = 2,
-                      interpret: bool | None = None) -> Array:
+                      interpret: bool | None = None,
+                      with_traffic: bool = False):
     """CSR-ragged variant (indices flat + offsets), bag-summed.
 
     Ragged bags cannot shard on batch without equal per-shard totals, so the
@@ -1176,6 +1254,15 @@ def csr_embedding_bag(t: BankedTable, indices: Array, offsets: Array,
     double-buffered row DMA as the rectangular kernel (bag id = prefetched
     segment id), so ragged bags fuse without padding to a rectangle.
     """
+    if with_traffic:
+        out = csr_embedding_bag(
+            t, indices, offsets, num_bags, dist, backend=backend,
+            bwd_backend=bwd_backend, tile_b=tile_b, n_slots=n_slots,
+            interpret=interpret)
+        from repro.obs.traffic import bank_read_counts, traffic_from_reads
+        reads = bank_read_counts(t.remap_bank, indices, t.n_banks)
+        row_nbytes = t.packed.shape[-1] * np.dtype(t.packed.dtype).itemsize
+        return out, traffic_from_reads(reads, row_nbytes)
     if backend == "tuned":
         backend, tile_b, n_slots = _dispatch(
             "csr", vocab=t.vocab, dim=t.dim, batch=int(num_bags),

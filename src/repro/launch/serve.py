@@ -39,6 +39,90 @@ from repro.obs.cli import setup_obs as _setup_obs
 from repro.serve.serve_step import MicroBatcher, Request
 
 
+def _projected_share(runtime) -> float:
+    """Plan-time projected max-bank share of the INSTALLED plan on the
+    recent telemetry window — the promise the SLO watchdog's divergence
+    check holds the measured traffic against. Cache-aware lanes project
+    through the bag-replay model (reads the cache absorbs count for the
+    plan), everything else uses the row-share projection."""
+    rp = runtime.replanner
+    fcp = rp.current_cache_fixed
+    if fcp is not None and rp._recent_bags:
+        return rp.projected_max_share_cached(runtime.plan, fcp,
+                                             list(rp._recent_bags))
+    return rp.projected_max_share(runtime.plan, rp.telemetry.freq_vector())
+
+
+class _TrafficSLO:
+    """One serve loop's measured-traffic lane: the TrafficAccumulator
+    (``obs.bank_reads`` / ``obs.bank_bytes`` / ``obs.bank_share``), the SLO
+    watchdog, and the Chrome-trace counter tracks. Built unconditionally by
+    every adaptive main so the metrics snapshot carries the whole ``obs.*``
+    family whether or not any SLO check is armed (the CI metrics-schema
+    gate keys on the names, not the values)."""
+
+    def __init__(self, args, metrics, tracer, *, banks, dim, row_nbytes,
+                 runtime=None):
+        from repro.obs.slo import SLOConfig, SLOWatchdog, hot_bank_penalty
+        from repro.obs.traffic import TrafficAccumulator
+        self.tracer = tracer
+        self.banks = banks
+        self.acc = TrafficAccumulator(metrics, banks, row_nbytes=row_nbytes)
+        self.penalties = 0
+
+        def on_breach(kind, info):
+            if runtime is None:
+                return
+            pen = hot_bank_penalty(info["window_reads"], banks)
+            runtime.on_slo_breach(pen)
+            self.penalties += 1
+            print(f"  [slo breach @batch {info['batch']}] {kind}: "
+                  f"{info['value']:.1f} > {info['threshold']:.1f} "
+                  f"(hot bank {info['bank']}, penalty "
+                  f"x{pen.max():.2f} -> replanner)")
+
+        cfg = SLOConfig(p99_us=args.slo_p99_us, max_share=args.slo_max_share,
+                        divergence=args.slo_divergence, window=args.slo_window)
+        self.watchdog = SLOWatchdog(cfg, n_banks=banks, dim=dim,
+                                    metrics=metrics, tracer=tracer,
+                                    on_breach=on_breach)
+        if runtime is not None:
+            self.watchdog.set_projection(_projected_share(runtime))
+
+    @property
+    def breaches(self) -> int:
+        return self.watchdog.breaches
+
+    def on_swap(self, runtime) -> None:
+        """Refresh the plan-time projection after a live swap."""
+        self.watchdog.set_projection(_projected_share(runtime))
+
+    def after_step(self, batch, reads, wall_us, batch_size, *, nbytes=None,
+                   p99_ms=None):
+        """Fold one batch's measured counts; feed the watchdog."""
+        reads = np.asarray(reads)
+        share = self.acc.update(reads, nbytes if nbytes is None
+                                else np.asarray(nbytes))
+        self.tracer.counter(
+            "bank_reads", **{f"bank{i}": int(v) for i, v in enumerate(reads)})
+        self.tracer.counter("serve_slo", max_bank_share=share,
+                            **({} if p99_ms is None else {"p99_ms": p99_ms}))
+        self.watchdog.observe(batch, wall_us=wall_us, reads=reads,
+                              batch_size=batch_size)
+        return share
+
+    def check_contract(self, min_breaches: int) -> None:
+        """The CI SLO contract: at least ``min_breaches`` detected AND the
+        replanner actually received a penalty for each breach lane."""
+        if min_breaches <= 0:
+            return
+        if self.breaches < min_breaches or self.penalties < 1:
+            raise SystemExit(
+                f"slo contract violated: breaches={self.breaches} "
+                f"(need >= {min_breaches}), replanner penalties="
+                f"{self.penalties} (need >= 1)")
+
+
 class CompileProbe:
     """Counts XLA compilations via jax.monitoring — the zero-recompile
     assertion for live swaps (each jit compilation emits one
@@ -140,6 +224,30 @@ def main() -> None:
                          "modeled bank time exceeds this multiple of the "
                          "running median flags its slowest bank, feeding a "
                          "latency penalty into the planner's load model")
+    ap.add_argument("--slo-p99-us", type=float, default=0.0,
+                    help="SLO watchdog (dlrm --adaptive): breach when the "
+                         "rolling-window p99 of measured device-step wall "
+                         "time exceeds this budget (microseconds; 0 = check "
+                         "off). Breaches mark the Chrome trace, bump "
+                         "obs.slo_breaches_total, and push a hot-bank "
+                         "penalty into the replanner")
+    ap.add_argument("--slo-max-share", type=float, default=0.0,
+                    help="SLO watchdog: breach when the window-mean MEASURED "
+                         "max-bank read share exceeds this fraction "
+                         "(0 = check off; 1/banks is perfect balance)")
+    ap.add_argument("--slo-divergence", type=float, default=0.0,
+                    help="SLO watchdog: breach when the realized modeled "
+                         "latency (hwmodel priced at MEASURED bank shares) "
+                         "exceeds the plan-time projection by this relative "
+                         "margin (0 = check off)")
+    ap.add_argument("--slo-window", type=int, default=16,
+                    help="micro-batches per SLO evaluation window (also the "
+                         "per-check cooldown after a breach fires)")
+    ap.add_argument("--min-slo-breaches", type=int, default=0,
+                    help="exit nonzero unless at least this many SLO "
+                         "breaches were detected AND the replanner received "
+                         "the hot-bank penalty — the CI measure->plan "
+                         "feedback contract")
     ap.add_argument("--min-recoveries", type=int, default=0,
                     help="exit nonzero unless at least this many "
                          "bank-failure recoveries completed AND the fault "
@@ -263,6 +371,7 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
     tracer, metrics, writer = _setup_obs(
         args, label=f"serve-adaptive:{args.arch}:quant={args.quant}")
     probe = CompileProbe(metrics=metrics) if quant_on else None
+    offs_j = jnp.asarray(offs)
 
     table = BankedTable(packed=params["emb_packed"],
                         remap_bank=statics["remap_bank"],
@@ -277,6 +386,10 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
     runtime = AdaptiveEmbeddingRuntime(table, plan, rcfg,
                                        init_freq=np.ones(V),
                                        tracer=tracer, metrics=metrics)
+    row_nbytes = (params["emb_packed"].shape[-1]
+                  * np.dtype(params["emb_packed"].dtype).itemsize)
+    slo = _TrafficSLO(args, metrics, tracer, banks=banks, dim=cfg.embed_dim,
+                      row_nbytes=row_nbytes, runtime=runtime)
 
     # remap vectors (and on --quant the whole TieredTable) enter as
     # ARGUMENTS: a swap feeds new arrays of the same shape to the same
@@ -284,15 +397,21 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
     if quant_on:
         from repro.serve.serve_step import build_recsys_serve_tiered_adaptive
         serve_tiered = jax.jit(build_recsys_serve_tiered_adaptive(
-            mod, cfg, statics, backend=args.backend))
+            mod, cfg, statics, backend=args.backend, with_traffic=True))
     else:
+        from repro.obs.traffic import bank_read_counts
+
         @jax.jit
         def serve(params, remap_bank, remap_slot, batch):
             st = {**statics, "remap_bank": remap_bank,
                   "remap_slot": remap_slot}
             logits = mod.forward(cfg, params, st, batch,
                                  backend=args.backend)
-            return jax.nn.sigmoid(logits)
+            sparse = batch["sparse"]
+            o = offs_j[None, :] if sparse.ndim == 2 else offs_j[None, :, None]
+            rows = jnp.where(sparse >= 0, sparse + o, -1)
+            return jax.nn.sigmoid(logits), bank_read_counts(
+                remap_bank, rows, banks)
 
     def observe(feats, n_real):
         sp = np.asarray(feats["sparse"])[:n_real]        # (n, F) or (n, F, L)
@@ -334,22 +453,29 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
     def run_batch():
         with tracer.span("rewrite"):
             reqs, feats = mb.next_batch()
+        t0 = time.perf_counter()
         with tracer.span("device_step", batch=state["n_batches"]):
             p = {**params, "emb_packed": runtime.table.packed}
             if quant_on:
-                scores = serve_tiered(p, runtime.tiered, feats)
+                scores, reads, nbytes = serve_tiered(p, runtime.tiered, feats)
             else:
-                scores = serve(p, runtime.table.remap_bank,
-                               runtime.table.remap_slot, feats)
+                scores, reads = serve(p, runtime.table.remap_bank,
+                                      runtime.table.remap_slot, feats)
+                nbytes = None
             jax.block_until_ready(scores)
+        wall_us = (time.perf_counter() - t0) * 1e6
         if quant_on and state["warm_compiles"] is None:
             state["warm_compiles"] = probe.compiles
         mb.complete(reqs)
+        slo.after_step(state["n_batches"], reads, wall_us, args.batch,
+                       nbytes=None if nbytes is None else np.asarray(nbytes),
+                       p99_ms=mb.p99() * 1e3)
         state["n_batches"] += 1
         if writer is not None:
             writer.maybe_write(state["n_batches"])
         event = runtime.end_batch()        # drift check -> migrate -> swap
         if event is not None:
+            slo.on_swap(runtime)
             msg = (f"  [swap @batch {event.batch}] {event.update.report} "
                    f"imbalance {event.old_imbalance:.3f} -> "
                    f"{event.new_imbalance:.3f}")
@@ -395,6 +521,7 @@ def _main_adaptive(args, spec, cfg, mod) -> None:
                     f"(need >= {args.min_swaps}), serve executables="
                     f"{executables} (need 1), "
                     f"re-tier parity={verify.get('tier_ok')}")
+    slo.check_contract(args.min_slo_breaches)
 
 
 def _main_adaptive_replicated(args, spec, cfg, mod) -> None:
@@ -447,8 +574,12 @@ def _main_adaptive_replicated(args, spec, cfg, mod) -> None:
     # enters as an ARGUMENT; bank_live composes the fault lane in (all-live
     # here — failover behavior is pinned by tests/test_replication.py)
     serve = jax.jit(build_recsys_serve_replicated_adaptive(
-        mod, cfg, statics, backend=args.backend))
+        mod, cfg, statics, backend=args.backend, with_traffic=True))
     all_live = jnp.ones(banks, dtype=bool)
+    row_nbytes = (params["emb_packed"].shape[-1]
+                  * np.dtype(params["emb_packed"].dtype).itemsize)
+    slo = _TrafficSLO(args, metrics, tracer, banks=banks, dim=cfg.embed_dim,
+                      row_nbytes=row_nbytes, runtime=runtime)
 
     def observe(feats, n_real):
         sp = np.asarray(feats["sparse"])[:n_real]
@@ -490,8 +621,8 @@ def _main_adaptive_replicated(args, spec, cfg, mod) -> None:
                      and (np.asarray(rtable.remap_slot)
                           == np.asarray(fresh.remap_slot)).all())
         feats = verify["feats"]
-        swapped, _ = serve(params, rtable, all_live, feats)
-        scratch, _ = serve(params, fresh, all_live, feats)
+        swapped, _, _ = serve(params, rtable, all_live, feats)
+        scratch, _, _ = serve(params, fresh, all_live, feats)
         out_ok = (np.asarray(swapped) == np.asarray(scratch)).all()
         verify["repack_ok"] = bool(arrays_ok and out_ok)
         print(f"  [replica swap parity] arrays "
@@ -502,19 +633,24 @@ def _main_adaptive_replicated(args, spec, cfg, mod) -> None:
     def run_batch():
         with tracer.span("rewrite"):
             reqs, feats = mb.next_batch()
+        t0 = time.perf_counter()
         with tracer.span("device_step", batch=state["n_batches"]):
             _, rtable = runtime.replicated
-            scores, counts = serve(params, rtable, all_live, feats)
+            scores, counts, reads = serve(params, rtable, all_live, feats)
             jax.block_until_ready(scores)
+        wall_us = (time.perf_counter() - t0) * 1e6
         assert int(np.asarray(counts).sum()) == 0  # all-live: no degradation
         if state["warm_compiles"] is None:
             state["warm_compiles"] = probe.compiles
         mb.complete(reqs)
+        slo.after_step(state["n_batches"], reads, wall_us, args.batch,
+                       p99_ms=mb.p99() * 1e3)
         state["n_batches"] += 1
         if writer is not None:
             writer.maybe_write(state["n_batches"])
         event = runtime.end_batch()        # drift check -> migrate -> swap
         if event is not None:
+            slo.on_swap(runtime)
             rplan, _ = runtime.replicated
             print(f"  [swap @batch {event.batch}] {event.update.report} "
                   f"imbalance {event.old_imbalance:.3f} -> "
@@ -564,6 +700,7 @@ def _main_adaptive_replicated(args, spec, cfg, mod) -> None:
                 f"(need >= {args.min_swaps}), serve executables="
                 f"{executables} (need 1), "
                 f"re-pack parity={verify.get('repack_ok')}")
+    slo.check_contract(args.min_slo_breaches)
 
 
 def _main_adaptive_fault(args, spec, cfg, mod) -> None:
@@ -627,8 +764,12 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
                                  metrics=metrics)
 
     serve = jax.jit(build_recsys_serve_degraded_adaptive(
-        mod, cfg, statics, backend=args.backend))
+        mod, cfg, statics, backend=args.backend, with_traffic=True))
     all_live = jnp.ones(banks, dtype=bool)
+    row_nbytes = (params["emb_packed"].shape[-1]
+                  * np.dtype(params["emb_packed"].dtype).itemsize)
+    slo = _TrafficSLO(args, metrics, tracer, banks=banks, dim=cfg.embed_dim,
+                      row_nbytes=row_nbytes, runtime=runtime)
     # the never-failed reference pack: same executable, original arrays
     orig = (params["emb_packed"], statics["remap_bank"],
             statics["remap_slot"])
@@ -659,7 +800,7 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
 
     def never_failed(feats):
         p0 = {**params, "emb_packed": orig[0]}
-        ref, _ = serve(p0, orig[1], orig[2], all_live, feats)
+        ref, _, _ = serve(p0, orig[1], orig[2], all_live, feats)
         return np.asarray(ref)
 
     def run_batch():
@@ -674,12 +815,16 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
         live = fault.live_mask()
         with tracer.span("rewrite"):
             reqs, feats = mb.next_batch()
+        t0 = time.perf_counter()
         with tracer.span("device_step", batch=b):
             p = {**params, "emb_packed": runtime.table.packed}
-            scores, counts = serve(p, runtime.table.remap_bank,
-                                   runtime.table.remap_slot,
-                                   jnp.asarray(live), feats)
+            scores, counts, reads = serve(p, runtime.table.remap_bank,
+                                          runtime.table.remap_slot,
+                                          jnp.asarray(live), feats)
             jax.block_until_ready(scores)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        slo.after_step(b, reads, wall_us, args.batch,
+                       p99_ms=mb.p99() * 1e3)
         if writer is not None:
             writer.maybe_write(st["batch"])
         counts = np.asarray(counts)
@@ -717,6 +862,7 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
         dead = frozenset(fault.dead_banks())
         if dead != st["handled_dead"]:
             event = runtime.on_bank_failure(live)
+            slo.on_swap(runtime)
             st["handled_dead"] = dead
             recoveries.append(event)
             print(f"  [recovery replan @batch {b}] dead={sorted(dead)} "
@@ -740,6 +886,7 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
             pen = np.ones(banks)
             pen[slow] = float(max(sf[slow], 1.0))
             event = runtime.on_straggler(pen)
+            slo.on_swap(runtime)
             st["penalized"] = True
             print(f"  [straggler @batch {b}] bank {slow} flagged "
                   f"(x{pen[slow]:g}); penalty replan "
@@ -748,6 +895,7 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
             return
         event = runtime.end_batch()            # ordinary drift lane
         if event is not None:
+            slo.on_swap(runtime)
             print(f"  [swap @batch {event.batch}] {event.update.report} "
                   f"imbalance {event.old_imbalance:.3f} -> "
                   f"{event.new_imbalance:.3f}")
@@ -774,6 +922,9 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
           f"confinement {'OK' if st['confine_ok'] else 'VIOLATED'}, "
           f"recovery parity {st['recover_parity']}, "
           f"{executables} serve executable(s)")
+    print(f"slo lane: {slo.breaches} breach(es) over "
+          f"{slo.acc.batches} measured batch(es), "
+          f"{slo.penalties} replanner penalt(ies)")
     metrics.gauge("jax.serve_executables").set(executables)
     _finalize_obs(args, tracer, metrics, writer, latencies=mb.latencies)
     if args.min_recoveries > 0:
@@ -785,6 +936,7 @@ def _main_adaptive_fault(args, spec, cfg, mod) -> None:
                 f"(need >= {args.min_recoveries}), serve executables="
                 f"{executables} (need 1), confinement={st['confine_ok']}, "
                 f"recovery parity={st['recover_parity']}")
+    slo.check_contract(args.min_slo_breaches)
 
 
 def _main_adaptive_cached(args, spec, cfg, mod) -> None:
@@ -836,7 +988,11 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
         tracer=tracer, metrics=metrics)
 
     serve = jax.jit(build_recsys_serve_cached_adaptive(
-        mod, cfg, statics, backend=args.backend))
+        mod, cfg, statics, backend=args.backend, with_traffic=True))
+    row_nbytes = (params["emb_packed"].shape[-1]
+                  * np.dtype(params["emb_packed"].dtype).itemsize)
+    slo = _TrafficSLO(args, metrics, tracer, banks=banks, dim=cfg.embed_dim,
+                      row_nbytes=row_nbytes, runtime=runtime)
 
     def union_rect(feats):
         sp = np.asarray(feats["sparse"])                 # (B, F, L)
@@ -893,6 +1049,7 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
             rb = runtime.rewrite(union_rect(feats))      # host pipeline, v
         event = runtime.end_batch()                      # may swap to v+1
         if event is not None:
+            slo.on_swap(runtime)
             hits = int((rb.cache_idx >= 0).sum())
             print(f"  [swap @batch {event.batch}] {event.update.report} "
                   f"imbalance {event.old_imbalance:.3f} -> "
@@ -906,19 +1063,23 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
                 verify["table"] = runtime.cache_table    # the swapped-in one
         # the in-flight batch resolves against ITS version's cache table,
         # even when the swap above just retired it from "current"
+        t0 = time.perf_counter()
         with tracer.span("device_step", batch=state["n_batches"],
                          cache_version=rb.version):
             batch_c = {"dense": feats["dense"],
                        "cache_idx": jnp.asarray(rb.cache_idx),
                        "residual_idx": jnp.asarray(rb.residual_idx)}
             p = {**params, "emb_packed": runtime.table.packed}
-            scores = serve(p, runtime.table.remap_bank,
-                           runtime.table.remap_slot,
-                           runtime.cache_table_for(rb.version), batch_c)
+            scores, reads = serve(p, runtime.table.remap_bank,
+                                  runtime.table.remap_slot,
+                                  runtime.cache_table_for(rb.version), batch_c)
             jax.block_until_ready(scores)
+        wall_us = (time.perf_counter() - t0) * 1e6
         if state["warm_compiles"] is None:
             state["warm_compiles"] = probe.compiles      # post-first-compile
         mb.complete(reqs)
+        slo.after_step(state["n_batches"], reads, wall_us, args.batch,
+                       p99_ms=mb.p99() * 1e3)
         state["n_batches"] += 1
         if writer is not None:
             writer.maybe_write(state["n_batches"])
@@ -942,10 +1103,10 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
                    "cache_idx": jnp.asarray(rb.cache_idx),
                    "residual_idx": jnp.asarray(rb.residual_idx)}
         p = {**params, "emb_packed": runtime.table.packed}
-        swapped = serve(p, runtime.table.remap_bank, runtime.table.remap_slot,
-                        verify["table"], batch_c)
-        fresh = serve(p, runtime.table.remap_bank, runtime.table.remap_slot,
-                      verify["fresh_cache"], batch_c)
+        swapped, _ = serve(p, runtime.table.remap_bank,
+                           runtime.table.remap_slot, verify["table"], batch_c)
+        fresh, _ = serve(p, runtime.table.remap_bank, runtime.table.remap_slot,
+                         verify["fresh_cache"], batch_c)
         out_ok = bool((np.asarray(swapped) == np.asarray(fresh)).all())
 
     lat = sorted(mb.latencies)
@@ -972,6 +1133,7 @@ def _main_adaptive_cached(args, spec, cfg, mod) -> None:
                 f"(need >= {args.min_swaps}), serve executables="
                 f"{executables} (need 1), "
                 f"parity={verify.get('arrays_ok')}/{out_ok}")
+    slo.check_contract(args.min_slo_breaches)
 
 
 def _one(spec, cfg, rng, rid):

@@ -194,12 +194,27 @@ def main() -> None:
     t_begin = time.time()
     n_migrations = 0
     field_offs = np.asarray(statics["field_offsets"]) if replanner else None
+    traffic = None
+    bank_of_row = None
+    if replanner is not None:
+        # train-side bank-traffic attribution: the step is re-jitted on
+        # migration (remaps are closure constants here), so the recount runs
+        # host-side on the SAME rows telemetry observes — the numpy twin of
+        # the serve path's in-jit counters, landing in the same obs.bank_*
+        # series
+        from repro.obs.traffic import TrafficAccumulator, host_bank_read_counts
+        row_nbytes = (state.params["emb_packed"].shape[-1]
+                      * np.dtype(np.float32).itemsize)
+        traffic = TrafficAccumulator(reg, args.banks, row_nbytes=row_nbytes)
+        bank_of_row = np.asarray(statics["remap_bank"])  # restore-aware
     for step in range(start, args.steps):
         with tracer.span("rewrite", step=step):
             b = batch_fn(args.batch, args.seed, step)
             if replanner is not None:
-                replanner.observe_rows(
-                    rows_from_sparse(b["sparse"], field_offs))
+                rows = rows_from_sparse(b["sparse"], field_offs)
+                replanner.observe_rows(rows)
+                traffic.update(
+                    host_bank_read_counts(bank_of_row, rows, args.banks))
             b = {k: jnp.asarray(v) for k, v in b.items()}
         t0 = time.time()
         with tracer.span("device_step", step=step):
@@ -238,6 +253,7 @@ def main() -> None:
                         loss_kwargs=loss_kw))
                 n_migrations += 1
                 m_migrations.inc()
+                bank_of_row = update.plan.bank_of_row
                 print(f"  [migrate @step {step}] {update.report} "
                       f"imbalance -> {update.plan.imbalance():.3f}")
         if writer is not None:
@@ -252,6 +268,11 @@ def main() -> None:
         ck.save(args.steps, state)
         ck.join()
     extra = f"; migrations={n_migrations}" if replanner is not None else ""
+    if traffic is not None and traffic.batches:
+        reads = np.asarray(traffic.reads.values)
+        extra += (f"; bank traffic: {int(reads.sum())} reads, "
+                  f"max-bank share {reads.max() / max(reads.sum(), 1):.3f} "
+                  f"over {traffic.batches} batches")
     print(f"done in {time.time() - t_begin:.1f}s; stragglers={wd.events}"
           + extra)
     finalize_obs(args, tracer, reg, writer, prefix="train")
@@ -338,6 +359,15 @@ def _main_train_cached(args, spec, cfg, key) -> None:
     wd = StragglerWatchdog(metrics=reg)
     t_begin = time.time()
     n_migrations = n_refreshes = 0
+    # bank-traffic attribution on the fused train path: the numpy twin of
+    # the serve step's in-jit cache+residual counter, fed from the SAME
+    # rewritten bags the step consumes — one obs.bank_* accounting path
+    # across serve and train
+    from repro.obs.traffic import (TrafficAccumulator,
+                                   host_cached_bank_read_counts)
+    traffic = TrafficAccumulator(
+        reg, banks,
+        row_nbytes=int(params["emb_packed"].shape[-1]) * 4)
     for step in range(args.steps):
         with tracer.span("rewrite", step=step):
             b = batch_fn(args.batch, args.seed, step)
@@ -356,6 +386,10 @@ def _main_train_cached(args, spec, cfg, key) -> None:
                      "remap_bank": runtime.table.remap_bank,
                      "remap_slot": runtime.table.remap_slot,
                      "cache_table": runtime.cache_table_for(rb.version)}
+            traffic.update(host_cached_bank_read_counts(
+                np.asarray(batch["cache_table"].remap_bank), rb.cache_idx,
+                np.asarray(runtime.table.remap_bank), rb.residual_idx,
+                banks))
         t0 = time.time()
         with tracer.span("device_step", step=step):
             state, metrics = step_fn(state, batch)
@@ -403,8 +437,11 @@ def _main_train_cached(args, spec, cfg, key) -> None:
         if writer is not None:
             writer.maybe_write(step + 1)
     executables = step_fn._cache_size()
+    reads = np.asarray(traffic.reads.values)
     print(f"done in {time.time() - t_begin:.1f}s; stragglers={wd.events}; "
           f"migrations={n_migrations} refreshes={n_refreshes}; "
+          f"bank traffic: {int(reads.sum())} reads, max-bank share "
+          f"{reads.max() / max(reads.sum(), 1):.3f}; "
           f"{executables} step executable(s) "
           f"({'ZERO re-jits' if executables == 1 else 'RE-JITTED'})")
     reg.gauge("jax.step_executables").set(executables)

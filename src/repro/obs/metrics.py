@@ -113,6 +113,81 @@ class Gauge:
         return {"type": self.kind, "value": self._value}
 
 
+class _VectorMetric:
+    """Shared machinery for fixed-size per-index metrics (per-bank series).
+
+    One metric, ``size`` elements; the snapshot rides the element detail as
+    a list of ``[index, value]`` pairs — list elements collapse in the
+    key-path schema (the Histogram ``buckets`` precedent), so the schema is
+    stable for any ``size``. ``label`` names the index dimension for the
+    Prometheus exposition (``name{bank="3"}``).
+    """
+
+    kind = "vector"
+
+    def __init__(self, name: str, help: str = "", *, size: int,
+                 label: str = "bank"):
+        if size < 1:
+            raise ValueError(f"vector metric {name}: size must be >= 1")
+        self.name = name
+        self.help = help
+        self.size = int(size)
+        self.label = label
+        self._values = [0.0] * self.size
+        self._lock = threading.Lock()
+
+    def _coerce(self, values) -> list[float]:
+        values = [float(v) for v in values]
+        if len(values) != self.size:
+            raise ValueError(f"vector metric {self.name}: got {len(values)} "
+                             f"values for size {self.size}")
+        return values
+
+    @property
+    def values(self) -> list[float]:
+        return list(self._values)
+
+    @property
+    def total(self) -> float:
+        return sum(self._values)
+
+    def snapshot(self) -> dict:
+        return {"type": self.kind, "label": self.label,
+                "values": [[i, v] for i, v in enumerate(self._values)]}
+
+
+class VectorCounter(_VectorMetric):
+    """Monotone counts over a fixed index space (per-bank reads/bytes);
+    ``inc`` takes a full-length vector of non-negative deltas."""
+
+    kind = "vector_counter"
+
+    def inc(self, deltas) -> None:
+        deltas = self._coerce(deltas)
+        if any(d < 0 for d in deltas):
+            raise ValueError(f"counter {self.name}: negative increment")
+        with self._lock:
+            for i, d in enumerate(deltas):
+                self._values[i] += d
+
+
+class VectorGauge(_VectorMetric):
+    """Last-written vector (per-bank queue depth, live-copy counts...)."""
+
+    kind = "vector_gauge"
+
+    def set(self, values) -> None:
+        values = self._coerce(values)
+        with self._lock:
+            self._values = values
+
+    def inc(self, deltas) -> None:
+        deltas = self._coerce(deltas)
+        with self._lock:                 # gauges may go down
+            for i, d in enumerate(deltas):
+                self._values[i] += d
+
+
 class Histogram:
     """Fixed-bound log-bucket histogram.
 
@@ -236,6 +311,16 @@ class MetricRegistry:
     def histogram(self, name: str, help: str = "",
                   bounds: tuple[float, ...] = DEFAULT_BUCKETS) -> Histogram:
         return self._get_or_create(Histogram, name, help, bounds=bounds)
+
+    def vector_counter(self, name: str, help: str = "", *, size: int,
+                       label: str = "bank") -> VectorCounter:
+        return self._get_or_create(VectorCounter, name, help, size=size,
+                                   label=label)
+
+    def vector_gauge(self, name: str, help: str = "", *, size: int,
+                     label: str = "bank") -> VectorGauge:
+        return self._get_or_create(VectorGauge, name, help, size=size,
+                                   label=label)
 
     def get(self, name: str):
         return self._metrics[name]

@@ -3,20 +3,27 @@ writes, and the one-line machine-readable summary the CLIs print.
 
 Snapshot document shape (the thing CI's metrics-schema gate checks):
 
-    {"meta": {"label": ..., "schema": 1},
+    {"meta": {"label": ..., "schema": 2},
      "metrics": {"<name>": {"type": "counter", "value": ...}, ...}}
 
 Metric names are dotted; the Prometheus exposition sanitizes them to
-``[a-zA-Z0-9_]`` (dots -> underscores) per the text-format rules.
+``[a-zA-Z0-9_]`` (dots -> underscores) per the text-format rules. Vector
+metrics (per-bank series) export as LABELED Prometheus series
+(``obs_bank_reads{bank="3"} 17.0``) rather than name-mangled flat gauges.
+
+Schema history: 1 = counters/gauges/histograms only; 2 = added the
+``vector_counter``/``vector_gauge`` snapshot shape (``{type, label,
+values: [[index, value], ...]}``).
 """
 from __future__ import annotations
 
 import json
 import re
 
-from repro.obs.metrics import Counter, Gauge, Histogram, MetricRegistry
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricRegistry,
+                               VectorCounter, VectorGauge)
 
-SNAPSHOT_SCHEMA_VERSION = 1
+SNAPSHOT_SCHEMA_VERSION = 2
 _NAME_RE = re.compile(r"[^a-zA-Z0-9_]")
 
 
@@ -44,6 +51,14 @@ def prometheus_text(registry: MetricRegistry) -> str:
         pname = _NAME_RE.sub("_", name)
         if m.help:
             lines.append(f"# HELP {pname} {m.help}")
+        if isinstance(m, (VectorCounter, VectorGauge)):
+            # labeled series, not name-mangled flat gauges: Prometheus has
+            # no vector type, so the TYPE line reports the element kind
+            kind = "counter" if isinstance(m, VectorCounter) else "gauge"
+            lines.append(f"# TYPE {pname} {kind}")
+            for i, v in enumerate(m.values):
+                lines.append(f'{pname}{{{m.label}="{i}"}} {v!r}')
+            continue
         lines.append(f"# TYPE {pname} {m.kind}")
         if isinstance(m, (Counter, Gauge)):
             lines.append(f"{pname} {m.value!r}")
@@ -69,6 +84,11 @@ def summary_dict(registry: MetricRegistry) -> dict:
         if isinstance(m, Histogram):
             out[name] = {"count": m.count, "mean": m.mean,
                          "p50": m.quantile(0.50), "p99": m.quantile(0.99)}
+        elif isinstance(m, (VectorCounter, VectorGauge)):
+            vals = m.values
+            out[name] = {"sum": sum(vals), "max": max(vals),
+                         "argmax": int(max(range(len(vals)),
+                                           key=vals.__getitem__))}
         else:
             out[name] = m.value
     return out

@@ -2,7 +2,9 @@
 
 The output is the Trace Event Format's JSON-object form
 (``{"traceEvents": [...], ...}``): complete ('X') events for spans, instant
-('i') events for point marks, plus 'M' metadata events naming the process
+('i') events for point marks, counter ('C') events for gauge time-series
+(per-bank traffic lanes, rolling p99 — Perfetto draws each ``args`` key as
+one series in a counter track), plus 'M' metadata events naming the process
 and threads. Load it in Perfetto (ui.perfetto.dev -> Open trace file) or
 ``chrome://tracing`` as-is.
 """
@@ -21,7 +23,8 @@ def chrome_trace_events(tracer: Tracer, *, pid: int | None = None,
         import os
         pid = os.getpid()
     tids = sorted({r.tid for r in tracer.records}
-                  | {r.tid for r in tracer.instants})
+                  | {r.tid for r in tracer.instants}
+                  | {r.tid for r in tracer.counters})
     events: list[dict] = [{
         "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
         "args": {"name": process_name},
@@ -38,6 +41,10 @@ def chrome_trace_events(tracer: Tracer, *, pid: int | None = None,
         events.append({"name": r.name, "cat": "host", "ph": "i",
                        "ts": r.ts_us, "s": "t",
                        "pid": pid, "tid": r.tid, "args": r.args})
+    for r in sorted(tracer.counters, key=lambda r: r.ts_us):
+        events.append({"name": r.name, "cat": "counter", "ph": "C",
+                       "ts": r.ts_us,
+                       "pid": pid, "tid": r.tid, "args": r.values})
     return events
 
 

@@ -53,11 +53,24 @@ class InstantRecord:
     args: dict
 
 
+@dataclasses.dataclass
+class CounterRecord:
+    """A gauge sample (Chrome trace 'C' event) — per-bank traffic, rolling
+    p99. Perfetto renders each ``values`` key as one series in a counter
+    track named ``name``, so a time-series of these becomes a load lane."""
+
+    name: str
+    ts_us: float
+    tid: int
+    values: dict
+
+
 class Tracer:
     def __init__(self, enabled: bool = True):
         self.enabled = enabled
         self.records: list[SpanRecord] = []
         self.instants: list[InstantRecord] = []
+        self.counters: list[CounterRecord] = []
         self._epoch = time.perf_counter()
         self._local = threading.local()
         self._lock = threading.Lock()
@@ -100,6 +113,18 @@ class Tracer:
                             tid=threading.get_ident(), args=dict(args))
         with self._lock:
             self.instants.append(rec)
+
+    def counter(self, name: str, **values) -> None:
+        """Sample a gauge time-series (Chrome 'C' event): one call per
+        batch per track; each keyword becomes a series in the track."""
+        if not self.enabled:
+            return
+        rec = CounterRecord(name=name,
+                            ts_us=(time.perf_counter() - self._epoch) * 1e6,
+                            tid=threading.get_ident(),
+                            values={k: float(v) for k, v in values.items()})
+        with self._lock:
+            self.counters.append(rec)
 
     # -- inspection helpers (tests, summaries) -------------------------------
 

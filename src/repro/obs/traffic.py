@@ -1,0 +1,263 @@
+"""Measured per-bank traffic: exact read/byte counters from the jit'd step.
+
+Every bank-load number the repo reported before this module was *modeled* —
+derived from plans and telemetry. But replica hash routing, cache hits,
+degraded reads, and tier byte-widths all bend the traffic a batch actually
+generates away from the plan-time projection. These functions compute the
+ground truth ON DEVICE, inside the jit'd serve/train step, from the same
+remap/tier/replica/bank_live arguments the step already carries — the
+``degraded_row_counts`` pattern: pure jnp on jit ARGUMENTS, so the counters
+add zero executables and survive live swaps without a recompile.
+
+One device function per lookup path (plain banked, CSR, fused
+cache+residual, tiered, replicated), each with a numpy twin
+(``host_*``) that the tests bit-match against and the train loop uses for
+its host-side recount. The twins reimplement the kernel's routing decisions
+exactly: the replicated twin carries its own uint32 wang-hash so the copy
+pick matches ``kernels.embedding_bag.replica_of_bag`` bit-for-bit, and the
+failover accounting reproduces ``embedding._replica_failover_maps`` (a dead
+chosen copy reads the row's FIRST live column; a row with no live copy
+reads NO bank).
+
+Counts are reads, not bags: every valid (row >= 0) entry of the batch is
+one read on its row's bank, duplicates count separately — the same unit
+``hwmodel.embedding_stage_latency`` prices. ``BankTraffic.nbytes`` weights
+each read by its row's stored width (uniform ``dim * itemsize`` everywhere
+except the tiered path, where the per-row tier code indexes a 3-entry byte
+LUT).
+
+This module imports jax (device side) and is deliberately NOT re-exported
+by ``repro.obs`` — the obs package root stays stdlib-only for the jax-free
+producers. Import it directly: ``from repro.obs.traffic import ...``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.embedding_bag import replica_of_bag
+
+
+class BankTraffic(NamedTuple):
+    """Per-bank measured traffic for one batch: ``(n_banks,)`` int32 each."""
+
+    reads: jnp.ndarray
+    nbytes: jnp.ndarray
+
+
+def traffic_from_reads(reads, row_nbytes: int) -> BankTraffic:
+    """Uniform-width paths: every read moves the same ``row_nbytes``."""
+    return BankTraffic(reads=reads,
+                       nbytes=reads * jnp.int32(row_nbytes))
+
+
+# ---------------------------------------------------------------------------
+# device-side counters (pure jnp on jit arguments — call INSIDE the jit)
+# ---------------------------------------------------------------------------
+
+def bank_read_counts(remap_bank, rows, n_banks: int, *, bank_live=None):
+    """Per-bank read counts for a batch of row ids (any shape, -1 padded).
+
+    The plain-banked / CSR / residual-stream counter: each valid entry is
+    one read on ``remap_bank[row]``. Under ``bank_live`` a dead bank's
+    reads are excluded — they zero-fill instead of moving bytes, exactly
+    what ``degraded_row_counts`` counts from the other side.
+    """
+    rows = rows.reshape(-1)
+    valid = rows >= 0
+    safe = jnp.where(valid, rows, 0)
+    bank = remap_bank[safe]
+    if bank_live is not None:
+        valid = valid & bank_live[bank]
+    return (jnp.zeros(n_banks, jnp.int32)
+            .at[bank].add(valid.astype(jnp.int32)))
+
+
+def cached_bank_read_counts(entry_bank, cache_idx, remap_bank, residual_idx,
+                            n_banks: int, *, bank_live=None):
+    """Fused cache+residual path: a cache hit is ONE read on the entry's
+    bank (``entry_bank[cache_idx]``), residual rows read their own banks.
+    Both streams honor ``bank_live``."""
+    hits = bank_read_counts(entry_bank, cache_idx, n_banks,
+                            bank_live=bank_live)
+    residual = bank_read_counts(remap_bank, residual_idx, n_banks,
+                                bank_live=bank_live)
+    return hits + residual
+
+
+def tiered_bank_traffic(remap_bank, remap_slot, rows_per_bank: int, tier,
+                        byte_lut, rows, n_banks: int) -> BankTraffic:
+    """Tiered path: reads as the plain counter, bytes weighted by the row's
+    tier width. ``tier`` is the packed-position tier code vector the
+    TieredTable carries as a jit argument; ``byte_lut`` is the 3-entry
+    bytes-per-tier table (``quant.tier_nbytes`` — static per table config).
+    """
+    flat = rows.reshape(-1)
+    valid = flat >= 0
+    safe = jnp.where(valid, flat, 0)
+    bank = remap_bank[safe]
+    pos = bank * rows_per_bank + remap_slot[safe]
+    width = jnp.asarray(byte_lut, jnp.int32)[tier[pos]]
+    reads = (jnp.zeros(n_banks, jnp.int32)
+             .at[bank].add(valid.astype(jnp.int32)))
+    nbytes = (jnp.zeros(n_banks, jnp.int32)
+              .at[bank].add(jnp.where(valid, width, 0)))
+    return BankTraffic(reads=reads, nbytes=nbytes)
+
+
+def replicated_bank_read_counts(remap_bank, rows, n_banks: int, *,
+                                k_max: int, bank_live=None):
+    """Replicated path: bag ``n`` of the flattened batch reads copy
+    ``wang_hash(n) % k_max`` — the kernel's replica pick. Under
+    ``bank_live`` the failover maps' semantics are reproduced exactly: a
+    dead chosen copy reads the row's FIRST live column instead, and a row
+    with no live copy reads no bank at all (it zero-fills).
+
+    ``rows``: ``(..., L)`` row ids, -1 padded; leading dims flatten to the
+    kernel's per-call bag id (restarting at 0 every batch, like
+    ``_replica_cols``). ``remap_bank``: the ``(V, k_max)`` copy->bank map.
+    """
+    flat = rows.reshape(-1, rows.shape[-1])
+    n_bags, bag_len = flat.shape
+    cols = replica_of_bag(jnp.arange(n_bags, dtype=jnp.int32), k_max)
+    valid = flat >= 0
+    safe = jnp.where(valid, flat, 0)
+    banks_rc = remap_bank[safe]                              # (B, L, k)
+    col_idx = jnp.broadcast_to(cols[:, None, None], (n_bags, bag_len, 1))
+    chosen = jnp.take_along_axis(banks_rc, col_idx, axis=2)[..., 0]
+    if bank_live is None:
+        bank = chosen
+    else:
+        live_rc = bank_live[banks_rc]                        # (B, L, k)
+        any_live = live_rc.any(axis=-1)
+        first_live = jnp.argmax(live_rc, axis=-1)
+        chosen_live = jnp.take_along_axis(live_rc, col_idx, axis=2)[..., 0]
+        eff_col = jnp.where(chosen_live, cols[:, None], first_live)
+        bank = jnp.take_along_axis(banks_rc, eff_col[..., None],
+                                   axis=2)[..., 0]
+        valid = valid & any_live
+    return (jnp.zeros(n_banks, jnp.int32)
+            .at[bank].add(valid.astype(jnp.int32)))
+
+
+# ---------------------------------------------------------------------------
+# host-side twins (numpy) — the recount the device counters must bit-match
+# ---------------------------------------------------------------------------
+
+def host_bank_read_counts(bank_of_row, rows, n_banks: int,
+                          *, bank_live=None) -> np.ndarray:
+    rows = np.asarray(rows).reshape(-1)
+    rows = rows[rows >= 0]
+    bank = np.asarray(bank_of_row)[rows]
+    if bank_live is not None:
+        bank = bank[np.asarray(bank_live)[bank]]
+    return np.bincount(bank, minlength=n_banks).astype(np.int64)
+
+
+def host_cached_bank_read_counts(entry_bank, cache_idx, bank_of_row,
+                                 residual_idx, n_banks: int,
+                                 *, bank_live=None) -> np.ndarray:
+    return (host_bank_read_counts(entry_bank, cache_idx, n_banks,
+                                  bank_live=bank_live)
+            + host_bank_read_counts(bank_of_row, residual_idx, n_banks,
+                                    bank_live=bank_live))
+
+
+def host_tiered_bank_traffic(bank_of_row, slot_of_row, rows_per_bank: int,
+                             tier, byte_lut, rows,
+                             n_banks: int) -> tuple[np.ndarray, np.ndarray]:
+    rows = np.asarray(rows).reshape(-1)
+    rows = rows[rows >= 0]
+    bank = np.asarray(bank_of_row)[rows]
+    pos = bank * rows_per_bank + np.asarray(slot_of_row)[rows]
+    width = np.asarray(byte_lut, np.int64)[np.asarray(tier)[pos]]
+    reads = np.bincount(bank, minlength=n_banks).astype(np.int64)
+    nbytes = np.bincount(bank, weights=width,
+                         minlength=n_banks).astype(np.int64)
+    return reads, nbytes
+
+
+def _wang_hash_np(x: np.ndarray) -> np.ndarray:
+    """uint32 wang hash, bit-for-bit the kernel's ``wang_hash``."""
+    x = np.asarray(x).astype(np.uint32)
+    x = (x ^ np.uint32(61)) ^ (x >> np.uint32(16))
+    x = (x * np.uint32(9)).astype(np.uint32)
+    x = x ^ (x >> np.uint32(4))
+    x = (x * np.uint32(0x27D4EB2D)).astype(np.uint32)
+    x = x ^ (x >> np.uint32(15))
+    return x
+
+
+def host_replica_cols(n_bags: int, k_max: int) -> np.ndarray:
+    """numpy twin of ``replica_of_bag(arange(n_bags), k_max)``."""
+    return (_wang_hash_np(np.arange(n_bags))
+            % np.uint32(k_max)).astype(np.int32)
+
+
+def host_replicated_bank_read_counts(bank_of_copy, rows, n_banks: int, *,
+                                     k_max: int, bank_live=None) -> np.ndarray:
+    rows = np.asarray(rows)
+    flat = rows.reshape(-1, rows.shape[-1])
+    cols = host_replica_cols(flat.shape[0], k_max)
+    bank_of_copy = np.asarray(bank_of_copy)
+    counts = np.zeros(n_banks, np.int64)
+    live = None if bank_live is None else np.asarray(bank_live)
+    for n, bag in enumerate(flat):
+        bag = bag[bag >= 0]
+        if bag.size == 0:
+            continue
+        banks_rc = bank_of_copy[bag]                         # (L, k)
+        chosen = banks_rc[:, cols[n]]
+        if live is None:
+            np.add.at(counts, chosen, 1)
+            continue
+        live_rc = live[banks_rc]
+        any_live = live_rc.any(axis=1)
+        first_live = np.argmax(live_rc, axis=1)
+        eff = np.where(live_rc[:, cols[n]], cols[n], first_live)
+        bank = banks_rc[np.arange(len(bag)), eff]
+        np.add.at(counts, bank[any_live], 1)
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# host-side aggregation into the metrics registry
+# ---------------------------------------------------------------------------
+
+class TrafficAccumulator:
+    """Folds per-batch measured counts into the registry's per-bank series.
+
+    Pre-registers the full ``obs.bank_*`` family up front (the CI
+    metrics-schema gate keys on them): ``obs.bank_reads`` /
+    ``obs.bank_bytes`` vector counters sized ``n_banks``, and
+    ``obs.bank_share`` — a histogram of each batch's max-bank read share
+    (1/n_banks is perfect balance).
+    """
+
+    def __init__(self, metrics, n_banks: int, *, row_nbytes: int = 0):
+        self.n_banks = int(n_banks)
+        self.row_nbytes = int(row_nbytes)
+        self.reads = metrics.vector_counter(
+            "obs.bank_reads", "measured row reads per bank (device counters)",
+            size=self.n_banks)
+        self.nbytes = metrics.vector_counter(
+            "obs.bank_bytes", "measured bytes moved per bank",
+            size=self.n_banks)
+        self.share = metrics.histogram(
+            "obs.bank_share", "per-batch max-bank share of measured reads")
+        self.batches = 0
+
+    def update(self, reads, nbytes=None) -> float:
+        """Fold one batch's counts; returns its max-bank read share."""
+        reads = np.asarray(reads, np.float64)
+        if nbytes is None:
+            nbytes = reads * self.row_nbytes
+        self.reads.inc(reads)
+        self.nbytes.inc(np.asarray(nbytes, np.float64))
+        total = reads.sum()
+        share = float(reads.max() / total) if total else 1.0 / self.n_banks
+        self.share.observe(share)
+        self.batches += 1
+        return share

@@ -45,7 +45,8 @@ def build_recsys_serve_cached(family_mod, cfg, statics, cache_table,
 
 
 def build_recsys_serve_cached_adaptive(family_mod, cfg, statics, dist=None,
-                                       backend: str | None = None):
+                                       backend: str | None = None,
+                                       with_traffic: bool = False):
     """Cache-aware CTR scoring under the ADAPTIVE runtime: everything a live
     swap replaces — the EMT remap vectors AND the GRACE cache table — enters
     as an argument of the returned ``serve(params, remap_bank, remap_slot,
@@ -53,6 +54,12 @@ def build_recsys_serve_cached_adaptive(family_mod, cfg, statics, dist=None,
     pinned (fixed ``rows_per_bank`` on the EMT, fixed ``cache_rows_per_bank``
     on the cache side), so one jit compilation serves every plan version:
     a swap is a pure argument change.
+
+    ``with_traffic=True`` (a BUILD-time flag, not a jit argument) appends a
+    measured per-bank read-count vector to the step's outputs:
+    ``(scores, bank_reads)``. The counts are pure jnp over the same
+    remap/cache arguments the lookup consumes (obs/traffic.py), so the
+    traffic-instrumented step still compiles ONE executable across swaps.
     """
     kw = {} if backend is None else {"backend": backend}
 
@@ -60,12 +67,19 @@ def build_recsys_serve_cached_adaptive(family_mod, cfg, statics, dist=None,
         logits = family_mod.forward_cached(
             cfg, params, statics, cache_table, batch, dist,
             remap_bank=remap_bank, remap_slot=remap_slot, **kw)
+        if with_traffic:
+            from repro.obs.traffic import cached_bank_read_counts
+            reads = cached_bank_read_counts(
+                cache_table.remap_bank, batch["cache_idx"],
+                remap_bank, batch["residual_idx"], cache_table.n_banks)
+            return jax.nn.sigmoid(logits), reads
         return jax.nn.sigmoid(logits)
     return serve
 
 
 def build_recsys_serve_degraded_adaptive(family_mod, cfg, statics, dist=None,
-                                         backend: str | None = None):
+                                         backend: str | None = None,
+                                         with_traffic: bool = False):
     """CTR scoring that stays up through bank failures: the returned
     ``serve(params, remap_bank, remap_slot, bank_live, batch)`` takes the
     per-bank liveness mask as ONE MORE swap-style argument next to the remap
@@ -75,6 +89,12 @@ def build_recsys_serve_degraded_adaptive(family_mod, cfg, statics, dist=None,
     many row contributions it is missing (0 = bit-exact). All-live serving
     through this step is bit-identical to the non-degraded step — the fault
     lane compiles ONE executable and flips the mask argument.
+
+    ``with_traffic=True`` (build-time flag) appends the measured per-bank
+    read counts: ``(scores, degraded_counts, bank_reads)``. Reads resolved
+    to the zero row on a dead bank are NOT counted as bank traffic (the bank
+    never served them) — ``bank_reads.sum() + degraded_counts.sum()`` equals
+    the batch's valid lookups.
     """
     from repro.core.embedding import degraded_row_counts
     kw = {} if backend is None else {"backend": backend}
@@ -88,12 +108,18 @@ def build_recsys_serve_degraded_adaptive(family_mod, cfg, statics, dist=None,
         offs = offs[None, :] if sparse.ndim == 2 else offs[None, :, None]
         rows = jnp.where(sparse >= 0, sparse + offs, -1)
         counts = degraded_row_counts(remap_bank, bank_live, rows)
+        if with_traffic:
+            from repro.obs.traffic import bank_read_counts
+            reads = bank_read_counts(remap_bank, rows, bank_live.shape[0],
+                                     bank_live=bank_live)
+            return jax.nn.sigmoid(logits), counts, reads
         return jax.nn.sigmoid(logits), counts
     return serve
 
 
 def build_recsys_serve_tiered_adaptive(family_mod, cfg, statics, dist=None,
-                                       backend: str | None = None):
+                                       backend: str | None = None,
+                                       with_traffic: bool = False):
     """CTR scoring over TIERED-precision embeddings under the adaptive
     runtime: the whole TieredTable pytree — quantized payload, per-row
     scales, tier map, AND the remap vectors — enters as an argument of the
@@ -101,19 +127,37 @@ def build_recsys_serve_tiered_adaptive(family_mod, cfg, statics, dist=None,
     depend only on (capacity, dim, hot dtype), never on the tier mix, so a
     live re-tier swap (hot rows promoted, cold rows demoted on drift) is a
     pure argument change against one compiled executable.
+
+    ``with_traffic=True`` (build-time flag) appends measured per-bank reads
+    AND bytes: ``(scores, bank_reads, bank_nbytes)``. Bytes weight each read
+    by its row's CURRENT tier width (the tier map rides in the ``tiered``
+    argument), so a re-tier swap shows up in the byte series immediately.
     """
     kw = {} if backend is None else {"backend": backend}
 
     def serve(params, tiered, batch):
         logits = family_mod.forward(cfg, params, statics, batch, dist,
                                     tiered=tiered, **kw)
+        if with_traffic:
+            from repro.obs.traffic import tiered_bank_traffic
+            from repro.quant import tier_nbytes
+            sparse = batch["sparse"]
+            offs = statics["field_offsets"]
+            offs = offs[None, :] if sparse.ndim == 2 else offs[None, :, None]
+            rows = jnp.where(sparse >= 0, sparse + offs, -1)
+            traffic = tiered_bank_traffic(
+                tiered.remap_bank, tiered.remap_slot, tiered.rows_per_bank,
+                tiered.tier, tier_nbytes(tiered.dim, tiered.hot_dtype),
+                rows, tiered.n_banks)
+            return jax.nn.sigmoid(logits), traffic.reads, traffic.nbytes
         return jax.nn.sigmoid(logits)
     return serve
 
 
 def build_recsys_serve_replicated_adaptive(family_mod, cfg, statics,
                                            dist=None,
-                                           backend: str | None = None):
+                                           backend: str | None = None,
+                                           with_traffic: bool = False):
     """CTR scoring over HOT-ROW-REPLICATED embeddings under the adaptive
     runtime: the whole ReplicatedTable pytree — the packed copies plus the
     ``(vocab, k_max)`` replica-axis remap — enters as an argument of the
@@ -125,6 +169,12 @@ def build_recsys_serve_replicated_adaptive(family_mod, cfg, statics,
     fault lane in: a surviving copy covers a dead bank's head reads
     instantly, and the step returns ``(scores, degraded_read_count)`` where
     a read only counts degraded when EVERY copy of the row is dead.
+
+    ``with_traffic=True`` (build-time flag) appends the measured per-bank
+    reads — ``(scores, degraded_counts, bank_reads)`` — attributed to the
+    copy each bag ACTUALLY reads (the same deterministic bag-hash routing
+    and dead-copy failover the kernel applies), so replication's load split
+    and a failover's traffic shift are both visible in the series.
     """
     from repro.core.embedding import degraded_row_counts
     kw = {} if backend is None else {"backend": backend}
@@ -138,6 +188,12 @@ def build_recsys_serve_replicated_adaptive(family_mod, cfg, statics,
         offs = offs[None, :] if sparse.ndim == 2 else offs[None, :, None]
         rows = jnp.where(sparse >= 0, sparse + offs, -1)
         counts = degraded_row_counts(replicated.remap_bank, bank_live, rows)
+        if with_traffic:
+            from repro.obs.traffic import replicated_bank_read_counts
+            reads = replicated_bank_read_counts(
+                replicated.remap_bank, rows, bank_live.shape[0],
+                k_max=replicated.k_max, bank_live=bank_live)
+            return jax.nn.sigmoid(logits), counts, reads
         return jax.nn.sigmoid(logits), counts
     return serve
 

@@ -187,6 +187,8 @@ class Replanner:
         self._m_hit_rate = m.gauge("replanner.realized_hit_rate",
                                    "realized/predicted cache saved-reads")
         self._m_hit_rate.set(1.0)
+        self._m_slo_pen = m.counter("replanner.slo_penalties_total",
+                                    "SLO-watchdog bank penalties received")
         # fault-tolerance state (all-healthy defaults are exactly the legacy
         # planner: no per-bank caps, unit costs — bit-identical plans)
         self.bank_live = np.ones(cfg.n_banks, dtype=bool)
@@ -196,6 +198,9 @@ class Replanner:
         self._pred_saved_per_bag: float | None = None
         self._realized_saved = 0.0
         self._realized_bags = 0
+        # SLO feedback: an armed early check makes the NEXT end_batch run
+        # the drift detector off-cadence (set by apply_slo_penalty)
+        self._early_check = False
 
     # -- fault state ---------------------------------------------------------
 
@@ -220,6 +225,19 @@ class Replanner:
         if (pen <= 0).any():
             raise ValueError("bank penalties must be positive multipliers")
         self.bank_penalty = pen.copy()
+
+    def apply_slo_penalty(self, penalty: np.ndarray) -> None:
+        """SLO-watchdog feedback (obs/slo.py): the MEASURED per-bank traffic
+        breached a latency/share objective, so fold the hot bank's observed
+        overload into the planner's ``bank_cost`` model (same mechanism as
+        the straggler penalty — an overloaded bank accounts each accepted
+        row at penalty x its frequency and sheds load on the next plan) and
+        arm an early off-cadence drift check so the loop closes without
+        waiting out ``check_every``. Measure -> plan feedback edge
+        (ARCHITECTURE.md)."""
+        self.set_bank_penalty(penalty)
+        self._m_slo_pen.inc()
+        self._early_check = True
 
     # -- feeding ------------------------------------------------------------
 
@@ -444,8 +462,10 @@ class Replanner:
         ``n_skipped_replans``; the detector is NOT rebased on a skip, so a
         later check that the incumbent really does lose still trips)."""
         self._batches += 1
-        if self._batches % self.cfg.check_every != 0:
+        early = self._early_check
+        if not early and self._batches % self.cfg.check_every != 0:
             return None
+        self._early_check = False
         report = self.detector.check(self.telemetry)
         self.last_report = report
         self._m_checks.inc()

@@ -384,6 +384,17 @@ class AdaptiveEmbeddingRuntime:
         update = self.replanner.force_replan()
         return self.apply(update, reason="straggler")
 
+    def on_slo_breach(self, penalty: np.ndarray) -> None:
+        """SLO-watchdog lane (obs/slo.py): the MEASURED per-bank traffic
+        breached an objective. Unlike ``on_straggler`` this does NOT migrate
+        immediately — it folds the hot-bank penalty into the planner's
+        bank-cost model and arms an early drift check, so the next check
+        replans under the measured costs only if the detector agrees the
+        traffic actually moved. A breach caused by a transient spike costs
+        one extra drift check, not a migration."""
+        self.tracer.instant("slo_penalty", batch=self._batch)
+        self.replanner.apply_slo_penalty(penalty)
+
     # -- tiered-precision lane accessors ------------------------------------
 
     @property

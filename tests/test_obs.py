@@ -359,7 +359,7 @@ class TestRegistry:
         assert w.n_writes == 3
         with open(path) as fh:
             doc = json.load(fh)
-        assert doc["meta"] == {"label": "t", "schema": 1}
+        assert doc["meta"] == {"label": "t", "schema": 2}
         assert not os.path.exists(path + ".tmp")
 
     def test_periodic_writer_disabled_cadence(self, tmp_path):

@@ -1,0 +1,422 @@
+"""Tier-1 tests for measured bank-traffic attribution (repro.obs.traffic)
+and the SLO watchdog (repro.obs.slo).
+
+What is pinned here and why it matters:
+
+* Device counters bit-match the host twins on ALL FIVE lookup paths (plain
+  banked, replicated, tiered, fused cache+residual, CSR), on both the jnp
+  scan and the pallas-interpret kernel — the counters claim to be ground
+  truth for traffic the cost model only projects, so an off-by-one in the
+  routing reimplementation (replica hash, failover column, tier byte LUT)
+  would silently corrupt every measured series and SLO verdict downstream.
+* Replication actually splits a hot row's reads ~1/k across its copy banks,
+  and dead banks count ZERO reads (they never served them) on both the
+  plain and the failover-routed replicated path.
+* The counter-instrumented step compiles ONE executable across live swaps —
+  the counters are pure jnp on jit arguments, same zero-recompile contract
+  as the lookups themselves.
+* SLO window/breach/cooldown arithmetic is deterministic, so CI contracts
+  can count breaches exactly; a fired breach delivers the hot-bank penalty
+  shape the Replanner expects and arms its off-cadence early drift check
+  (the measure -> plan feedback edge).
+* Vector metrics keep a stable snapshot key-path schema and export as
+  labeled Prometheus series.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding import (
+    BankedTable,
+    banked_cache_residual_bag,
+    banked_embedding_bag,
+    csr_embedding_bag,
+    pack_replicated,
+    pack_table,
+    replicated_embedding_bag,
+    tiered_embedding_bag,
+)
+from repro.core.partitioning import (choose_replication, non_uniform_partition,
+                                     replicated_partition)
+from repro.obs import MetricRegistry, prometheus_text, snapshot_doc
+from repro.obs.slo import CHECKS, SLOConfig, SLOWatchdog, hot_bank_penalty
+from repro.obs.traffic import (
+    TrafficAccumulator,
+    bank_read_counts,
+    host_bank_read_counts,
+    host_cached_bank_read_counts,
+    host_replicated_bank_read_counts,
+    host_tiered_bank_traffic,
+)
+
+V, D, BANKS = 256, 8, 4
+
+# both stage-2 implementations must report identical counts: the counters
+# ride OUTSIDE the lookup kernel, on the same jit arguments
+BACKENDS = [("jnp", None), ("pallas", True)]
+
+
+def _freq(seed=0):
+    rng = np.random.default_rng(seed)
+    f = rng.zipf(1.3, size=V * 4) - 1
+    freq = np.bincount(f[f < V], minlength=V).astype(np.float64)
+    return freq + 1e-3
+
+
+def _setup(seed=0):
+    cap = int(np.ceil(V / BANKS) * 1.25)
+    plan = non_uniform_partition(_freq(seed), BANKS, capacity_rows=cap)
+    rng = np.random.default_rng(seed + 1)
+    table = (rng.standard_normal((V, D)) * 0.01).astype(np.float32)
+    return plan, pack_table(table, plan), table
+
+
+def _bags(seed=0, n=16, length=6):
+    rng = np.random.default_rng(seed + 2)
+    idx = rng.integers(0, V, size=(n, length)).astype(np.int32)
+    idx[rng.random((n, length)) < 0.25] = -1       # ragged padding
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# device counters bit-match the host twins (all five paths)
+# ---------------------------------------------------------------------------
+
+class TestDeviceCounters:
+    @pytest.mark.parametrize("backend,interpret", BACKENDS)
+    def test_banked_bit_match(self, backend, interpret):
+        plan, bt, _ = _setup()
+        idx = _bags()
+        out, tr = banked_embedding_bag(bt, jnp.asarray(idx), None,
+                                       backend=backend, interpret=interpret,
+                                       with_traffic=True)
+        host = host_bank_read_counts(plan.bank_of_row, idx, BANKS)
+        assert np.array_equal(np.asarray(tr.reads), host)
+        assert int(np.asarray(tr.reads).sum()) == int((idx >= 0).sum())
+        assert np.array_equal(np.asarray(tr.nbytes),
+                              np.asarray(tr.reads) * D * 4)
+        # the lookup itself is unchanged by the instrumentation
+        base = banked_embedding_bag(bt, jnp.asarray(idx), None,
+                                    backend=backend, interpret=interpret)
+        assert np.array_equal(np.asarray(out), np.asarray(base))
+
+    def test_banked_dead_bank_counts_zero(self):
+        plan, bt, _ = _setup()
+        idx = _bags()
+        live = np.ones(BANKS, bool)
+        dead = int(plan.bank_of_row[idx[idx >= 0][0]])
+        live[dead] = False
+        _, tr = banked_embedding_bag(bt, jnp.asarray(idx), None,
+                                     backend="jnp",
+                                     bank_live=jnp.asarray(live),
+                                     with_traffic=True)
+        reads = np.asarray(tr.reads)
+        assert reads[dead] == 0
+        assert np.array_equal(
+            reads, host_bank_read_counts(plan.bank_of_row, idx, BANKS,
+                                         bank_live=live))
+
+    @pytest.mark.parametrize("backend,interpret", BACKENDS)
+    def test_cached_bit_match(self, backend, interpret):
+        plan, bt, _ = _setup()
+        E = 16
+        cplan = non_uniform_partition(np.ones(E), BANKS, capacity_rows=8)
+        rng = np.random.default_rng(9)
+        cache = pack_table(
+            (rng.standard_normal((E, D)) * 0.01).astype(np.float32), cplan)
+        cache_idx = rng.integers(-1, E, size=(8, 3)).astype(np.int32)
+        residual_idx = rng.integers(-1, V, size=(8, 5)).astype(np.int32)
+        _, tr = banked_cache_residual_bag(
+            bt, cache, jnp.asarray(cache_idx), jnp.asarray(residual_idx),
+            None, backend=backend, interpret=interpret, with_traffic=True)
+        host = host_cached_bank_read_counts(
+            cplan.bank_of_row, cache_idx, plan.bank_of_row, residual_idx,
+            BANKS)
+        assert np.array_equal(np.asarray(tr.reads), host)
+        # a cache hit is ONE read: totals = valid hits + valid residuals
+        assert int(host.sum()) == int((cache_idx >= 0).sum()
+                                      + (residual_idx >= 0).sum())
+
+    @pytest.mark.parametrize("backend,interpret", BACKENDS)
+    def test_tiered_bit_match(self, backend, interpret):
+        from repro.quant import QuantSpec, assign_tiers, build_tiered_table, \
+            tier_nbytes
+        plan, bt, _ = _setup()
+        tiers = assign_tiers(_freq(), QuantSpec(byte_budget=6.0,
+                                                min_hot_rows=4),
+                             D).tier_of_row
+        assert len(set(tiers.tolist())) >= 2       # a real mix, not all-hot
+        tt = build_tiered_table(bt, tiers)
+        idx = _bags()
+        _, tr = tiered_embedding_bag(bt.packed, tt, jnp.asarray(idx), None,
+                                     backend=backend, interpret=interpret,
+                                     with_traffic=True)
+        lut = tier_nbytes(D, tt.hot_dtype)
+        reads, nbytes = host_tiered_bank_traffic(
+            plan.bank_of_row, plan.slot_of_row, tt.rows_per_bank,
+            np.asarray(tt.tier), lut, idx, BANKS)
+        assert np.array_equal(np.asarray(tr.reads), reads)
+        assert np.array_equal(np.asarray(tr.nbytes), nbytes)
+        # tier widths differ, so bytes must NOT be a uniform multiple of
+        # reads (that would mean the tier LUT was ignored)
+        with_reads = reads > 0
+        ratios = nbytes[with_reads] / reads[with_reads]
+        assert len(set(np.round(ratios, 6).tolist())) >= 1
+
+    @pytest.mark.parametrize("backend,interpret", BACKENDS)
+    def test_csr_bit_match(self, backend, interpret):
+        plan, bt, _ = _setup()
+        rng = np.random.default_rng(5)
+        lens = rng.integers(1, 7, size=16)   # multiple of tile_b=8 (pallas)
+        indices = rng.integers(0, V, size=int(lens.sum())).astype(np.int32)
+        # offsets carry the START of each bag (length num_bags); the stream
+        # end is implied by indices.shape
+        offsets = np.zeros(len(lens), np.int32)
+        offsets[1:] = np.cumsum(lens)[:-1]
+        _, tr = csr_embedding_bag(bt, jnp.asarray(indices),
+                                  jnp.asarray(offsets), len(lens), None,
+                                  backend=backend, interpret=interpret,
+                                  with_traffic=True)
+        host = host_bank_read_counts(plan.bank_of_row, indices, BANKS)
+        assert np.array_equal(np.asarray(tr.reads), host)
+        assert int(host.sum()) == len(indices)
+
+    def _replicated(self, k=4):
+        freq = _freq()
+        freq[0] = freq.sum() * 2.0                  # one very hot row
+        cap = int(np.ceil(V / BANKS) * 2.0)
+        copies = choose_replication(freq, BANKS, k_max=k)
+        assert int(copies[0]) == k
+        rplan = replicated_partition(freq, BANKS, copies=copies,
+                                     capacity_rows=cap, k_max=k)
+        rng = np.random.default_rng(3)
+        table = (rng.standard_normal((V, D)) * 0.01).astype(np.float32)
+        return rplan, pack_replicated(table, rplan, rows_per_bank=cap)
+
+    @pytest.mark.parametrize("backend,interpret", BACKENDS)
+    def test_replicated_bit_match_and_k_split(self, backend, interpret):
+        k = 4
+        rplan, rt = self._replicated(k)
+        # every bag reads the SAME hot row: the hash routing must spread the
+        # traffic ~1/k across its k distinct copy banks
+        n = 400
+        idx = np.zeros((n, 1), np.int32)
+        _, tr = replicated_embedding_bag(rt, jnp.asarray(idx), None,
+                                         backend=backend,
+                                         interpret=interpret,
+                                         with_traffic=True)
+        reads = np.asarray(tr.reads)
+        host = host_replicated_bank_read_counts(
+            rplan.bank_of_copy, idx, BANKS, k_max=k)
+        assert np.array_equal(reads, host)
+        assert int(reads.sum()) == n
+        copy_banks = np.unique(rplan.bank_of_copy[0])
+        assert len(copy_banks) == k
+        shares = reads[copy_banks] / n
+        assert (shares > 1.0 / k - 0.10).all()
+        assert (shares < 1.0 / k + 0.10).all()
+
+    def test_replicated_failover_dead_bank_counts_zero(self):
+        k = 4
+        rplan, rt = self._replicated(k)
+        idx = _bags(seed=7)
+        live = np.ones(BANKS, bool)
+        live[int(rplan.bank_of_copy[0, 0])] = False
+        _, tr = replicated_embedding_bag(rt, jnp.asarray(idx), None,
+                                         backend="jnp",
+                                         bank_live=jnp.asarray(live),
+                                         with_traffic=True)
+        reads = np.asarray(tr.reads)
+        assert reads[~live] .sum() == 0            # dead bank served nothing
+        host = host_replicated_bank_read_counts(
+            rplan.bank_of_copy, idx, BANKS, k_max=k, bank_live=live)
+        assert np.array_equal(reads, host)
+        # the hot row has k live-bank copies left, so ITS reads all survive
+        hot = (idx == 0).sum()
+        assert reads.sum() >= hot
+
+
+# ---------------------------------------------------------------------------
+# zero-recompile: counters are pure jnp on jit arguments
+# ---------------------------------------------------------------------------
+
+class TestZeroRecompile:
+    def test_one_executable_across_swaps(self):
+        from repro.launch.serve import CompileProbe
+        plan_a, bt_a, table = _setup(seed=0)
+        cap = bt_a.rows_per_bank
+        # a different plan over the SAME capacity: a pure argument change
+        plan_b = non_uniform_partition(_freq(seed=11), BANKS,
+                                       capacity_rows=cap)
+        bt_b = pack_table(table, plan_b)
+        probe = CompileProbe(metrics=MetricRegistry())
+
+        @jax.jit
+        def serve(packed, remap_bank, remap_slot, idx):
+            bt = BankedTable(packed=packed, remap_bank=remap_bank,
+                             remap_slot=remap_slot, n_banks=BANKS,
+                             rows_per_bank=cap)
+            emb = banked_embedding_bag(bt, idx, None, backend="jnp")
+            return emb, bank_read_counts(remap_bank, idx, BANKS)
+
+        idx = jnp.asarray(_bags())
+        jax.block_until_ready(serve(bt_a.packed, bt_a.remap_bank,
+                                    bt_a.remap_slot, idx))
+        warm = probe.compiles
+        for plan, bt in ((plan_a, bt_a), (plan_b, bt_b), (plan_a, bt_a)):
+            _, reads = serve(bt.packed, bt.remap_bank, bt.remap_slot, idx)
+            assert np.array_equal(
+                np.asarray(reads),
+                host_bank_read_counts(plan.bank_of_row, np.asarray(idx),
+                                      BANKS))
+        assert probe.compiles - warm == 0
+        assert serve._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# host-side aggregation + export schema
+# ---------------------------------------------------------------------------
+
+class TestTrafficAccumulator:
+    def test_update_and_series(self):
+        reg = MetricRegistry()
+        acc = TrafficAccumulator(reg, BANKS, row_nbytes=D * 4)
+        share = acc.update(np.array([6, 2, 0, 0]))
+        assert share == pytest.approx(0.75)
+        acc.update(np.array([0, 0, 4, 4]))
+        assert reg.get("obs.bank_reads").values == [6.0, 2.0, 4.0, 4.0]
+        assert reg.get("obs.bank_bytes").values == [
+            v * D * 4 for v in (6.0, 2.0, 4.0, 4.0)]
+        assert reg.get("obs.bank_share").count == 2
+        assert acc.batches == 2
+        # explicit nbytes (the tiered lane) overrides the uniform width
+        acc.update(np.array([1, 0, 0, 0]), nbytes=np.array([7, 0, 0, 0]))
+        assert reg.get("obs.bank_bytes").values[0] == 6.0 * D * 4 + 7.0
+
+    def test_vector_snapshot_schema_stable_and_prometheus_labels(self):
+        import os
+        import sys
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "benchmarks"))
+        try:
+            from check_regression import key_paths
+        finally:
+            sys.path.pop(0)
+
+        def build(values):
+            reg = MetricRegistry()
+            acc = TrafficAccumulator(reg, BANKS, row_nbytes=D * 4)
+            acc.update(np.asarray(values))
+            return reg, snapshot_doc(reg, label="t")
+
+        reg_a, a = build([5, 0, 0, 1])
+        _, b = build([0, 9, 2, 0])
+        assert a != b
+        assert key_paths(a) == key_paths(b)         # values move, schema not
+        snap = a["metrics"]["obs.bank_reads"]
+        assert snap["type"] == "vector_counter"
+        assert snap["label"] == "bank"
+        assert snap["values"] == [[0, 5.0], [1, 0.0], [2, 0.0], [3, 1.0]]
+        text = prometheus_text(reg_a)
+        assert 'obs_bank_reads{bank="0"} 5.0' in text
+        assert 'obs_bank_reads{bank="3"} 1.0' in text
+        assert "# TYPE obs_bank_reads counter" in text
+
+
+# ---------------------------------------------------------------------------
+# SLO watchdog: deterministic windows, breaches, cooldown, planner feedback
+# ---------------------------------------------------------------------------
+
+class TestSLOWatchdog:
+    def test_no_evaluation_until_window_full(self):
+        wd = SLOWatchdog(SLOConfig(p99_us=10.0, window=4), n_banks=BANKS,
+                         dim=D)
+        reads = np.array([10, 0, 0, 0])
+        for b in range(3):
+            assert wd.observe(b, wall_us=1e6, reads=reads,
+                              batch_size=4) == []
+        assert wd.observe(3, wall_us=1e6, reads=reads,
+                          batch_size=4) == ["p99"]
+
+    def test_cooldown_rearms_exactly_one_window_later(self):
+        cfg = SLOConfig(p99_us=10.0, window=4)
+        wd = SLOWatchdog(cfg, n_banks=BANKS, dim=D)
+        reads = np.array([4, 4, 4, 4])
+        fired = [wd.observe(b, wall_us=1e6, reads=reads, batch_size=4)
+                 for b in range(12)]
+        assert [b for b, f in enumerate(fired) if f] == [3, 7, 11]
+        assert wd.breaches == 3
+
+    def test_hot_bank_and_divergence_checks(self):
+        reg = MetricRegistry()
+        # divergence is on the WHOLE Eq.-1 latency (fixed stages included),
+        # so a 4x share overload moves it ~12% at this scale — 0.1 catches it
+        wd = SLOWatchdog(SLOConfig(max_share=0.5, divergence=0.1, window=2),
+                         n_banks=BANKS, dim=D, metrics=reg)
+        wd.set_projection(1.0 / BANKS)              # the plan promised ideal
+        reads = np.array([20, 0, 0, 0])             # reality: one hot bank
+        wd.observe(0, wall_us=1.0, reads=reads, batch_size=4)
+        kinds = wd.observe(1, wall_us=1.0, reads=reads, batch_size=4)
+        assert set(kinds) == {"hot_bank", "divergence"}
+        assert set(kinds) <= set(CHECKS)
+        assert reg.get("obs.slo_breaches_total").value == 2.0
+        assert reg.get("obs.slo_breaches_hot_bank_total").value == 1.0
+        assert reg.get("obs.slo_breaches_divergence_total").value == 1.0
+        assert reg.get("obs.slo_realized_latency_us").value > \
+            reg.get("obs.slo_projected_latency_us").value
+
+    def test_on_breach_names_the_hot_bank(self):
+        events = []
+        wd = SLOWatchdog(SLOConfig(max_share=0.3, window=2), n_banks=BANKS,
+                         dim=D, on_breach=lambda k, info: events.append(
+                             (k, info)))
+        reads = np.array([0, 0, 9, 1])
+        wd.observe(0, wall_us=1.0, reads=reads, batch_size=4)
+        wd.observe(1, wall_us=1.0, reads=reads, batch_size=4)
+        (kind, info), = events
+        assert kind == "hot_bank"
+        assert info["bank"] == 2
+        assert info["batch"] == 1
+        assert np.array_equal(info["window_reads"], reads * 2)
+
+    def test_disabled_config_never_fires(self):
+        cfg = SLOConfig()
+        assert not cfg.enabled
+        assert SLOConfig(p99_us=1.0).enabled
+        wd = SLOWatchdog(cfg, n_banks=BANKS, dim=D)
+        for b in range(40):
+            assert wd.observe(b, wall_us=1e9,
+                              reads=np.array([99, 0, 0, 0]),
+                              batch_size=4) == []
+
+    def test_hot_bank_penalty_shape(self):
+        pen = hot_bank_penalty(np.array([30, 5, 5, 0]), BANKS)
+        assert pen.shape == (BANKS,)
+        assert pen[0] == pytest.approx(30 / 40 * BANKS)
+        assert (pen[1:] == 1.0).all()
+        # balanced traffic floors at 1 everywhere (no fake penalties)
+        assert (hot_bank_penalty(np.array([1, 1, 1, 1]), BANKS) == 1.0).all()
+
+    def test_penalty_arms_early_drift_check(self):
+        from repro.workload import ReplanConfig, Replanner
+        reg = MetricRegistry()
+        cap = int(np.ceil(V / BANKS) * 1.25)
+        rp = Replanner(ReplanConfig.for_vocab(V, BANKS, capacity_rows=cap,
+                                              check_every=1000),
+                       V, init_freq=_freq(), metrics=reg)
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            rp.observe_rows(rng.integers(0, V, size=64))
+            rp.end_batch()
+        assert reg.get("replanner.drift_checks_total").value == 0.0
+        rp.apply_slo_penalty(hot_bank_penalty(np.array([9, 1, 1, 1]), BANKS))
+        assert reg.get("replanner.slo_penalties_total").value == 1.0
+        assert rp.bank_penalty[0] > 1.0
+        rp.observe_rows(rng.integers(0, V, size=64))
+        rp.end_batch()                              # off-cadence, but armed
+        assert reg.get("replanner.drift_checks_total").value == 1.0
+        rp.observe_rows(rng.integers(0, V, size=64))
+        rp.end_batch()                              # disarmed again
+        assert reg.get("replanner.drift_checks_total").value == 1.0
